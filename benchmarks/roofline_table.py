@@ -1,0 +1,80 @@
+"""Roofline table generator (deliverable g): reads the dry-run records and
+emits the per-(arch x shape x mesh) three-term table as markdown + CSV rows
+for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import List
+
+RESULTS = Path(os.environ.get("REPRO_RESULTS_DIR", "results/dryrun"))
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    if x >= 1e-6:
+        return f"{x * 1e6:.1f}us"
+    return f"{x * 1e9:.1f}ns"
+
+
+def load_records(mesh: str = "pod1x16x16"):
+    recs = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def markdown_table(mesh: str = "pod1x16x16") -> str:
+    recs = load_records(mesh)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | bound step | "
+        "MODEL/HLO | roofline frac | mem/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | {r['dominant']} | "
+            f"{fmt_s(r['step_time_overlap_s'])} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['bytes_per_device_estimate'] / 2**30:.2f}GiB | "
+            f"{'Y' if r['fits_16gb'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def run(fast: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    if not RESULTS.exists():
+        return [Row("roofline_table/missing", 0.0, "run repro.launch.dryrun first")]
+    for mesh in ("pod1x16x16", "pod2x16x16"):
+        for r in load_records(mesh):
+            rows.append(Row(
+                f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                r["step_time_overlap_s"] * 1e6,
+                f"dominant={r['dominant']} compute={fmt_s(r['compute_s'])} "
+                f"memory={fmt_s(r['memory_s'])} collective={fmt_s(r['collective_s'])} "
+                f"useful={r['useful_flops_ratio']:.3f} frac={r['roofline_fraction']:.3f} "
+                f"fits16GiB={'Y' if r['fits_16gb'] else 'N'}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod1x16x16"
+    print(markdown_table(mesh))

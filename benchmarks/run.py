@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--fast`` trims iteration
+counts (used by CI); ``--only <prefix>`` filters benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import paper_table2, paper_table3, paper_roofline, paper_validation
+    from benchmarks import roofline_table, s4convd_e2e
+
+    modules = [
+        ("paper_table2", paper_table2),
+        ("paper_table3", paper_table3),
+        ("paper_roofline", paper_roofline),
+        ("paper_validation", paper_validation),
+        ("s4convd_e2e", s4convd_e2e),
+        ("roofline_table", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if args.only and not name.startswith(args.only):
+            continue
+        try:
+            for row in mod.run(fast=args.fast):
+                print(f"{row.name},{row.us_per_call:.1f},{row.derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the paper's operator study in 30 lines.
+
+Runs the depthwise convolution through every kernel variant (the paper's
+naive -> coalesced -> shared-memory -> warp-tiled ladder, TPU-adapted),
+validates them against the reference, and prints the counter-free traffic
+model that explains their ordering.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hw import TPU_V5E
+from repro.analysis.traffic import bwdk_traffic, fwd_traffic
+from repro.core import dwconv as dw
+from repro.core.variant import REGISTRY
+from repro.kernels import ref
+from repro.kernels.common import DWConvDims
+
+B, H, L, K = 8, 128, 48, 48  # the paper's operator shape (reduced batch)
+dims = DWConvDims(B=B, H=H, L=L, K=K)
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(B, H, L)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+dy = jnp.asarray(rng.normal(size=(B, H, L)), jnp.float32)
+
+y_ref = ref.dwconv_fwd_ref(x, k)
+print(f"operator: depthwise conv  (B,H,L,K)=({B},{H},{L},{K})")
+print(f"{'variant':8s} {'max|err|':>10s} {'fwd bytes (modeled)':>20s} {'bwd_k bytes':>14s}")
+for name, spec in REGISTRY.items():
+    y = dw.run_fwd(x, k, variant=name)
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    tf = fwd_traffic(dims, spec.fwd)
+    tb = bwdk_traffic(dims, spec.bwd_k)
+    print(f"{name:8s} {err:10.2e} {tf.bytes_moved:20.3e} {tb.bytes_moved:14.3e}"
+          + ("   <- redundant-traffic proxy (paper: N/A)" if not tf.reliable else ""))
+
+# differentiable end-to-end through the best (row / warp-tiled) variant
+loss = lambda x, k: jnp.sum(jnp.tanh(dw.dwconv(x, k, variant="row")))
+gx, gk = jax.grad(loss, argnums=(0, 1))(x, k)
+print(f"\ncustom_vjp: grad norms |gx|={float(jnp.linalg.norm(gx)):.3f} "
+      f"|gk|={float(jnp.linalg.norm(gk)):.3f}")
+print(f"roofline knee on {TPU_V5E.name}: {TPU_V5E.roofline_knee():.1f} FLOP/byte "
+      f"(operator AI ~{fwd_traffic(dims, 'row').arithmetic_intensity:.1f} -> memory-bound, as the paper finds)")

@@ -1,0 +1,17 @@
+from repro.analysis.hw import HARDWARE, P100, TPU_V5E, HardwareModel  # noqa: F401
+from repro.analysis.hlo import HLOAnalysis, analyze_hlo, shape_bytes  # noqa: F401
+from repro.analysis.roofline import (  # noqa: F401
+    RooflineReport,
+    dense_model_flops,
+    forward_model_flops,
+    roofline_from_compiled,
+)
+from repro.analysis.traffic import (  # noqa: F401
+    TrafficEstimate,
+    bwdk_traffic,
+    fwd_traffic,
+    path_flops,
+    variant_traffic_table,
+)
+from repro.analysis.bandwidth import BandwidthEstimate, effective_bandwidth  # noqa: F401
+from repro.analysis.timer import Timing, time_fn  # noqa: F401

@@ -1,0 +1,54 @@
+"""Counter-free effective-bandwidth estimation (paper §V-B3, Table III).
+
+    eff_bw  = modeled_bytes_moved / measured_runtime
+    util    = eff_bw / peak_hbm_bw
+
+The naive variant's redundant traffic cannot be modeled reliably without
+counters (cache behaviour is unobservable), so — as in the paper — it
+reports ``None`` ("N/A") rather than a misleading number.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.analysis.hw import HardwareModel
+from repro.analysis.traffic import TrafficEstimate
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthEstimate:
+    variant: str
+    path: str
+    runtime_s: float
+    bytes_moved: Optional[float]
+    eff_bw: Optional[float]          # bytes/s; None == paper's "N/A"
+    peak_util: Optional[float]
+    gflops: float
+    arithmetic_intensity: Optional[float]
+
+
+def effective_bandwidth(
+    variant: str,
+    path: str,
+    est: TrafficEstimate,
+    runtime_s: float,
+    hw: HardwareModel,
+) -> BandwidthEstimate:
+    if not est.reliable:
+        return BandwidthEstimate(
+            variant, path, runtime_s, None, None, None,
+            gflops=est.flops / runtime_s / 1e9,
+            arithmetic_intensity=None,
+        )
+    bw = est.bytes_moved / runtime_s
+    return BandwidthEstimate(
+        variant,
+        path,
+        runtime_s,
+        est.bytes_moved,
+        bw,
+        bw / hw.hbm_bw,
+        gflops=est.flops / runtime_s / 1e9,
+        arithmetic_intensity=est.arithmetic_intensity,
+    )

@@ -1,0 +1,440 @@
+"""Counter-free HLO-artifact analysis.
+
+Parses post-SPMD optimized HLO text (``compiled.as_text()``) — the per-device
+program — and recovers what a profiler would normally report:
+
+  * collective traffic: per-kind counts + operand bytes + ring-model wire
+    bytes, with while-loop trip counts (``known_trip_count``) propagated
+    through the call graph so collectives inside ``lax.scan`` bodies are
+    multiplied by their executed iteration count;
+  * an opcode histogram (fusion counts, remat-duplicate detection).
+
+Operand sizes are derived from *result* types, which CPU HLO always prints,
+using the exact per-kind relationship (e.g. an all-gather's operand is the
+result divided by the gather-group size).  This avoids resolving untyped
+operand references.
+
+All byte numbers are per-device (the SPMD module is the per-device program);
+multiply by chip count for global totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "u1": 0.125, "s1": 0.125, "f4e2m1fn": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_COLLECTIVE_RE = re.compile(
+    r"= (?:\([^=]*\)|\S+) (all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\("
+)
+_OPCODE_RE = re.compile(r"%[\w.\-]+ = (?:\([^=]*\)|\S+) ([a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Total bytes of an HLO type string (sums tuple elements)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: float
+    group_size: int
+    trip_mult: float
+    computation: str
+
+    @property
+    def operand_bytes(self) -> float:
+        """Exact operand size from the result size + kind semantics."""
+        if self.kind == "all-gather":
+            return self.result_bytes / max(self.group_size, 1)
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * max(self.group_size, 1)
+        return self.result_bytes  # all-reduce / all-to-all / collective-permute
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring-model bytes on the wire per participating device."""
+        g = max(self.group_size, 1)
+        frac = (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * self.operand_bytes * frac
+        if self.kind == "collective-permute":
+            return self.operand_bytes
+        return self.operand_bytes * frac
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    collectives: List[CollectiveOp]
+    op_histogram: Dict[str, int]
+    while_trip_counts: Dict[str, int]
+    num_partitions: int
+    # Analytic per-device cost with while-loop trip counts applied.
+    # (XLA's own cost_analysis() counts loop bodies ONCE — verified on CPU —
+    # so scanned-layer programs need this counter-free reconstruction.)
+    analytic_flops: float = 0.0
+    analytic_bytes: float = 0.0
+    flops_by_op: Optional[Dict[str, float]] = None
+    bytes_by_op: Optional[Dict[str, float]] = None
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(c.operand_bytes * c.trip_mult for c in self.collectives)
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(c.wire_bytes * c.trip_mult for c in self.collectives)
+
+    def bytes_by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.kind] += c.operand_bytes * c.trip_mult
+        return dict(out)
+
+    def counts_by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.kind] += c.trip_mult
+        return dict(out)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if current is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.endswith("{"):
+                current = m.group(2)
+                comps[current] = []
+        else:
+            if line == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _entry_name(text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = _GROUPS_SHAPE_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [s for s in m.group(1).split(",") if s.strip()]
+        return max(len(ids), 1)
+    return num_partitions
+
+
+# ---------------------------------------------------------------------------
+# analytic per-instruction cost model
+# ---------------------------------------------------------------------------
+
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "logistic",
+    "exponential-minus-one", "log-plus-one", "sine", "cosine", "erf",
+}
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "compare", "select", "and", "or", "xor", "clamp",
+}
+# Ops whose operands/results cross memory at run time (non-fused
+# boundaries).  Deliberately EXCLUDES ops XLA reliably fuses into consumers
+# (broadcast, iota, slice, pad, transpose, concatenate) — counting them
+# overstates HBM traffic.
+_MEMORY_OPS = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "reduce-window", "select-and-scatter", "rng",
+    "cholesky", "triangular-solve", "custom-call",
+}
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _result_type_of(line: str) -> str:
+    if " = " not in line:
+        return ""
+    rhs = line.split(" = ", 1)[1]
+    m = _OPCODE_RE.search(line)
+    if not m:
+        return rhs
+    idx = rhs.find(m.group(1) + "(")
+    return rhs[:idx] if idx > 0 else rhs
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _operand_names(line: str, opcode: str) -> List[str]:
+    paren_idx = line.find(opcode + "(")
+    if paren_idx < 0:
+        return []
+    operand_str = line[paren_idx + len(opcode) + 1 :].split(")")[0]
+    return _OPERANDS_RE.findall(operand_str)
+
+
+_PARAM_RE = re.compile(r"%([\w.\-]+) = (.+) parameter\((\d+)\)")
+
+
+@dataclasses.dataclass
+class FusionBodyInfo:
+    """Memory behaviour of a fusion body, for callsite byte accounting."""
+
+    param_slice_bytes: Dict[int, float]  # param idx -> bytes actually read
+    dus_update_bytes: Optional[float]    # in-place update write size, if any
+
+
+def _fusion_body_info(lines: List[str]) -> FusionBodyInfo:
+    params_by_name: Dict[str, int] = {}
+    for line in lines:
+        m = _PARAM_RE.search(line)
+        if m:
+            params_by_name[m.group(1)] = int(m.group(3))
+    slice_bytes: Dict[int, float] = {}
+    dus_update: Optional[float] = None
+    for line in lines:
+        if " dynamic-slice(" in line:
+            ops = _operand_names(line, "dynamic-slice")
+            if ops and ops[0] in params_by_name:
+                idx = params_by_name[ops[0]]
+                rb = shape_bytes(_result_type_of(line))
+                slice_bytes[idx] = max(slice_bytes.get(idx, 0.0), rb)
+        if " dynamic-update-slice(" in line:
+            ops = _operand_names(line, "dynamic-update-slice")
+            # update operand size; fall back to 0 (pure pass-through)
+            upd = 0.0
+            if len(ops) > 1 and ops[1] in params_by_name:
+                pass  # size of a param: resolved at callsite; approximate 0
+            dus_update = upd
+    return FusionBodyInfo(slice_bytes, dus_update)
+
+
+def _instruction_cost(line: str, opcode: str, defs: Dict[str, str],
+                      fusion_info: Optional[Dict[str, FusionBodyInfo]] = None):
+    """Returns (flops, bytes) for one instruction occurrence."""
+    result_type = _result_type_of(line)
+    result_elems = 1
+    for d in _shape_dims(result_type):
+        result_elems *= d
+    rb = shape_bytes(result_type)
+
+    flops = 0.0
+    if opcode == "dot":
+        cm = _CONTRACT_RE.search(line)
+        cdims = [int(x) for x in cm.group(1).split(",")] if cm and cm.group(1) else []
+        # contraction size from the lhs operand shape
+        paren = line.split(opcode + "(", 1)[1] if opcode + "(" in line else ""
+        ops = _OPERANDS_RE.findall(paren.split(")")[0])
+        csize = 1
+        if ops and ops[0] in defs:
+            dims = _shape_dims(defs[ops[0]])
+            for cd in cdims:
+                if cd < len(dims):
+                    csize *= dims[cd]
+        flops = 2.0 * result_elems * max(csize, 1)
+    elif opcode in _TRANSCENDENTAL:
+        flops = float(result_elems)
+    elif opcode in _ARITH:
+        flops = float(result_elems)
+    elif opcode in ("reduce", "reduce-window"):
+        # ~1 flop per input element
+        paren = line.split(opcode + "(", 1)[1] if opcode + "(" in line else ""
+        ops = _OPERANDS_RE.findall(paren.split(")")[0])
+        if ops and ops[0] in defs:
+            n = 1
+            for d in _shape_dims(defs[ops[0]]):
+                n *= d
+            flops = float(n)
+        else:
+            flops = float(result_elems)
+
+    bytes_ = 0.0
+    if opcode in _MEMORY_OPS:
+        ops = _operand_names(line, opcode)
+        if opcode == "dynamic-update-slice":
+            # In-place on real hardware: only the update slice moves
+            # (read slice + write slice); the buffer passes through aliased.
+            upd = shape_bytes(defs[ops[1]]) if len(ops) > 1 and ops[1] in defs else 0.0
+            bytes_ = 2.0 * upd
+        elif opcode == "fusion" and fusion_info is not None:
+            callee_m = re.search(r"calls=%?([\w.\-]+)", line)
+            info = fusion_info.get(callee_m.group(1)) if callee_m else None
+            read = 0.0
+            for idx, n in enumerate(ops):
+                full = shape_bytes(defs[n]) if n in defs else 0.0
+                if info is not None and idx in info.param_slice_bytes:
+                    # body only dynamic-slices this operand: count the slice
+                    read += min(full, info.param_slice_bytes[idx])
+                else:
+                    read += full
+            if info is not None and info.dus_update_bytes is not None:
+                # in-place update fusion: write = slice, pass-through aliased
+                biggest = max((shape_bytes(defs[n]) for n in ops if n in defs),
+                              default=0.0)
+                read = max(read - biggest, 0.0)
+                bytes_ = read + max(rb - biggest, 0.0)
+            else:
+                bytes_ = rb + read
+        else:
+            op_bytes = [shape_bytes(defs[n]) for n in ops if n in defs]
+            bytes_ = rb + sum(op_bytes)
+    return flops, bytes_
+
+
+def analyze_hlo(text: str, num_partitions: int = 1) -> HLOAnalysis:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+
+    # --- call-graph edges with multipliers (while bodies x trip count) -----
+    edges: Dict[str, List[tuple]] = defaultdict(list)  # caller -> [(callee, mult)]
+    trip_counts: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            is_while = " while(" in line
+            tm = _TRIP_RE.search(line) if is_while else None
+            trip = float(tm.group(1)) if tm else 1.0
+            for kw, callee in re.findall(r"(calls|to_apply|body|condition)=%?([\w.\-]+)", line):
+                mult = trip if (is_while and kw in ("body", "condition")) else 1.0
+                edges[name].append((callee, mult))
+                if is_while and kw == "body" and tm:
+                    trip_counts[callee] = int(tm.group(1))
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for callee in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    edges[name].append((callee, 1.0))
+
+    # --- propagate execution multipliers from the entry computation -------
+    # Multiplier of a computation = max over call paths of the product of
+    # trip counts along the path (max: avoids double-counting shared callees
+    # referenced from several call sites of the same dynamic nesting).
+    mults: Dict[str, float] = defaultdict(float)
+    if entry and entry in comps:
+        stack = [(entry, 1.0, 0)]
+        while stack:
+            node, m, depth = stack.pop()
+            if depth > 32 or m <= mults.get(node, 0.0):
+                continue  # already reached with an equal/larger multiplier
+            mults[node] = m
+            for callee, em in edges.get(node, ()):
+                if callee in comps:
+                    stack.append((callee, m * em, depth + 1))
+    else:
+        for name in comps:
+            mults[name] = 1.0
+
+    # --- classify computations (fusion bodies vs control vs reducers) ------
+    fusion_bodies, reducers = set(), set()
+    for name, lines in comps.items():
+        for line in lines:
+            for callee in re.findall(r"calls=%?([\w.\-]+)", line):
+                fusion_bodies.add(callee)
+            for callee in re.findall(r"to_apply=%?([\w.\-]+)", line):
+                reducers.add(callee)
+    fusion_bodies -= reducers or set()
+
+    # --- per-computation definition maps (instr name -> result type) -------
+    defs_by_comp: Dict[str, Dict[str, str]] = {}
+    for name, lines in comps.items():
+        d: Dict[str, str] = {}
+        for line in lines:
+            if " = " in line and line.startswith(("%", "ROOT")):
+                lhs = line.lstrip("ROOT ").split(" = ", 1)
+                iname = lhs[0].strip().lstrip("%")
+                d[iname] = _result_type_of(line)
+        defs_by_comp[name] = d
+    fusion_info = {name: _fusion_body_info(lines) for name, lines in comps.items()
+                   if name in fusion_bodies}
+    # Fusions that only slice/update big buffers must not count them fully.
+    fusion_info = {k: v for k, v in fusion_info.items()
+                   if v.param_slice_bytes or v.dus_update_bytes is not None}
+
+    # --- collect collectives + opcode histogram + analytic cost ------------
+    collectives: List[CollectiveOp] = []
+    histogram: Dict[str, int] = defaultdict(int)
+    flops_by_op: Dict[str, float] = defaultdict(float)
+    bytes_by_op: Dict[str, float] = defaultdict(float)
+    for name, lines in comps.items():
+        cm = mults.get(name, 1.0) or 1.0
+        is_reducer = name in reducers
+        is_fusion_body = name in fusion_bodies
+        defs = defs_by_comp[name]
+        for line in lines:
+            om = _OPCODE_RE.search(line)
+            if om:
+                opcode = om.group(1)
+                histogram[opcode] += 1
+                if not is_reducer:
+                    fl, by = _instruction_cost(line, opcode, defs, fusion_info)
+                    if fl:
+                        flops_by_op[opcode] += fl * cm
+                    if by and not is_fusion_body:
+                        bytes_by_op[opcode] += by * cm
+            m = _COLLECTIVE_RE.search(line)
+            if not m:
+                continue
+            lhs = line.split(" = ", 1)
+            result_type = lhs[1].split("(", 1)[0] if "-start(" in line else lhs[1][: lhs[1].index(m.group(1))]
+            # For -start ops the printed result is a tuple (operand, result..):
+            # use half the tuple bytes as the result estimate.
+            rb = shape_bytes(result_type if result_type.strip() else lhs[1])
+            if m.group(2) == "-start":
+                rb /= 2.0
+            collectives.append(
+                CollectiveOp(
+                    kind=m.group(1),
+                    result_bytes=rb,
+                    group_size=_group_size(line, num_partitions),
+                    trip_mult=cm,
+                    computation=name,
+                )
+            )
+    return HLOAnalysis(
+        collectives=collectives,
+        op_histogram=dict(histogram),
+        while_trip_counts=trip_counts,
+        num_partitions=num_partitions,
+        analytic_flops=float(sum(flops_by_op.values())),
+        analytic_bytes=float(sum(bytes_by_op.values())),
+        flops_by_op=dict(flops_by_op),
+        bytes_by_op=dict(bytes_by_op),
+    )

@@ -1,0 +1,56 @@
+"""Hardware models for counter-free analysis.
+
+The paper's counter-free methodology replaces hardware counters with
+published peak numbers + analytical models.  We carry two targets:
+
+  * TPU_V5E — the deployment target of this framework (roofline terms for
+    the multi-pod dry-run use these constants, per the assignment brief).
+  * P100    — the paper's platform (used by the paper-faithful benchmark
+    tables so the reproduction is apples-to-apples with the paper's Fig. 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    peak_flops: float          # FLOP/s at the relevant precision
+    peak_flops_f32: float      # FLOP/s for f32 (VPU path on TPU)
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per ICI link (0 for single-device GPU)
+    hbm_bytes: float           # capacity per chip
+    vmem_bytes: float = 0.0    # on-chip staging memory (VMEM / smem per SM)
+
+    def roofline_knee(self, precision: str = "default") -> float:
+        """Arithmetic intensity (FLOP/byte) where compute roof meets memory roof."""
+        peak = self.peak_flops if precision == "default" else self.peak_flops_f32
+        return peak / self.hbm_bw
+
+
+# TPU v5e constants from the assignment brief: 197 TFLOP/s bf16 per chip,
+# 819 GB/s HBM, ~50 GB/s/link ICI, 16 GiB HBM, ~128 MiB VMEM.
+TPU_V5E = HardwareModel(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    peak_flops_f32=197e12 / 2,  # MXU fp32 path is ~half of bf16
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+# NVIDIA Tesla P100-PCIE-16GB (paper Table I + §III-G): 10.6 TFLOP/s fp32,
+# 732 GB/s HBM2, 16 GB; 64 KiB shared memory per SM.
+P100 = HardwareModel(
+    name="p100",
+    peak_flops=10.6e12,
+    peak_flops_f32=10.6e12,
+    hbm_bw=732e9,
+    ici_bw=0.0,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=64 * 2**10,
+)
+
+HARDWARE = {m.name: m for m in (TPU_V5E, P100)}

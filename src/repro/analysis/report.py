@@ -1,0 +1,67 @@
+"""Markdown/CSV emitters for the counter-free analysis workflow."""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis.roofline import RooflineReport
+
+
+def fmt_si(x: Optional[float], unit: str = "") -> str:
+    if x is None:
+        return "N/A"
+    ax = abs(x)
+    for div, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if ax >= div:
+            return f"{x / div:.2f}{suf}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    if x >= 1e-6:
+        return f"{x * 1e6:.1f}us"
+    return f"{x * 1e9:.1f}ns"
+
+
+def markdown_table(headers: Sequence[str], rows: Iterable[Sequence[str]]) -> str:
+    lines = ["| " + " | ".join(headers) + " |", "|" + "|".join(["---"] * len(headers)) + "|"]
+    for row in rows:
+        lines.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(lines)
+
+
+def roofline_markdown(reports: List[RooflineReport]) -> str:
+    headers = [
+        "cell", "chips", "compute", "memory", "collective", "dominant",
+        "bound step", "MODEL/HLO flops", "roofline frac", "peak mem/dev",
+    ]
+    rows = []
+    for r in reports:
+        rows.append(
+            [
+                r.label,
+                r.chips,
+                fmt_s(r.compute_s),
+                fmt_s(r.memory_s),
+                fmt_s(r.collective_s),
+                r.dominant,
+                fmt_s(r.step_time_overlap_s),
+                f"{r.useful_flops_ratio:.3f}",
+                f"{r.roofline_fraction:.3f}",
+                fmt_si(r.peak_memory_per_device, "B"),
+            ]
+        )
+    return markdown_table(headers, rows)
+
+
+def csv_line(fields: Sequence) -> str:
+    return ",".join(str(f) for f in fields)
+
+
+def dump_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)

@@ -1,0 +1,53 @@
+"""Event-style wall-clock timing (paper §III-F) — portable, counter-free.
+
+Mirrors the paper's protocol: explicit synchronization (block_until_ready is
+the CUDA-event analogue in JAX), warm-up iterations excluded, steady-state
+statistics over repeated runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    mean_s: float
+    median_s: float
+    min_s: float
+    std_s: float
+    samples: Sequence[float]
+
+    @property
+    def us(self) -> float:
+        return self.mean_s * 1e6
+
+    @property
+    def ms(self) -> float:
+        return self.mean_s * 1e3
+
+
+def _sync(x):
+    return jax.block_until_ready(x)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10, **kwargs) -> Timing:
+    """Steady-state timing of ``fn(*args, **kwargs)`` with explicit sync."""
+    for _ in range(warmup):
+        _sync(fn(*args, **kwargs))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _sync(fn(*args, **kwargs))
+        samples.append(time.perf_counter() - t0)
+    return Timing(
+        mean_s=statistics.fmean(samples),
+        median_s=statistics.median(samples),
+        min_s=min(samples),
+        std_s=statistics.pstdev(samples) if len(samples) > 1 else 0.0,
+        samples=tuple(samples),
+    )

@@ -1,0 +1,166 @@
+"""Fault-tolerant checkpointing.
+
+Design goals (assignment: checkpoint/restart, node failures, elastic):
+
+  * **atomic**: write to ``step_<n>.tmp/`` then rename — a crash mid-save
+    never corrupts the latest checkpoint;
+  * **mesh-independent**: arrays are saved as host numpy with their logical
+    param paths; a restart may load onto a *different* mesh/device count
+    (elastic re-mesh) because shardings are re-derived from the rule table
+    at load time, not stored;
+  * **complete**: params + optimizer state + data-iterator state + step +
+    RNG key, so restarts are bit-exact continuations;
+  * **async**: ``save_async`` hands the host copy to a writer thread so the
+    training loop is not blocked by filesystem latency;
+  * **keep-N** garbage collection.
+
+Format: one ``.npz`` per pytree (flattened with ``/``-joined paths) + a JSON
+manifest.  No external deps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}" if prefix else str(i)))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten_into(template: Any, flat: Dict[str, np.ndarray], prefix: str = "") -> Any:
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}/{k}" if prefix else str(k))
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        seq = [
+            _unflatten_into(v, flat, f"{prefix}/{i}" if prefix else str(i))
+            for i, v in enumerate(template)
+        ]
+        return type(template)(seq) if isinstance(template, tuple) else seq
+    return flat[prefix]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+    def _write(self, step: int, trees: Dict[str, Any], extra: Dict[str, Any]):
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        final = self.dir / f"step_{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for name, tree in trees.items():
+            flat = _flatten(tree)
+            np.savez(tmp / f"{name}.npz", **flat)
+        (tmp / "manifest.json").write_text(json.dumps(
+            {"step": step, "trees": sorted(trees), "extra": extra}, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    def save(self, step: int, *, params, opt_state=None, data_state=None,
+             rng=None, extra: Optional[Dict] = None) -> None:
+        trees = {"params": jax.device_get(params)}
+        if opt_state is not None:
+            trees["opt_state"] = jax.device_get(opt_state)
+        meta = dict(extra or {})
+        if data_state is not None:
+            meta["data_state"] = data_state
+        if rng is not None:
+            meta["rng"] = np.asarray(jax.device_get(rng)).tolist()
+        self._write(step, trees, meta)
+
+    def save_async(self, step: int, **kw) -> None:
+        """Snapshot to host synchronously, write in a background thread."""
+        self.wait()  # one in-flight save at a time
+        kw = {k: (jax.device_get(v) if k in ("params", "opt_state", "rng") and v is not None else v)
+              for k, v in kw.items()}
+
+        def work():
+            try:
+                self.save(step, **kw)
+            except BaseException as e:  # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise e
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        step: Optional[int] = None,
+        *,
+        params_template,
+        opt_state_template=None,
+        shardings=None,
+        opt_shardings=None,
+    ) -> Tuple[int, Any, Any, Dict]:
+        """Load a checkpoint.  ``shardings`` (same tree structure as params)
+        re-places arrays for the *current* mesh — elastic re-mesh on load."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+
+        def load_tree(name, template, shard_tree):
+            with np.load(d / f"{name}.npz") as z:
+                flat = {k: z[k] for k in z.files}
+            tree = _unflatten_into(template, flat)
+            if shard_tree is not None:
+                tree = jax.tree.map(
+                    lambda a, s: jax.device_put(a, s), tree, shard_tree)
+            return tree
+
+        params = load_tree("params", params_template, shardings)
+        opt_state = None
+        if opt_state_template is not None and (d / "opt_state.npz").exists():
+            opt_state = load_tree("opt_state", opt_state_template, opt_shardings)
+        return step, params, opt_state, manifest.get("extra", {})

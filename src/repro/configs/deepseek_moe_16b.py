@@ -1,0 +1,29 @@
+"""deepseek-moe-16b [moe]: 28L, d=2048, 16H, ff=1408/expert, 2 shared + 64
+routed top-6 (fine-grained), dense first layer (ff=10944), vocab=102400.
+[arXiv:2401.06066]"""
+import dataclasses
+
+from repro.models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_ff=1408,
+    vocab=102400,
+    head_dim=128,
+    rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, capacity_factor=1.25,
+                  group_size=512, dense_first_layer=True, dense_ff=10944),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=64, n_heads=4, n_kv=4, d_ff=32, vocab=256,
+    head_dim=16,
+    moe=MoEConfig(n_experts=8, top_k=2, n_shared=1, capacity_factor=1.5,
+                  group_size=16, dense_first_layer=True, dense_ff=128),
+    compute_dtype="float32",
+)

@@ -1,0 +1,30 @@
+"""gemma3-27b [dense]: 62L, d=5376, 32H (GQA kv=16), ff=21504,
+vocab=262144, 5:1 local:global interleave (window 1024), dual RoPE theta,
+QK-norm, tied embeddings.  [hf:google/gemma-3-*]"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv=16,
+    d_ff=21504,
+    vocab=262144,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=10_000.0,          # local layers
+    rope_theta_global=1_000_000.0,
+    window=1024,
+    local_global_pattern=5,       # 5 local : 1 global
+    tie_embeddings=True,
+    act="gelu_tanh",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=6, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+    head_dim=16, window=8, local_global_pattern=2, compute_dtype="float32",
+)

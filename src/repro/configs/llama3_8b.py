@@ -1,0 +1,23 @@
+"""llama3-8b [dense]: 32L, d=4096, 32H (GQA kv=8), ff=14336, vocab=128256.
+[arXiv:2407.21783]"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=14336,
+    vocab=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=160, vocab=256,
+    head_dim=16, compute_dtype="float32",
+)

@@ -1,0 +1,27 @@
+"""llama-3.2-vision-11b [vlm]: 40L (32 self + 8 gated cross-attn, one per
+5-layer superblock), d=4096, 32H (GQA kv=8), ff=14336, vocab=128256; stub
+vision tower provides precomputed patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision]"""
+import dataclasses
+
+from repro.models.config import ArchConfig, VLMConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=14336,
+    vocab=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    vlm=VLMConfig(cross_every=5, n_img_tokens=1600),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+    head_dim=16, vlm=VLMConfig(cross_every=2, n_img_tokens=8),
+    compute_dtype="float32",
+)

@@ -1,0 +1,27 @@
+"""olmoe-1b-7b [moe]: 16L, d=2048, 16H, ff=1024/expert, 64 experts top-8,
+vocab=50304, QK-norm.  [arXiv:2409.02060]"""
+import dataclasses
+
+from repro.models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_ff=1024,
+    vocab=50304,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=64, top_k=8, capacity_factor=1.25, group_size=512),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=32, vocab=256,
+    head_dim=16,
+    moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.5, group_size=16),
+    compute_dtype="float32",
+)

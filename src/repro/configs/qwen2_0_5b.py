@@ -1,0 +1,25 @@
+"""qwen2-0.5b [dense]: 24L, d=896, 14H (GQA kv=2), ff=4864, vocab=151936,
+QKV bias, tied embeddings.  [arXiv:2407.10671]"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv=2,
+    d_ff=4864,
+    vocab=151936,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=56, n_heads=7, n_kv=1, d_ff=128, vocab=256,
+    head_dim=8, compute_dtype="float32",
+)

@@ -1,0 +1,33 @@
+"""recurrentgemma-2b [hybrid]: 26L (8 x (rec,rec,attn) + 2 rec tail),
+d=2560, 10H MQA (kv=1, head_dim=256), ff=7680 GeGLU, RG-LRU width 2560,
+local attention window 2048, vocab=256000.  [arXiv:2402.19427]
+
+The temporal conv1d in each recurrent block routes through the paper's
+kernel (``rglru.conv_variant``)."""
+import dataclasses
+
+from repro.models.config import ArchConfig, RGLRUConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv=1,
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    act="gelu",
+    rglru=RGLRUConfig(lru_width=2560, d_conv=4, attn_window=2048,
+                      conv_variant="xla"),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=5, d_model=64, n_heads=4, n_kv=1, d_ff=128, vocab=256,
+    head_dim=16,
+    rglru=RGLRUConfig(lru_width=64, d_conv=4, attn_window=16, conv_variant="xla"),
+    compute_dtype="float32",
+)

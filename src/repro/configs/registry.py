@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+
+_MODULES: Dict[str, str] = {
+    "whisper-base": "repro.configs.whisper_base",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise ValueError(f"unknown arch {name!r}; known: {list_archs()}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shape_cells_for(cfg: ArchConfig) -> List[str]:
+    """Assigned cells for an arch, with the mandated skips:
+    long_500k only for sub-quadratic archs (DESIGN.md §5)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,24 @@
+"""smollm-135m [dense]: 30L, d=576, 9H (GQA kv=3), ff=1536, vocab=49152,
+llama-arch small, tied embeddings.  [hf:HuggingFaceTB/SmolLM-135M]"""
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv=3,
+    d_ff=1536,
+    vocab=49152,
+    head_dim=64,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=48, n_heads=3, n_kv=1, d_ff=96, vocab=256,
+    head_dim=16, compute_dtype="float32",
+)

@@ -1,0 +1,26 @@
+"""whisper-base [audio]: 6L enc + 6L dec, d=512, 8H MHA, ff=2048,
+vocab=51865.  Enc-dec with stub conv frontend.  [arXiv:2212.04356]"""
+import dataclasses
+
+from repro.models.config import ArchConfig, EncDecConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,                 # decoder layers
+    d_model=512,
+    n_heads=8,
+    n_kv=8,
+    d_ff=2048,
+    vocab=51865,
+    head_dim=64,
+    norm="layer",
+    act="gelu",
+    encdec=EncDecConfig(n_enc_layers=6, enc_frames=1500),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128, vocab=128,
+    head_dim=16, encdec=EncDecConfig(n_enc_layers=2, enc_frames=32, max_positions=128),
+    compute_dtype="float32",
+)

@@ -1,0 +1,92 @@
+"""Public depthwise-convolution operator with execution-path-aware dispatch.
+
+``dwconv(x, k, padding=..., variant=...)`` is differentiable; its custom VJP
+routes each execution path to the selected kernel implementation so that the
+paper's controlled study — same operator, same model, different kernels — is
+a one-argument switch anywhere in the framework.
+
+  variant='xla'   : pure-jnp (SPMD-friendly; the default inside models)
+  variant='row' / 'block' / 'lane' / 'naive' : Pallas TPU kernels
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.variant import get_variant
+from repro.kernels import ops, ref
+from repro.kernels.common import Padding
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _dwconv(x, k, padding: Padding, variant: str, opts: ops.KernelOptions):
+    spec = get_variant(variant)
+    if spec.fwd == "xla":
+        return ref.dwconv_fwd_ref(x, k, padding)
+    return ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts)
+
+
+def _dwconv_fwd_rule(x, k, padding, variant, opts):
+    return _dwconv(x, k, padding, variant, opts), (x, k)
+
+
+def _dwconv_bwd_rule(padding, variant, opts, res, dy):
+    x, k = res
+    spec = get_variant(variant)
+    K = k.shape[-1]
+    if spec.bwd_in == "xla":
+        dx = ref.dwconv_bwd_input_ref(dy, k, padding)
+    else:
+        dx = ops.dwconv_bwd_input_op(dy, k, padding, spec.bwd_in, opts)
+    if spec.bwd_k == "xla":
+        dk = ref.dwconv_bwd_kernel_ref(x, dy, K, padding)
+    else:
+        dk = ops.dwconv_bwd_kernel_op(x, dy, K, padding, spec.bwd_k, opts)
+    return dx.astype(x.dtype), dk.astype(k.dtype)
+
+
+_dwconv.defvjp(_dwconv_fwd_rule, _dwconv_bwd_rule)
+
+
+def dwconv(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    padding: Padding = "same",
+    variant: str = "xla",
+    opts: Optional[ops.KernelOptions] = None,
+) -> jnp.ndarray:
+    """Depthwise 1-D convolution, y[b,h,t] = sum_j x_pad[b,h,t+j] k[h,j].
+
+    x: (B, H, L); k: (H, K).  ``padding='same'`` is the paper's convention;
+    ``padding='causal'`` is the Mamba/RG-LRU short-filter convention.
+    """
+    if x.ndim != 3 or k.ndim != 2 or x.shape[1] != k.shape[0]:
+        raise ValueError(f"bad shapes x={x.shape} k={k.shape}")
+    return _dwconv(x, k, padding, variant, opts or ops.DEFAULT_OPTS)
+
+
+# Convenience aliases used by the operator-study benchmarks: run a single
+# execution path under a named variant without autodiff plumbing.
+def run_fwd(x, k, padding="same", variant="row", opts=ops.DEFAULT_OPTS):
+    spec = get_variant(variant)
+    if spec.fwd == "xla":
+        return ref.dwconv_fwd_ref(x, k, padding)
+    return ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts)
+
+
+def run_bwd_input(dy, k, padding="same", variant="row", opts=ops.DEFAULT_OPTS):
+    spec = get_variant(variant)
+    if spec.bwd_in == "xla":
+        return ref.dwconv_bwd_input_ref(dy, k, padding)
+    return ops.dwconv_bwd_input_op(dy, k, padding, spec.bwd_in, opts)
+
+
+def run_bwd_kernel(x, dy, K, padding="same", variant="row", opts=ops.DEFAULT_OPTS):
+    spec = get_variant(variant)
+    if spec.bwd_k == "xla":
+        return ref.dwconv_bwd_kernel_ref(x, dy, K, padding)
+    return ops.dwconv_bwd_kernel_op(x, dy, K, padding, spec.bwd_k, opts)

@@ -1,0 +1,59 @@
+"""Kernel-variant registry — the paper's controlled study axis.
+
+Exactly one thing varies across a study run: which kernel implementation
+executes each of the three execution paths (FWD / BWD_in / BWD_k).  A
+``VariantSpec`` names the implementation for each path; the registry maps the
+paper's four CUDA variants (plus the XLA reference) to their TPU analogues.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    name: str
+    fwd: str        # one of ops.FWD_VARIANTS
+    bwd_in: str     # same kernel family as fwd (flipped filter)
+    bwd_k: str      # one of ops.BWDK_VARIANTS
+    description: str = ""
+
+
+REGISTRY: Dict[str, VariantSpec] = {
+    s.name: s
+    for s in [
+        VariantSpec(
+            "naive", "naive", "naive", "naive",
+            "per-tap unaligned DMAs, no on-chip reuse (CUDA naive baseline)",
+        ),
+        VariantSpec(
+            "lane", "lane", "lane", "naive",
+            "per-tap 128-lane-aligned DMAs (global-memory-coalescing analogue); "
+            "BWD_k keeps the naive reduction, as in the paper's GMC stage the "
+            "reduction is restructured separately",
+        ),
+        VariantSpec(
+            "block", "block", "block", "twostage",
+            "BlockSpec halo-tile VMEM staging + two-stage HBM-partials "
+            "reduction (shared-memory cache-blocking analogue)",
+        ),
+        VariantSpec(
+            "row", "row", "row", "accum",
+            "full-row VMEM staging + sequential-grid accumulation "
+            "(warp-tiled analogue)",
+        ),
+        VariantSpec(
+            "xla", "xla", "xla", "xla",
+            "pure-jnp reference lowered by XLA (the PyTorch-reference role: "
+            "numerical oracle + SPMD-friendly production path)",
+        ),
+    ]
+}
+
+
+def get_variant(name: str) -> VariantSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown variant {name!r}; known: {sorted(REGISTRY)}") from None

@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (MaxText-style), mesh-agnostic model code.
+
+Model code annotates tensors with *logical* axis names
+(``shard(x, "act_batch", "act_seq", "act_embed")``); the launcher activates a
+rule table mapping logical names to mesh axes for the current use case
+(train / serve / long-context serve).  With no active context the calls are
+identity, so single-device tests and benchmarks are untouched.
+
+Parameters get their sharding from per-leaf logical axes declared by each
+model's ``param_axes(cfg)`` tree, converted here to NamedShardings.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[str, Tuple[str, ...], None]
+Rules = Dict[str, MeshAxis]
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+# Training: DP over (pod, data); FSDP shards params' embed axis over data;
+# TP over model for heads / mlp / vocab / experts.
+TRAIN_RULES: Rules = {
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    # fallback for attention scores when n_heads does not divide |model|
+    # (qwen2 14H, smollm 9H, whisper 8H): shard the query-sequence dim
+    # instead — sequence-parallel attention (§Perf iteration D).
+    "act_attn_q": "model",
+    "act_kv_heads": None,
+    "act_vocab": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "act_groups": ("pod", "data"),
+    "act_capacity": None,
+    "act_state": None,
+    # params
+    "embed": "data",          # FSDP/ZeRO-3 shard of the residual axis
+    "heads": "model",
+    "kv_heads": None,          # replicated: n_kv may be < |model|
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "state": None,
+    "conv_k": None,
+    "scale": None,
+}
+
+# Serving (decode): KV cache sequence-sharded over model — GSPMD derives the
+# flash-decoding partial-softmax combine automatically.
+SERVE_RULES: Rules = dict(
+    TRAIN_RULES,
+    act_batch=("pod", "data"),
+    cache_batch=("pod", "data"),
+    cache_seq="model",
+    cache_kv_heads=None,
+    embed="data",             # 2D weight sharding (gathered just-in-time) —
+                              # required to fit 27B-class params next to a
+                              # 32k KV cache on 16 GiB chips
+)
+
+# Long-context single-sequence serving: batch too small to fill `data`,
+# so the cache sequence shards over BOTH data and model.
+LONG_SERVE_RULES: Rules = dict(
+    SERVE_RULES,
+    cache_seq=("data", "model"),
+    act_batch=None,
+)
+
+RULESETS = {"train": TRAIN_RULES, "serve": SERVE_RULES, "long_serve": LONG_SERVE_RULES}
+
+
+# ---------------------------------------------------------------------------
+# active context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Active:
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+
+_STATE = threading.local()
+
+
+def _active() -> _Active:
+    if not hasattr(_STATE, "v"):
+        _STATE.v = _Active()
+    return _STATE.v
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Union[str, Rules]):
+    """Activate a rule table for model code executed in this context."""
+    if isinstance(rules, str):
+        rules = RULESETS[rules]
+    prev = _active().mesh, _active().rules
+    _active().mesh, _active().rules = mesh, rules
+    try:
+        yield
+    finally:
+        _active().mesh, _active().rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Rules,
+                    mesh: Optional[Mesh] = None,
+                    shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the rule table.
+
+    With ``mesh`` + ``shape``, allocation is divisibility-aware: a mesh axis
+    that cannot divide its dimension is *not* consumed, so a later logical
+    axis may claim it (e.g. attention scores fall back from head sharding to
+    query-sequence sharding when n_heads does not divide |model|)."""
+    parts = []
+    used = set()
+    dims = list(shape) if shape is not None else [None] * len(axes)
+    for ax, dim in zip(axes, dims):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used
+                   and (mesh is None or a in mesh.shape))
+        if mesh is not None and dim is not None and ms:
+            size = 1
+            for a in ms:
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                ms = ()  # would not divide: leave free for later axes
+        used.update(ms)
+        parts.append(None if not ms else (ms[0] if len(ms) == 1 else ms))
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint under the active rules."""
+    st = _active()
+    if st.mesh is None or st.rules is None:
+        return x
+    # Trim/pad logical axes to the array rank (defensive for rank changes).
+    ax = tuple(axes)[: x.ndim]
+    ax = ax + (None,) * (x.ndim - len(ax))
+    spec = logical_to_spec(ax, st.rules, st.mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(st.mesh, spec))
+
+
+def spec_for_axes(axes: Sequence[Optional[str]], mesh: Mesh, rules: Union[str, Rules],
+                  shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    """NamedSharding for a parameter/input with the given logical axes."""
+    if isinstance(rules, str):
+        rules = RULESETS[rules]
+    spec = logical_to_spec(axes, rules, mesh, shape)
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh, rules: Union[str, Rules]):
+    """Map a tree of logical-axis tuples + matching ShapeDtypeStructs to
+    NamedShardings (used for in_shardings of the dry-run train_step)."""
+    return jax.tree.map(
+        lambda axes, sds: spec_for_axes(axes, mesh, rules, sds.shape),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(isinstance(a, (str, type(None))) for a in t),
+    )

@@ -1,0 +1,93 @@
+"""Shared helpers for the depthwise-convolution kernel family.
+
+Conventions (paper §IV-A):
+  x : (B, H, L)   input, row-major, temporal axis `L` is stride-1 (lane dim)
+  k : (H, K)      one 1-D filter per channel, contiguous per channel
+  y : (B, H, L)   output, same length as input ("same"-style padding)
+
+The forward operator is a *correlation* over a zero-padded input:
+
+    y[b, h, t] = sum_j  x_pad[b, h, t + j] * k[h, j]
+
+where ``x_pad`` is ``x`` padded with ``p_left`` zeros on the left and
+``p_right = K - 1 - p_left`` zeros on the right.  ``padding='same'`` uses
+``p_left = K // 2`` (the paper's convention, eq. (7)-(8); for even K the
+output is implicitly cropped to L, matching the paper's PyTorch reference).
+``padding='causal'`` uses ``p_left = K - 1`` (the Mamba/RG-LRU short-conv
+convention: the window for output t ends at t).
+
+Adjoint identities used by the backward kernels (derived from eq. (8); the
+paper's eq. (9) assumes odd K — we implement the exact adjoint, validated
+against ``jax.vjp``):
+
+    dx = dwconv_fwd(dy, flip(k), p_left' = K - 1 - p_left)
+    dk[h, j] = sum_{b, t} dy[b, h, t] * x_pad[b, h, t + j]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Tuple
+
+Padding = Literal["same", "causal"]
+
+
+def pad_widths(K: int, padding: Padding) -> Tuple[int, int]:
+    """(left, right) zero-padding for a kernel of length K."""
+    if padding == "same":
+        left = K // 2
+    elif padding == "causal":
+        left = K - 1
+    else:
+        raise ValueError(f"unknown padding {padding!r}")
+    return left, K - 1 - left
+
+
+def adjoint_pad_widths(K: int, padding: Padding) -> Tuple[int, int]:
+    """Padding for the input-gradient pass (flipped-kernel correlation)."""
+    left, right = pad_widths(K, padding)
+    return right, left
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# TPU tiling constants (v5e): VPU vector registers are (8, 128) for f32,
+# (16, 128) for bf16; the lane (minor) dimension is 128.
+LANE = 128
+SUBLANE_F32 = 8
+SUBLANE_BF16 = 16
+
+
+def sublane(dtype) -> int:
+    import jax.numpy as jnp
+
+    return SUBLANE_BF16 if dtype == jnp.bfloat16 else SUBLANE_F32
+
+
+@dataclasses.dataclass(frozen=True)
+class DWConvDims:
+    """Static problem dimensions shared by every kernel variant."""
+
+    B: int
+    H: int
+    L: int
+    K: int
+    padding: Padding = "same"
+
+    @property
+    def p_left(self) -> int:
+        return pad_widths(self.K, self.padding)[0]
+
+    @property
+    def p_right(self) -> int:
+        return pad_widths(self.K, self.padding)[1]
+
+    @property
+    def Lp(self) -> int:
+        """Padded temporal length (valid-correlation input length)."""
+        return self.L + self.K - 1

@@ -1,0 +1,203 @@
+"""Pallas TPU kernels — the reduction-dominated *weight-gradient* path.
+
+dk[h, j] = sum_{b, t} dy[b, h, t] * x_pad[b, h, t + j]          (paper eq. 10)
+
+This is the path the paper identifies as the persistent bottleneck: the
+reduction runs over the full (B x L) domain per coefficient.  TPU grids are
+*sequential* on a core, so the CUDA two-stage shuffle reduction maps to two
+idiomatic structures:
+
+  naive    : per (h-block) cell, every tap re-DMAs the full (Bc, Hb, L) slab
+             from HBM — K x redundant traffic, zero on-chip reuse across
+             taps (the one-thread-per-(h,j) CUDA baseline).
+  twostage : stage the slab in VMEM once per batch-chunk, compute *all* K
+             tap partials from it, write per-chunk partials to HBM, then a
+             second jnp reduction combines chunks — the paper's explicit
+             partial-sum + second-stage design (atomic-free).
+  accum    : same staging, but chunks accumulate in-place into a revisited
+             output block across the sequential grid — the TPU-native fusion
+             of both stages (no partials round-trip through HBM).
+
+Inputs arrive pre-padded from ops.py: xp (B, H, Wpad), dy (B, H, L).
+Output: (H, Kp) with Kp = round_up(K, LANE); ops.py slices to (H, K).
+Accumulation is f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANE, cdiv
+
+
+def _taps_from_slabs(x32: jnp.ndarray, dy32: jnp.ndarray, K: int, Kp: int) -> jnp.ndarray:
+    """(Bc, Hb, Wpad) x (Bc, Hb, L) -> per-tap partials (Hb, Kp), f32."""
+    L = dy32.shape[-1]
+    taps = [jnp.sum(dy32 * x32[:, :, j : j + L], axis=(0, 2)) for j in range(K)]
+    part = jnp.stack(taps, axis=-1)  # (Hb, K)
+    if Kp > K:
+        part = jnp.pad(part, ((0, 0), (0, Kp - K)))
+    return part
+
+
+# ---------------------------------------------------------------------------
+# accum variant: sequential-grid in-place accumulation (TPU-native two-stage)
+# ---------------------------------------------------------------------------
+
+
+def _accum_kernel(x_ref, dy_ref, dk_ref, *, K: int, Kp: int):
+    c = pl.program_id(1)  # batch-chunk index — innermost, sequential
+
+    @pl.when(c == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+
+    x32 = x_ref[...].astype(jnp.float32)
+    dy32 = dy_ref[...].astype(jnp.float32)
+    dk_ref[...] += _taps_from_slabs(x32, dy32, K, Kp).astype(dk_ref.dtype)
+
+
+def dwconv_bwdk_accum(
+    xp: jnp.ndarray,
+    dy: jnp.ndarray,
+    *,
+    K: int,
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Wpad = xp.shape
+    L = dy.shape[-1]
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    Kp = cdiv(K, LANE) * LANE
+    grid = (H // Hb, B // Bc)
+    out = pl.pallas_call(
+        functools.partial(_accum_kernel, K=K, Kp=Kp),
+        out_shape=jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bc, Hb, Wpad), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Bc, Hb, L), lambda h, c: (c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+        interpret=interpret,
+    )(xp, dy)
+    return out[:, :K]
+
+
+# ---------------------------------------------------------------------------
+# twostage variant: explicit HBM partials + second reduction stage
+# ---------------------------------------------------------------------------
+
+
+def _partials_kernel(x_ref, dy_ref, part_ref, *, K: int, Kp: int):
+    x32 = x_ref[...].astype(jnp.float32)
+    dy32 = dy_ref[...].astype(jnp.float32)
+    part_ref[0] = _taps_from_slabs(x32, dy32, K, Kp)
+
+
+def dwconv_bwdk_twostage(
+    xp: jnp.ndarray,
+    dy: jnp.ndarray,
+    *,
+    K: int,
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Wpad = xp.shape
+    L = dy.shape[-1]
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    Kp = cdiv(K, LANE) * LANE
+    nC = B // Bc
+    grid = (H // Hb, nC)
+    partials = pl.pallas_call(
+        functools.partial(_partials_kernel, K=K, Kp=Kp),
+        out_shape=jax.ShapeDtypeStruct((nC, H, Kp), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bc, Hb, Wpad), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Bc, Hb, L), lambda h, c: (c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, Kp), lambda h, c: (c, h, 0)),
+        interpret=interpret,
+    )(xp, dy)
+    return jnp.sum(partials, axis=0)[:, :K]  # second reduction stage
+
+
+# ---------------------------------------------------------------------------
+# naive variant: per-tap full re-read (no staging reuse across taps)
+# ---------------------------------------------------------------------------
+
+
+def _naive_bwdk_kernel(
+    x_hbm, dy_hbm, dk_ref, xs, dys, sem_x, sem_y, *, K: int, Kp: int, Hb: int, Bc: int
+):
+    h = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+
+    L = dys.shape[-1]
+    acc = jnp.zeros((Hb, Kp), jnp.float32)
+    for j in range(K):
+        # The naive structure: *both* operands re-DMA'd per tap.
+        cx = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(c * Bc, Bc), pl.ds(h * Hb, Hb), pl.ds(j, L)], xs, sem_x
+        )
+        cy = pltpu.make_async_copy(
+            dy_hbm.at[pl.ds(c * Bc, Bc), pl.ds(h * Hb, Hb), :], dys, sem_y
+        )
+        cx.start()
+        cy.start()
+        cx.wait()
+        cy.wait()
+        tap = jnp.sum(xs[...].astype(jnp.float32) * dys[...].astype(jnp.float32), axis=(0, 2))
+        acc = acc.at[:, j].set(tap)
+    dk_ref[...] += acc.astype(dk_ref.dtype)
+
+
+def dwconv_bwdk_naive(
+    xp: jnp.ndarray,
+    dy: jnp.ndarray,
+    *,
+    K: int,
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Wpad = xp.shape
+    L = dy.shape[-1]
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    Kp = cdiv(K, LANE) * LANE
+    grid = (H // Hb, B // Bc)
+    out = pl.pallas_call(
+        functools.partial(_naive_bwdk_kernel, K=K, Kp=Kp, Hb=Hb, Bc=Bc),
+        out_shape=jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Bc, Hb, L), xp.dtype),
+            pltpu.VMEM((Bc, Hb, L), dy.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(xp, dy)
+    return out[:, :K]

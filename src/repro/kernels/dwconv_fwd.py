@@ -1,0 +1,233 @@
+"""Pallas TPU kernels — depthwise-conv *forward* path, four variants.
+
+TPU adaptation of the paper's CUDA variants (DESIGN.md §2):
+
+  naive : per-tap, unaligned manual DMAs HBM->VMEM.  Each of the K taps
+          issues its own overlapping copy of the (Hb, Lt) window — the
+          analogue of each CUDA thread re-loading its convolution window
+          from global memory.  Redundant traffic ~ K x tile.
+  lane  : identical per-tap redundancy, but every DMA is widened to a
+          128-lane-aligned window — the analogue of warp-coalesced
+          transactions (alignment without data-movement reduction).
+  block : BlockSpec-pipelined VMEM staging with a neighbour-tile halo
+          (the same padded input is bound twice with a shifted index_map).
+          All K taps are computed from VMEM; the Pallas pipeline
+          double-buffers the tile DMAs — the analogue of shared-memory
+          cache blocking.  Traffic ~ 2 x tile.
+  row   : one grid cell per (b, h-block); the *entire* temporal row is
+          staged in VMEM once and every tap reads on-chip — the analogue
+          of the warp-tiled kernel (full working set on chip).
+          Traffic ~ 1 x row.
+
+All kernels consume an input that ``ops.py`` has already zero-padded to
+(B, H, Wpad) where ``Wpad >= Lout + K - 1`` and ``Lout = round_up(L, LANE)``,
+and produce (B, H, Lout); the wrapper slices back to L.  Accumulation is
+always f32 regardless of the input dtype.
+
+The *input-gradient* path reuses these kernels with a flipped filter and
+adjoint padding (see ``ops.dwconv_bwd_input``) — exactly the paper's
+observation that FWD and BWD_in share structure and optimization behaviour.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANE, cdiv, round_up
+
+
+# ---------------------------------------------------------------------------
+# row variant (warp-tiled analogue)
+# ---------------------------------------------------------------------------
+
+
+def _row_kernel(x_ref, k_ref, y_ref, *, K: int, Lout: int):
+    full = x_ref[0].astype(jnp.float32)  # (Hb, Wpad) staged once in VMEM
+    kv = k_ref[...].astype(jnp.float32)  # (Hb, Kp)
+    acc = jnp.zeros(y_ref.shape[1:], jnp.float32)  # (Hb, Lout)
+    for j in range(K):  # static unroll: K fused multiply-adds from VMEM
+        acc = acc + full[:, j : j + Lout] * kv[:, j][:, None]
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def dwconv_fwd_row(
+    xp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    block_h: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full-row staging.  xp: (B, H, Wpad), kp: (H, Kp) -> (B, H, Lout)."""
+    B, H, Wpad = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    assert H % Hb == 0, (H, Hb)
+    grid = (B, H // Hb)
+    return pl.pallas_call(
+        functools.partial(_row_kernel, K=K, Lout=Lout),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lout), xp.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hb, Wpad), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((Hb, Kp), lambda b, h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, Lout), lambda b, h: (b, h, 0)),
+        interpret=interpret,
+    )(xp, kp)
+
+
+# ---------------------------------------------------------------------------
+# block variant (shared-memory cache-blocking analogue)
+# ---------------------------------------------------------------------------
+
+
+def _block_kernel(xc_ref, xn_ref, k_ref, y_ref, *, K: int, Lt: int):
+    cur = xc_ref[0].astype(jnp.float32)  # (Hb, Lt) current tile
+    nxt = xn_ref[0].astype(jnp.float32)  # (Hb, Lt) halo tile
+    full = jnp.concatenate([cur, nxt], axis=-1)  # extended tile, TPB + halo
+    kv = k_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(y_ref.shape[1:], jnp.float32)
+    for j in range(K):
+        acc = acc + full[:, j : j + Lt] * kv[:, j][:, None]
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def dwconv_fwd_block(
+    xp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    block_h: int = 8,
+    block_t: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Halo-tile staging.  Requires Wpad >= (nT + 1) * Lt (ops.py pads)."""
+    B, H, Wpad = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    Lt = min(block_t, Lout)
+    assert Lt >= K - 1, f"halo {K - 1} must fit a single neighbour tile {Lt}"
+    nT = cdiv(Lout, Lt)
+    assert Wpad >= (nT + 1) * Lt, (Wpad, nT, Lt)
+    grid = (B, H // Hb, nT)
+    return pl.pallas_call(
+        functools.partial(_block_kernel, K=K, Lt=Lt),
+        out_shape=jax.ShapeDtypeStruct((B, H, nT * Lt), xp.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i + 1)),
+            pl.BlockSpec((Hb, Kp), lambda b, h, i: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
+        interpret=interpret,
+    )(xp, xp, kp)[:, :, :Lout]
+
+
+# ---------------------------------------------------------------------------
+# naive + lane variants (manual-DMA, redundant per-tap traffic)
+# ---------------------------------------------------------------------------
+
+
+def _tapdma_kernel(
+    x_hbm,
+    k_ref,
+    y_ref,
+    scratch,
+    sem,
+    *,
+    K: int,
+    Lt: int,
+    Hb: int,
+    aligned: bool,
+):
+    """Per-tap DMA kernel.  ``aligned=False`` -> naive (K unaligned copies of
+    exactly the tap window); ``aligned=True`` -> lane (K copies widened to a
+    128-lane-aligned window).  Both move ~K x the tile from HBM — the point
+    is the *structure*: alignment alone does not remove redundancy.
+
+    ``Lt`` is a multiple of LANE, so the tile base ``i * Lt`` is always
+    lane-aligned and the aligned variant's in-scratch offset ``j % LANE`` is
+    a static Python int.
+    """
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    i = pl.program_id(2)
+    kv = k_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(y_ref.shape[1:], jnp.float32)
+    base = i * Lt
+    w = scratch.shape[-1]
+    for j in range(K):  # one DMA per tap — the redundant-traffic structure
+        if aligned:
+            start = base + (j // LANE) * LANE  # lane-aligned transaction
+            off = j % LANE  # static
+        else:
+            start = base + j  # unaligned transaction
+            off = 0
+        copy = pltpu.make_async_copy(
+            x_hbm.at[b, pl.ds(h * Hb, Hb), pl.ds(start, w)], scratch, sem
+        )
+        copy.start()
+        copy.wait()
+        win = scratch[:, off : off + Lt].astype(jnp.float32)
+        acc = acc + win * kv[:, j][:, None]
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def _dwconv_fwd_tapdma(
+    xp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    block_h: int,
+    block_t: int,
+    aligned: bool,
+    interpret: bool,
+) -> jnp.ndarray:
+    B, H, Wpad = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    Lt = min(block_t, Lout)
+    assert Lt % LANE == 0, (Lt, LANE)
+    nT = cdiv(Lout, Lt)
+    scratch_w = Lt + LANE if aligned else Lt
+    assert Wpad >= nT * Lt + K - 1 + (LANE if aligned else 0), (Wpad, nT, Lt, K)
+    grid = (B, H // Hb, nT)
+    return pl.pallas_call(
+        functools.partial(_tapdma_kernel, K=K, Lt=Lt, Hb=Hb, aligned=aligned),
+        out_shape=jax.ShapeDtypeStruct((B, H, nT * Lt), xp.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # stays in HBM; DMA'd per tap
+            pl.BlockSpec((Hb, Kp), lambda b, h, i: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
+        scratch_shapes=[
+            pltpu.VMEM((Hb, scratch_w), xp.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(xp, kp)[:, :, :Lout]
+
+
+def dwconv_fwd_naive(xp, kp, *, K, Lout, block_h=8, block_t=512, interpret=True):
+    return _dwconv_fwd_tapdma(
+        xp, kp, K=K, Lout=Lout, block_h=block_h, block_t=block_t,
+        aligned=False, interpret=interpret,
+    )
+
+
+def dwconv_fwd_lane(xp, kp, *, K, Lout, block_h=8, block_t=512, interpret=True):
+    return _dwconv_fwd_tapdma(
+        xp, kp, K=K, Lout=Lout, block_h=block_h, block_t=block_t,
+        aligned=True, interpret=interpret,
+    )

@@ -1,0 +1,182 @@
+"""jit-ready wrappers around the Pallas depthwise-conv kernels.
+
+These handle everything the kernels assume away: zero-padding to the
+convolution window, rounding every tiled dimension up to TPU-friendly
+multiples (lanes of 128, h-blocks, batch-chunks), variant dispatch, and
+slicing the outputs back to logical shapes.  They are the only supported
+entry points to ``dwconv_fwd.py`` / ``dwconv_bwdk.py``.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret mode elsewhere
+(this container is CPU-only, so tests/benches run the kernel bodies in
+interpret mode — the validation regime prescribed for this build).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dwconv_bwdk, dwconv_fwd
+from repro.kernels.common import LANE, Padding, adjoint_pad_widths, cdiv, pad_widths, round_up
+
+FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
+BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOptions:
+    """Static tiling knobs (hashable: used as a custom_vjp nondiff arg)."""
+
+    block_h: int = 8
+    block_t: int = 512
+    batch_chunk: int = 128
+    interpret: Optional[bool] = None
+
+    def resolved_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+DEFAULT_OPTS = KernelOptions()
+
+
+def _pad_channels(a: jnp.ndarray, H: int, Hb: int, axis: int) -> jnp.ndarray:
+    Hp = round_up(H, Hb)
+    if Hp == H:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, Hp - H)
+    return jnp.pad(a, widths)
+
+
+def _pad_kernel_lanes(k: jnp.ndarray, K: int) -> jnp.ndarray:
+    Kp = round_up(K, LANE)
+    return jnp.pad(k, ((0, 0), (0, Kp - K))) if Kp > K else k
+
+
+def _fwd_impl(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    p_left: int,
+    variant: str,
+    opts: KernelOptions,
+) -> jnp.ndarray:
+    B, H, L = x.shape
+    _, K = k.shape
+    interpret = opts.resolved_interpret()
+    Hb = min(opts.block_h, H)
+    Lout = round_up(L, LANE)
+    Lt = min(opts.block_t, Lout)
+    nT = cdiv(Lout, Lt)
+    # One padded buffer wide enough for every variant's window reads.
+    Wpad = max(
+        round_up(Lout + K - 1, LANE),
+        (nT + 1) * Lt,                       # block: neighbour halo tile
+        nT * Lt + K - 1 + LANE,              # lane: widened aligned windows
+    )
+    Wpad = round_up(Wpad, LANE)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (p_left, Wpad - L - p_left)))
+    xp = _pad_channels(xp, H, Hb, axis=1)
+    kp = _pad_channels(_pad_kernel_lanes(k, K), H, Hb, axis=0)
+
+    kw = dict(K=K, Lout=Lout, block_h=Hb, interpret=interpret)
+    if variant == "row":
+        y = dwconv_fwd.dwconv_fwd_row(xp, kp, **kw)
+    elif variant == "block":
+        y = dwconv_fwd.dwconv_fwd_block(xp, kp, block_t=Lt, **kw)
+    elif variant == "naive":
+        y = dwconv_fwd.dwconv_fwd_naive(xp, kp, block_t=Lt, **kw)
+    elif variant == "lane":
+        y = dwconv_fwd.dwconv_fwd_lane(xp, kp, block_t=Lt, **kw)
+    else:
+        raise ValueError(f"unknown fwd variant {variant!r}")
+    return y[:, :H, :L]
+
+
+def dwconv_fwd_op(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    padding: Padding = "same",
+    variant: str = "row",
+    opts: KernelOptions = DEFAULT_OPTS,
+) -> jnp.ndarray:
+    """y[b,h,t] = sum_j x_pad[b,h,t+j] k[h,j]."""
+    p_left, _ = pad_widths(k.shape[-1], padding)
+    return _fwd_impl(x, k, p_left, variant, opts)
+
+
+def dwconv_bwd_input_op(
+    dy: jnp.ndarray,
+    k: jnp.ndarray,
+    padding: Padding = "same",
+    variant: str = "row",
+    opts: KernelOptions = DEFAULT_OPTS,
+) -> jnp.ndarray:
+    """dx: flipped-filter correlation under adjoint padding (same kernels as
+    the forward path — the structural symmetry the paper exploits)."""
+    p_left, _ = adjoint_pad_widths(k.shape[-1], padding)
+    return _fwd_impl(dy, k[:, ::-1], p_left, variant, opts)
+
+
+def _bwdk_impl(
+    x: jnp.ndarray,
+    dy: jnp.ndarray,
+    K: int,
+    padding: Padding,
+    variant: str,
+    opts: KernelOptions,
+) -> jnp.ndarray:
+    B, H, L = x.shape
+    interpret = opts.resolved_interpret()
+    Hb = min(opts.block_h, H)
+    Bc = min(opts.batch_chunk, B)
+    p_left, _ = pad_widths(K, padding)
+    Lout = round_up(L, LANE)
+    Wpad = round_up(Lout + K - 1, LANE)
+    Bp = round_up(B, Bc)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0), (p_left, Wpad - L - p_left)))
+    dyp = jnp.pad(dy, ((0, Bp - B), (0, 0), (0, Lout - L)))
+    xp = _pad_channels(xp, H, Hb, axis=1)
+    dyp = _pad_channels(dyp, H, Hb, axis=1)
+
+    kw = dict(K=K, block_h=Hb, batch_chunk=Bc, interpret=interpret)
+    if variant == "accum":
+        dk = dwconv_bwdk.dwconv_bwdk_accum(xp, dyp, **kw)
+    elif variant == "twostage":
+        dk = dwconv_bwdk.dwconv_bwdk_twostage(xp, dyp, **kw)
+    elif variant == "naive":
+        dk = dwconv_bwdk.dwconv_bwdk_naive(xp, dyp, **kw)
+    else:
+        raise ValueError(f"unknown bwdk variant {variant!r}")
+    return dk[:H]
+
+
+def dwconv_bwd_kernel_op(
+    x: jnp.ndarray,
+    dy: jnp.ndarray,
+    K: int,
+    padding: Padding = "same",
+    variant: str = "accum",
+    opts: KernelOptions = DEFAULT_OPTS,
+) -> jnp.ndarray:
+    """dk[h,j] = sum_{b,t} dy[b,h,t] x_pad[b,h,t+j].  Returns f32 (H, K)."""
+    return _bwdk_impl(x, dy, K, padding, variant, opts)
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))
+def dwconv_fwd_jit(x, k, padding="same", variant="row", opts=DEFAULT_OPTS):
+    return dwconv_fwd_op(x, k, padding, variant, opts)
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))
+def dwconv_bwd_input_jit(dy, k, padding="same", variant="row", opts=DEFAULT_OPTS):
+    return dwconv_bwd_input_op(dy, k, padding, variant, opts)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "padding", "variant", "opts"))
+def dwconv_bwd_kernel_jit(x, dy, K, padding="same", variant="accum", opts=DEFAULT_OPTS):
+    return dwconv_bwd_kernel_op(x, dy, K, padding, variant, opts)

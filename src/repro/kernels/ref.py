@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for every depthwise-convolution execution path.
+
+This is the numerical ground truth the Pallas kernels are validated against
+(the role the PyTorch grouped-conv1d reference plays in the paper, App. A).
+It is also the ``variant='xla'`` production implementation: it is written
+with plain jnp ops that XLA's SPMD partitioner shards cleanly, so the
+distributed model code paths use it by default.
+
+All functions operate on
+  x : (B, H, L) float32/bfloat16
+  k : (H, K)
+and return arrays of the matching path shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import Padding, adjoint_pad_widths, pad_widths
+
+
+def _padded(x: jnp.ndarray, K: int, padding: Padding) -> jnp.ndarray:
+    left, right = pad_widths(K, padding)
+    return jnp.pad(x, ((0, 0), (0, 0), (left, right)))
+
+
+def dwconv_fwd_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
+    """y[b,h,t] = sum_j x_pad[b,h,t+j] * k[h,j]  (paper eq. (8))."""
+    B, H, L = x.shape
+    Hk, K = k.shape
+    assert Hk == H, (Hk, H)
+    xp = _padded(x, K, padding)
+    # Unrolled tap sum: K static slices, each fused by XLA into a single
+    # elementwise loop; lowers without gathers and shards over (B, H).
+    acc = jnp.zeros((B, H, L), dtype=jnp.promote_types(x.dtype, jnp.float32))
+    for j in range(K):
+        acc = acc + xp[:, :, j : j + L].astype(acc.dtype) * k[:, j][None, :, None].astype(acc.dtype)
+    return acc.astype(x.dtype)
+
+
+def dwconv_bwd_input_ref(dy: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
+    """dx = correlation of dy with the flipped kernel under adjoint padding."""
+    B, H, L = dy.shape
+    Hk, K = k.shape
+    left, right = adjoint_pad_widths(K, padding)
+    dyp = jnp.pad(dy, ((0, 0), (0, 0), (left, right)))
+    kf = k[:, ::-1]
+    acc = jnp.zeros((B, H, L), dtype=jnp.promote_types(dy.dtype, jnp.float32))
+    for j in range(K):
+        acc = acc + dyp[:, :, j : j + L].astype(acc.dtype) * kf[:, j][None, :, None].astype(acc.dtype)
+    return acc.astype(dy.dtype)
+
+
+def dwconv_bwd_kernel_ref(
+    x: jnp.ndarray, dy: jnp.ndarray, K: int, padding: Padding = "same"
+) -> jnp.ndarray:
+    """dk[h,j] = sum_{b,t} dy[b,h,t] * x_pad[b,h,t+j]  (paper eq. (10))."""
+    B, H, L = x.shape
+    xp = _padded(x, K, padding)
+    dy32 = dy.astype(jnp.float32)
+    taps = [
+        jnp.sum(dy32 * xp[:, :, j : j + L].astype(jnp.float32), axis=(0, 2)) for j in range(K)
+    ]
+    return jnp.stack(taps, axis=-1).astype(x.dtype)
+
+
+def dwconv_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
+    """Differentiable reference (autodiff gives the adjoints for free)."""
+    return dwconv_fwd_ref(x, k, padding)
+
+
+def dwconv_lax_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
+    """Independent second oracle via lax.conv_general_dilated with
+    feature_group_count=H (the cuDNN-style grouped convolution the paper's
+    PyTorch reference uses).  Used in tests to cross-check ``dwconv_fwd_ref``.
+    """
+    B, H, L = x.shape
+    _, K = k.shape
+    left, right = pad_widths(K, padding)
+    # conv_general_dilated computes cross-correlation (XLA convention) — no flip.
+    rhs = k.astype(x.dtype)[:, None, :]  # (H, 1, K)  O I W
+    out = jax.lax.conv_general_dilated(
+        x,
+        rhs,
+        window_strides=(1,),
+        padding=[(left, right)],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+        feature_group_count=H,
+    )
+    return out

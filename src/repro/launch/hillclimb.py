@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
+    )
+
+"""§Perf hillclimbing harness: re-lower a cell with a patched config /
+microbatch count / rule set and diff the roofline terms against the saved
+baseline record.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3-8b \\
+      --shape train_4k --tag chunked_attn --set attn_chunk_threshold=2048
+
+Each run appends a record to results/hillclimb/<arch>__<shape>__<tag>.json;
+the hypothesis -> change -> before -> after log lives in EXPERIMENTS.md §Perf.
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs.registry import get_config
+from repro.launch.dryrun import MICROBATCHES, lower_cell, make_dryrun_mesh, result_path
+
+OUT = Path(os.environ.get("REPRO_HILLCLIMB_DIR", "results/hillclimb"))
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    return v
+
+
+def apply_patch(cfg, assignments):
+    for a in assignments:  # sequential: later patches see earlier ones
+        key, val = a.split("=", 1)
+        val = parse_value(val)
+        if "." in key:  # nested sub-config, e.g. ssm.chunk=128
+            sub, leaf = key.split(".", 1)
+            subcfg = dataclasses.replace(getattr(cfg, sub), **{leaf: val})
+            cfg = dataclasses.replace(cfg, **{sub: subcfg})
+        else:
+            cfg = dataclasses.replace(cfg, **{key: val})
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod1x16x16")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[], help="cfg field=value")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--rules", default="")
+    args = ap.parse_args()
+
+    cfg = apply_patch(get_config(args.arch), args.set)
+    mesh = make_dryrun_mesh(multi_pod=args.mesh == "pod2x16x16")
+    rec = lower_cell(
+        args.arch, args.shape, mesh, args.mesh, cfg=cfg,
+        microbatches=args.microbatches or None,
+        rules=args.rules or None,
+    )
+    rec["tag"] = args.tag
+    rec["patch"] = args.set
+    OUT.mkdir(parents=True, exist_ok=True)
+    out = OUT / f"{args.arch}__{args.shape}__{args.tag}.json"
+    out.write_text(json.dumps(rec, indent=1, default=str))
+
+    base_p = result_path(args.arch, args.shape, args.mesh)
+    if base_p.exists():
+        base = json.loads(base_p.read_text())
+        print(f"\n=== {args.arch} x {args.shape} [{args.tag}] vs baseline ===")
+        for term in ("compute_s", "memory_s", "collective_s", "step_time_overlap_s",
+                     "useful_flops_ratio", "roofline_fraction"):
+            b, n = base[term], rec[term]
+            delta = (n - b) / b * 100 if b else float("nan")
+            print(f"  {term:22s} {b:12.4e} -> {n:12.4e}  ({delta:+.1f}%)")
+        print(f"  dominant: {base['dominant']} -> {rec['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

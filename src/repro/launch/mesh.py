@@ -1,0 +1,28 @@
+"""Production mesh construction (assignment §Multi-pod dry-run).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading pod axis (2 pods =
+    512 chips).  The ``pod`` axis carries only gradient all-reduces (DCN);
+    ``data``/``model`` collectives stay on ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/elastic restarts (e.g. (2,4) on 8 devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def describe(mesh) -> str:
+    return f"mesh{dict(mesh.shape)} on {mesh.devices.size} devices"

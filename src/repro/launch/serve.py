@@ -1,0 +1,82 @@
+"""Serving launcher: batched greedy decoding with a sharded KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \\
+      --batch 4 --prompt-len 16 --gen 8
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, list_archs
+from repro.distributed import sharding as shd
+from repro.distributed.stepfn import build_serve_step
+from repro.launch.mesh import make_mesh
+from repro.models.api import get_model, make_demo_batch
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = get_model(cfg)
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
+    else:
+        mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+
+    with mesh, shd.use_sharding(mesh, "serve"):
+        params = model.init(jax.random.PRNGKey(args.seed))
+        batch = make_demo_batch(cfg, args.batch, args.prompt_len)
+        cache = model.init_cache(args.batch, args.cache_len)
+        # enc-dec / vlm: precompute cross caches from the stub modality input
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            enc = encdec.encode(params, cfg, jnp.asarray(
+                np.random.default_rng(0).normal(
+                    size=(args.batch, cfg.encdec.enc_frames, cfg.d_model)), jnp.float32))
+            ck, cv = encdec.precompute_cross_cache(params, cfg, enc)
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        if cfg.family == "vlm":
+            from repro.models import vlm
+            ik, iv = vlm.precompute_img_cache(params, cfg, batch["img"])
+            cache["img_k"], cache["img_v"] = ik, iv
+
+        serve_step = jax.jit(build_serve_step(model), donate_argnums=(1,))
+        # prefill by teacher-forcing the prompt token by token (robust across
+        # families); production prefill path is exercised by the dry-run.
+        tok = batch["tokens"][:, :1]
+        t0 = time.time()
+        generated = []
+        for i in range(args.prompt_len - 1):
+            _, cache = serve_step(params, cache, {"tokens": batch["tokens"][:, i : i + 1]})
+        for _ in range(args.gen):
+            nxt, cache = serve_step(params, cache, {"tokens": tok})
+            tok = nxt[:, None]
+            generated.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+    gen = np.concatenate(generated, axis=1)
+    print(f"[serve] arch={cfg.name} batch={args.batch} generated {gen.shape[1]} tokens "
+          f"in {dt:.2f}s ({args.batch * gen.shape[1] / dt:.1f} tok/s)")
+    print("[serve] sample token ids:", gen[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

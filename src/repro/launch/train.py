@@ -1,0 +1,143 @@
+"""Production training launcher.
+
+Composes: arch config -> mesh -> sharded train_step (microbatched,
+optionally compressed gradients) -> synthetic LM pipeline -> heartbeat ->
+atomic/async checkpoints -> auto-resume.  Runs identically on 1 CPU device
+(smoke configs) and on a real pod slice; the elastic supervisor
+(``repro.launch.supervisor``) wraps this process on a cluster.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \\
+      --steps 20 --batch 8 --seq 32 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config, list_archs
+from repro.data.lm import LMStreamConfig, LMTokenStream
+from repro.distributed import sharding as shd
+from repro.distributed.stepfn import (
+    batch_shardings,
+    build_train_step,
+    opt_state_shardings,
+    params_shardings,
+)
+from repro.launch.mesh import make_mesh
+from repro.launch.supervisor import Heartbeat
+from repro.models.api import batch_axes, get_model
+from repro.models.config import ShapeCell
+from repro.train.optim import adamw, sgd_momentum
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd_momentum"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-dtype", default=None, choices=[None, "bfloat16", "float32"])
+    ap.add_argument("--mesh", default="", help="e.g. '2,4' => (data,model); default all devices on data")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--heartbeat", default="")
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="test hook: crash the process at this step")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model_axes = None
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("data", "model")[: len(shape)] if len(shape) == 2 else ("pod", "data", "model")
+        mesh = make_mesh(shape, axes)
+    else:
+        mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+
+    from repro.models.api import get_model
+
+    model = get_model(cfg)
+    opt = (adamw(lr=args.lr) if args.optimizer == "adamw"
+           else sgd_momentum(lr=args.lr))
+    step_fn = build_train_step(model, opt, microbatches=args.microbatches,
+                               grad_dtype=args.grad_dtype)
+
+    rules = "train"
+    hb = Heartbeat(args.heartbeat) if args.heartbeat else None
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    stream = LMTokenStream(LMStreamConfig(
+        vocab=cfg.vocab, batch_size=args.batch, seq_len=args.seq, seed=args.seed))
+
+    with mesh, shd.use_sharding(mesh, rules):
+        p_shard = params_shardings(model, mesh, rules)
+        o_shard = opt_state_shardings(model, opt, mesh, rules)
+        cell = ShapeCell("cli", args.seq, args.batch, "train")
+        start_step = 0
+        params = opt_state = None
+        if mgr is not None and mgr.latest_step() is not None:
+            tmpl_p = jax.tree.map(np.zeros_like, jax.tree.map(
+                lambda s: np.zeros(s.shape, s.dtype), model.init_shapes()))
+            tmpl_o = jax.eval_shape(opt.init, model.init_shapes())
+            tmpl_o = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), tmpl_o)
+            start_step, params, opt_state, extra = mgr.restore(
+                params_template=tmpl_p, opt_state_template=tmpl_o,
+                shardings=p_shard, opt_shardings=o_shard)
+            if "data_state" in extra:
+                stream.load_state_dict(extra["data_state"])
+            print(f"[train] resumed from step {start_step}", flush=True)
+        if params is None:
+            params = jax.jit(model.init, out_shardings=p_shard)(
+                jax.random.PRNGKey(args.seed))
+            opt_state = jax.jit(opt.init, out_shardings=o_shard)(params)
+
+        ba = {"tokens": ("act_batch", None), "labels": ("act_batch", None)}
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            if args.fail_at_step == step:
+                print(f"[train] simulated failure at step {step}", flush=True)
+                sys.exit(17)
+            batch_np = stream.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if hb is not None:
+                hb.beat(step)
+            if args.log_every and step % args.log_every == 0:
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"({(time.time() - t0):.1f}s)", flush=True)
+            if mgr is not None and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                mgr.save_async(step + 1, params=params, opt_state=opt_state,
+                               data_state=stream.state_dict())
+        if mgr is not None:
+            mgr.wait()
+            mgr.save(args.steps, params=params, opt_state=opt_state,
+                     data_state=stream.state_dict())
+        print(f"[train] done: first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}",
+              flush=True)
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

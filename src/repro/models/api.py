@@ -1,0 +1,120 @@
+"""Uniform model API over the architecture pool.
+
+``get_model(cfg)`` returns a ``Model`` whose members close over the family
+module.  ``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins
+for every model input of an assigned (arch x shape) cell — the dry-run
+contract (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, moe, ssm, transformer, vlm
+from repro.models.config import ArchConfig, ShapeCell
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    module: Any
+
+    def init(self, rng):
+        return self.module.init(rng, self.cfg)
+
+    def init_shapes(self):
+        """Param ShapeDtypeStructs without allocation (dry-run)."""
+        return jax.eval_shape(lambda r: self.module.init(r, self.cfg),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def param_axes(self):
+        return self.module.param_axes(self.cfg)
+
+    def loss(self, params, batch):
+        return self.module.loss_fn(params, self.cfg, batch)
+
+    def decode_step(self, params, cache, batch):
+        return self.module.decode_step(params, self.cfg, cache, batch["tokens"])
+
+    def init_cache(self, batch: int, cache_len: int):
+        return self.module.init_cache(self.cfg, batch, cache_len)
+
+    def cache_axes(self):
+        return self.module.cache_axes(self.cfg)
+
+    def n_params(self) -> int:
+        return self.module.n_params(self.cfg)
+
+    def n_active_params(self) -> int:
+        return self.module.n_active_params(self.cfg)
+
+    @property
+    def has_prefill(self) -> bool:
+        return hasattr(self.module, "prefill") or self.cfg.family in (
+            "dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, module=_FAMILIES[cfg.family])
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Train/prefill batch ShapeDtypeStructs for one cell."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    spec: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "labels": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    if cfg.family == "encdec":
+        # stub conv frontend: precomputed frame embeddings
+        spec["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        spec["img"] = jax.ShapeDtypeStruct((B, cfg.vlm.n_img_tokens, cfg.d_model), jnp.float32)
+    return spec
+
+
+def decode_batch_spec(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = cell.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_axes(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, tuple]:
+    axes = {"tokens": ("act_batch", None), "labels": ("act_batch", None)}
+    if cfg.family == "encdec":
+        axes["frames"] = ("act_batch", None, None)
+    if cfg.family == "vlm":
+        axes["img"] = ("act_batch", None, None)
+    return axes
+
+
+def make_demo_batch(cfg: ArchConfig, batch: int, seq: int, rng: Optional[jax.Array] = None):
+    """Concrete random batch for smoke tests/examples (small shapes only)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(k3, (batch, seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["img"] = jax.random.normal(k3, (batch, cfg.vlm.n_img_tokens, cfg.d_model), jnp.float32)
+    return out

@@ -1,0 +1,137 @@
+"""Architecture configuration schema for the assigned model pool.
+
+One dataclass covers all families; family-specific blocks are optional
+sub-configs.  Every ``src/repro/configs/<id>.py`` exports ``CONFIG`` (the
+exact public configuration) and ``SMOKE`` (a reduced same-family config for
+CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 8
+    n_shared: int = 0              # always-on shared experts (DeepSeekMoE)
+    capacity_factor: float = 1.25
+    group_size: int = 512          # dispatch group (tokens)
+    dense_first_layer: bool = False  # DeepSeekMoE: layer 0 is a dense MLP
+    dense_ff: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64             # SSD head size P
+    chunk: int = 256               # SSD chunk length
+    conv_variant: str = "xla"      # the paper's kernel in mamba's conv1d!
+    split_conv: bool = False       # conv x/B/C separately: keeps the x-conv
+                                   # shard-aligned (concat slices a model-
+                                   # sharded dim at non-boundary offsets)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 2560
+    d_conv: int = 4
+    block_pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+    attn_window: int = 2048
+    conv_variant: str = "xla"
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int = 6
+    enc_frames: int = 1500          # stub frontend output length for serving
+    max_positions: int = 32768      # learned decoder position table size
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    cross_every: int = 5            # 1 cross-attn layer per 5-layer superblock
+    n_img_tokens: int = 1024        # stub vision-tower output length
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_theta_global: float = 0.0   # gemma3: different theta on global layers
+    window: int = 0                  # 0 = full attention
+    local_global_pattern: int = 0    # gemma3: N local layers per 1 global
+    tie_embeddings: bool = False
+    act: str = "silu"
+    norm: str = "rms"                # rms | layer
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # family sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    # training-step shape knobs (overridden per input-shape cell)
+    microbatches: int = 1
+    remat: bool = True
+    attn_chunk_threshold: int = 8192  # use chunked attention at/above this seq
+
+    # -- capability flags used by the dry-run matrix ------------------------
+    @property
+    def supports_decode(self) -> bool:
+        return True  # all assigned archs have a decode path (enc-dec included)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM/hybrid/mostly-local attention)."""
+        return self.family in ("ssm", "hybrid") or self.local_global_pattern > 0
+
+    @property
+    def compute_dt(self):
+        import jax.numpy as jnp
+
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.compute_dtype]
+
+    @property
+    def param_dt(self):
+        import jax.numpy as jnp
+
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.param_dtype]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long_decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "long_decode"),
+}

@@ -1,0 +1,249 @@
+"""whisper-base backbone — encoder-decoder transformer.
+
+Per the assignment, the audio conv frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, S_enc, d_model) directly; the
+backbone (bidirectional encoder + causal decoder with cross attention) is
+implemented in full.  LayerNorm + non-gated GELU MLPs + learned absolute
+positions follow the Whisper architecture (arXiv:2212.04356).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.train.losses import softmax_cross_entropy
+
+
+def attn_dims(cfg: ArchConfig) -> L.AttnDims:
+    return L.AttnDims(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                      causal=False)
+
+
+def _init_ln(d):
+    return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+
+
+def _ln(p, x):
+    return L.layer_norm(x, p["scale"], p["bias"])
+
+
+def _init_enc_layer(rng, cfg: ArchConfig):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn": L.init_attention(k1, cfg.d_model, attn_dims(cfg)),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False),
+        "ln1": _init_ln(cfg.d_model),
+        "ln2": _init_ln(cfg.d_model),
+    }
+
+
+def _init_dec_layer(rng, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "self_attn": L.init_attention(k1, cfg.d_model, attn_dims(cfg)),
+        "cross_attn": L.init_attention(k2, cfg.d_model, attn_dims(cfg)),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False),
+        "ln1": _init_ln(cfg.d_model),
+        "ln2": _init_ln(cfg.d_model),
+        "ln3": _init_ln(cfg.d_model),
+    }
+
+
+def init(rng, cfg: ArchConfig):
+    n_enc = cfg.encdec.n_enc_layers
+    ks = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(ks[0], n_enc)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    params = {
+        "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model),        # decoder tokens
+        "dec_pos": jax.random.normal(ks[3], (cfg.encdec.max_positions, cfg.d_model)) * 0.01,
+        "enc_layers": jax.vmap(lambda r: _init_enc_layer(r, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda r: _init_dec_layer(r, cfg))(dec_keys),
+        "ln_enc": _init_ln(cfg.d_model),
+        "ln_dec": _init_ln(cfg.d_model),
+    }
+    return jax.tree.map(lambda x: x.astype(cfg.param_dt), params)
+
+
+def param_axes(cfg: ArchConfig):
+    ln = {"scale": ("embed",), "bias": ("embed",)}
+    attn_ax = L.attention_param_axes(attn_dims(cfg))
+    mlp_ax = L.mlp_param_axes(gated=False)
+    enc = {"attn": attn_ax, "mlp": mlp_ax, "ln1": ln, "ln2": ln}
+    dec = {"self_attn": attn_ax, "cross_attn": attn_ax, "mlp": mlp_ax,
+           "ln1": ln, "ln2": ln, "ln3": ln}
+    stack = lambda tree: jax.tree.map(lambda t: ("layers",) + t, tree,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+    return {
+        "embed": ("vocab", "embed"),
+        "dec_pos": (None, "embed"),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "ln_enc": ln,
+        "ln_dec": ln,
+    }
+
+
+def encode(params, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, D) precomputed embeddings (stub frontend) with
+    sinusoidal positions added, -> encoder states (B, S_enc, D)."""
+    B, S, D = frames.shape
+    x = frames.astype(cfg.compute_dt)
+    x = x + L.sinusoidal_positions(S, D).astype(x.dtype)[None]
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    dims = attn_dims(cfg)
+    use_chunked = S >= cfg.attn_chunk_threshold
+
+    def body(x, lp):
+        h = _ln(lp["ln1"], x)
+        a, _ = L.attention(lp["attn"], h, dims, use_chunked=use_chunked)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], _ln(lp["ln2"], x), "gelu")
+        return shard(x, "act_batch", "act_seq", "act_embed"), ()
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return _ln(params["ln_enc"], x)
+
+
+def _dec_dims(cfg):
+    return L.AttnDims(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                      causal=True)
+
+
+def decode_train(params, cfg: ArchConfig, tokens: jnp.ndarray, enc_states: jnp.ndarray):
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    x = x + params["dec_pos"][:S].astype(x.dtype)[None]
+    dims = _dec_dims(cfg)
+    cross_dims = attn_dims(cfg)
+    use_chunked = S >= cfg.attn_chunk_threshold
+
+    def body(x, lp):
+        h = _ln(lp["ln1"], x)
+        a, _ = L.attention(lp["self_attn"], h, dims, use_chunked=use_chunked)
+        x = x + a
+        h = _ln(lp["ln2"], x)
+        c, _ = L.attention(lp["cross_attn"], h, cross_dims, kv_x=enc_states)
+        x = x + c
+        x = x + L.mlp(lp["mlp"], _ln(lp["ln3"], x), "gelu")
+        return shard(x, "act_batch", "act_seq", "act_embed"), ()
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    return _ln(params["ln_dec"], x)
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> jnp.ndarray:
+    enc_states = encode(params, cfg, batch["frames"])
+    hidden = decode_train(params, cfg, batch["tokens"], enc_states)
+    logits = L.unembed(hidden, params["embed"])
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dt
+    e = cfg.encdec
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    cross = (cfg.n_layers, batch, e.enc_frames, cfg.n_kv, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+        "cross_k": jnp.zeros(cross, dtype), "cross_v": jnp.zeros(cross, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    kv = ("layers", "cache_batch", "cache_seq", "cache_kv_heads", None)
+    ckv = ("layers", "cache_batch", None, "cache_kv_heads", None)
+    return {"k": kv, "v": kv, "cross_k": ckv, "cross_v": ckv, "pos": ()}
+
+
+def precompute_cross_cache(params, cfg: ArchConfig, enc_states: jnp.ndarray):
+    """Cross-attention K/V computed once per request (standard enc-dec serving)."""
+    dims = attn_dims(cfg)
+
+    def body(_, lp):
+        _, (k, v) = L.attention(lp["cross_attn"], enc_states[:, :1, :], dims,
+                                kv_x=enc_states, return_kv=True)
+        return (), (k.astype(cfg.compute_dt), v.astype(cfg.compute_dt))
+
+    _, (ck, cv) = jax.lax.scan(body, (), params["dec_layers"])
+    return ck, cv
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    B, S = tokens.shape
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    pos_emb = jax.lax.dynamic_slice(params["dec_pos"], (pos, 0), (S, cfg.d_model))
+    x = x + pos_emb.astype(x.dtype)[None]
+    dims = _dec_dims(cfg)
+    positions = jnp.broadcast_to(pos[None, None] + jnp.arange(S, dtype=jnp.int32), (B, S))
+    G = cfg.n_heads // cfg.n_kv
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = _ln(lp["ln1"], x)
+        a, nc = L.attention(lp["self_attn"], h, dims, positions=positions,
+                            cache={"k": ck, "v": cv}, cache_pos=pos)
+        x = x + a
+        # cross attention against the precomputed encoder K/V
+        h = _ln(lp["ln2"], x)
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["cross_attn"]["wq"].astype(h.dtype))
+        out = L._sdpa(q, xk.astype(q.dtype), xv.astype(q.dtype), None,
+                      attn_dims(cfg))
+        c = jnp.einsum("bsf,fd->bsd",
+                       out.reshape(B, S, cfg.n_heads * cfg.head_dim),
+                       lp["cross_attn"]["wo"].astype(h.dtype))
+        x = x + c
+        x = x + L.mlp(lp["mlp"], _ln(lp["ln3"], x), "gelu")
+        return x, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]))
+    hidden = _ln(params["ln_dec"], x)
+    logits = L.unembed(hidden, params["embed"])
+    new_cache = dict(cache, k=nk, v=nv, pos=pos + S)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray, frames: jnp.ndarray = None):
+    """Enc-dec prefill: encode stub frames + teacher-forced decoder pass;
+    cross K/V precomputed for decode."""
+    B, S = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((B, cfg.encdec.enc_frames, cfg.d_model), cfg.compute_dt)
+    enc_states = encode(params, cfg, frames)
+    hidden = decode_train(params, cfg, tokens, enc_states)
+    logits = L.unembed(hidden[:, -1:, :], params["embed"])
+    ck, cv = precompute_cross_cache(params, cfg, enc_states)
+    cache = init_cache(cfg, B, S)
+    cache["cross_k" ] = ck
+    cache["cross_v"] = cv
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def n_params(cfg: ArchConfig) -> int:
+    D = cfg.d_model
+    attn = D * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim + cfg.n_heads * cfg.head_dim * D
+    mlp_p = 2 * D * cfg.d_ff
+    enc = cfg.encdec.n_enc_layers * (attn + mlp_p + 4 * D)
+    dec = cfg.n_layers * (2 * attn + mlp_p + 6 * D)
+    return enc + dec + cfg.vocab * D + cfg.encdec.max_positions * D + 4 * D
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    return n_params(cfg)

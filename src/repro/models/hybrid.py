@@ -1,0 +1,360 @@
+"""recurrentgemma-2b — Griffin-style hybrid: RG-LRU recurrent blocks with a
+temporal conv1d (the paper's operator, causal K=4), interleaved 2:1 with
+local sliding-window attention (window 2048, MQA kv=1).
+
+Scan-over-superblocks: the (rec, rec, attn) pattern is one scan body over
+n_layers // 3 stacked superblocks (+ unrolled remainder), keeping the HLO
+compact while preserving the heterogeneous layer pattern.
+
+The RG-LRU linear recurrence trains via ``jax.lax.associative_scan``
+(log-depth) and decodes with an O(1) carried state — hence this arch runs
+the long_500k cell (bounded attention window + constant recurrent state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dwconv import dwconv
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.train.losses import softmax_cross_entropy
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence-gate temperature
+
+
+def attn_dims(cfg: ArchConfig) -> L.AttnDims:
+    return L.AttnDims(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_rec_block(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    r = cfg.rglru
+    W = r.lru_width
+    D = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    # Lambda init so a = sigmoid(lam)^c lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[4], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _C_RGLRU) / (1 - u ** (1.0 / _C_RGLRU)))
+    return {
+        "w_xbranch": L.dense_init(ks[0], D, W),
+        "w_ybranch": L.dense_init(ks[1], D, W),
+        "conv_w": jax.random.normal(ks[2], (W, r.d_conv)) / math.sqrt(r.d_conv),
+        "conv_b": jnp.zeros((W,)),
+        # diagonal input/recurrence gates (block-diagonal in the paper)
+        "w_gate_a": jnp.zeros((W,)),
+        "w_gate_x": jnp.zeros((W,)),
+        "lam": lam,
+        "w_out": L.dense_init(ks[3], W, D),
+        "ln": jnp.zeros((D,)),
+    }
+
+
+def _init_mlp_half(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    k1 = rng
+    return {"mlp": L.init_mlp(k1, cfg.d_model, cfg.d_ff, gated=True),
+            "ln_mlp": jnp.zeros((cfg.d_model,))}
+
+
+def _init_attn_block(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    k1, _ = jax.random.split(rng)
+    return {"attn": L.init_attention(k1, cfg.d_model, attn_dims(cfg)),
+            "ln": jnp.zeros((cfg.d_model,))}
+
+
+def _init_superblock(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    """(rec + mlp, rec + mlp, attn + mlp) — every residual block is followed
+    by a gated-MLP block, per Griffin."""
+    ks = jax.random.split(rng, 6)
+    return {
+        "rec1": _init_rec_block(ks[0], cfg), "mlp1": _init_mlp_half(ks[1], cfg),
+        "rec2": _init_rec_block(ks[2], cfg), "mlp2": _init_mlp_half(ks[3], cfg),
+        "attn": _init_attn_block(ks[4], cfg), "mlp3": _init_mlp_half(ks[5], cfg),
+    }
+
+
+def n_superblocks(cfg: ArchConfig) -> int:
+    return cfg.n_layers // len(cfg.rglru.block_pattern)
+
+
+def n_tail_rec(cfg: ArchConfig) -> int:
+    """Remainder recurrent layers (26 = 8 x (rec,rec,attn) + 2 x rec)."""
+    return cfg.n_layers % len(cfg.rglru.block_pattern)
+
+
+def init(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    k_embed, k_layers, k_tail = jax.random.split(rng, 3)
+    nb = n_superblocks(cfg)
+    keys = jax.random.split(k_layers, nb)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(lambda r: _init_superblock(r, cfg))(keys),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+    }
+    nt = n_tail_rec(cfg)
+    if nt:
+        tks = jax.random.split(k_tail, 2 * nt)
+        params["tail"] = [
+            {"rec": _init_rec_block(tks[2 * i], cfg),
+             "mlp": _init_mlp_half(tks[2 * i + 1], cfg)}
+            for i in range(nt)
+        ]
+    return jax.tree.map(lambda x: x.astype(cfg.param_dt), params)
+
+
+def param_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    rec = {
+        "w_xbranch": ("embed", "mlp"), "w_ybranch": ("embed", "mlp"),
+        "conv_w": ("mlp", "conv_k"), "conv_b": ("mlp",),
+        "w_gate_a": ("mlp",), "w_gate_x": ("mlp",), "lam": ("mlp",),
+        "w_out": ("mlp", "embed"), "ln": ("embed",),
+    }
+    mlp_half = {"mlp": L.mlp_param_axes(True), "ln_mlp": ("embed",)}
+    attn = {"attn": L.attention_param_axes(attn_dims(cfg)), "ln": ("embed",)}
+    sb = {"rec1": rec, "mlp1": mlp_half, "rec2": rec, "mlp2": mlp_half,
+          "attn": attn, "mlp3": mlp_half}
+    sb = jax.tree.map(lambda t: ("layers",) + t, sb,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    axes = {"embed": ("vocab", "embed"), "blocks": sb, "ln_f": ("embed",)}
+    nt = n_tail_rec(cfg)
+    if nt:
+        axes["tail"] = [{"rec": dict(rec), "mlp": dict(mlp_half)} for _ in range(nt)]
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _rglru_gates(lp, xc: jnp.ndarray):
+    """xc: (..., W) conv output.  Returns (a, gated_input) with
+    a = sigmoid(lam)^(c*r) elementwise, input scaled by sqrt(1-a^2)*i*x."""
+    r_gate = jax.nn.sigmoid(xc.astype(jnp.float32) * lp["w_gate_a"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xc.astype(jnp.float32) * lp["w_gate_x"].astype(jnp.float32))
+    log_a = -_C_RGLRU * r_gate * jax.nn.softplus(lp["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * i_gate * xc.astype(jnp.float32)
+    return a, x_in
+
+
+def _rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0=None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (associative, log-depth)."""
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _rec_block(lp, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    r = cfg.rglru
+    h = L.rms_norm(x, lp["ln"])
+    xb = jnp.einsum("bsd,dw->bsw", h, lp["w_xbranch"].astype(h.dtype))
+    yb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_ybranch"].astype(h.dtype)))
+    xc = xb.transpose(0, 2, 1)
+    xc = shard(xc, "act_batch", "act_mlp", None)
+    xc = dwconv(xc, lp["conv_w"].astype(xc.dtype), padding="causal",
+                variant=r.conv_variant)
+    xc = (xc + lp["conv_b"].astype(xc.dtype)[None, :, None]).transpose(0, 2, 1)
+    a, b = _rglru_gates(lp, xc)
+    hseq = _rglru_scan(a, b).astype(h.dtype)
+    out = jnp.einsum("bsw,wd->bsd", hseq * yb, lp["w_out"].astype(h.dtype))
+    return shard(x + out, "act_batch", "act_seq", "act_embed")
+
+
+def _mlp_block(lp, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    return x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln_mlp"]), "gelu")
+
+
+def _attn_block(lp, cfg: ArchConfig, x, positions, use_chunked) -> jnp.ndarray:
+    h = L.rms_norm(x, lp["ln"])
+    a, _ = L.attention(lp["attn"], h, attn_dims(cfg), positions=positions,
+                       rope_theta=cfg.rope_theta, window=cfg.rglru.attn_window,
+                       use_chunked=use_chunked)
+    return x + a
+
+
+def _superblock(sb, cfg: ArchConfig, x, positions, use_chunked) -> jnp.ndarray:
+    x = _mlp_block(sb["mlp1"], cfg, _rec_block(sb["rec1"], cfg, x))
+    x = _mlp_block(sb["mlp2"], cfg, _rec_block(sb["rec2"], cfg, x))
+    x = _mlp_block(sb["mlp3"], cfg, _attn_block(sb["attn"], cfg, x, positions, use_chunked))
+    return x
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma convention
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    use_chunked = S >= cfg.attn_chunk_threshold
+
+    def body(x, sb):
+        return _superblock(sb, cfg, x, positions, use_chunked), ()
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    for t in params.get("tail", []):
+        x = _mlp_block(t["mlp"], cfg, _rec_block(t["rec"], cfg, x))
+    return L.rms_norm(x, params["ln_f"])
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"])
+    logits = L.unembed(hidden, params["embed"])  # tied embeddings
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: recurrent state + ring-buffer local-attention cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    """Attention caches are bounded by the local window (ring buffer) — the
+    property that makes long_500k feasible for this arch."""
+    dtype = dtype or cfg.compute_dt
+    r = cfg.rglru
+    nb = n_superblocks(cfg)
+    W = r.lru_width
+    win = min(cache_len, r.attn_window)
+    cache = {
+        "conv1": jnp.zeros((nb, batch, W, r.d_conv - 1), dtype),
+        "conv2": jnp.zeros((nb, batch, W, r.d_conv - 1), dtype),
+        "state1": jnp.zeros((nb, batch, W), jnp.float32),
+        "state2": jnp.zeros((nb, batch, W), jnp.float32),
+        "k": jnp.zeros((nb, batch, win, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((nb, batch, win, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    nt = n_tail_rec(cfg)
+    if nt:
+        cache["tail_conv"] = jnp.zeros((nt, batch, W, r.d_conv - 1), dtype)
+        cache["tail_state"] = jnp.zeros((nt, batch, W), jnp.float32)
+    return cache
+
+
+def cache_axes(cfg: ArchConfig):
+    kv = ("layers", "cache_batch", "cache_seq", "cache_kv_heads", None)
+    axes = {
+        "conv1": ("layers", "cache_batch", "act_mlp", None),
+        "conv2": ("layers", "cache_batch", "act_mlp", None),
+        "state1": ("layers", "cache_batch", "act_mlp"),
+        "state2": ("layers", "cache_batch", "act_mlp"),
+        "k": kv, "v": kv, "pos": (),
+    }
+    if n_tail_rec(cfg):
+        axes["tail_conv"] = ("layers", "cache_batch", "act_mlp", None)
+        axes["tail_state"] = ("layers", "cache_batch", "act_mlp")
+    return axes
+
+
+def _rec_decode(lp, cfg, x, conv_st, state):
+    """x: (B,1,D).  Returns (y, new_conv, new_state)."""
+    h = L.rms_norm(x, lp["ln"])[:, 0]
+    xb = h @ lp["w_xbranch"].astype(h.dtype)
+    yb = jax.nn.gelu(h @ lp["w_ybranch"].astype(h.dtype))
+    buf = jnp.concatenate([conv_st, xb[..., None]], axis=-1)     # (B,W,K)
+    xc = jnp.einsum("bwk,wk->bw", buf, lp["conv_w"].astype(buf.dtype))
+    xc = xc + lp["conv_b"].astype(xc.dtype)
+    a, b = _rglru_gates(lp, xc)
+    new_state = a * state + b
+    out = (new_state.astype(h.dtype) * yb) @ lp["w_out"].astype(h.dtype)
+    return x + out[:, None], buf[..., 1:], new_state
+
+
+def _attn_decode_ring(lp, cfg, x, ck, cv, pos):
+    """Ring-buffer windowed attention decode.  Slot = pos % win."""
+    r = cfg.rglru
+    win = ck.shape[1]
+    B = x.shape[0]
+    h = L.rms_norm(x, lp["ln"])
+    dims = attn_dims(cfg)
+    q, k, v = L._project_qkv(lp["attn"], h, h, dims)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    slot = pos % win
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    # absolute position held by each ring slot
+    s = jnp.arange(win, dtype=jnp.int32)
+    kv_pos = pos - ((pos - s) % win)
+    valid = (kv_pos >= 0) & (kv_pos <= pos) & (pos - kv_pos < r.attn_window)
+    bias = jnp.where(valid, 0.0, -1e30)[None, :]                  # (1, win)
+    out = L._sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), bias, dims)
+    y = out.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype)
+    return x + y, ck, cv
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    B, S = tokens.shape
+    assert S == 1
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def body(x, inp):
+        sb, c1, c2, s1, s2, ck, cv = inp
+        x, nc1, ns1 = _rec_decode(sb["rec1"], cfg, x, c1, s1)
+        x = _mlp_block(sb["mlp1"], cfg, x)
+        x, nc2, ns2 = _rec_decode(sb["rec2"], cfg, x, c2, s2)
+        x = _mlp_block(sb["mlp2"], cfg, x)
+        x, nk, nv = _attn_decode_ring(sb["attn"], cfg, x, ck, cv, pos)
+        x = _mlp_block(sb["mlp3"], cfg, x)
+        return x, (nc1, nc2, ns1, ns2, nk, nv)
+
+    x, (nc1, nc2, ns1, ns2, nk, nv) = jax.lax.scan(
+        body, x,
+        (params["blocks"], cache["conv1"], cache["conv2"],
+         cache["state1"], cache["state2"], cache["k"], cache["v"]))
+    new_cache = {"conv1": nc1, "conv2": nc2, "state1": ns1, "state2": ns2,
+                 "k": nk, "v": nv, "pos": pos + 1}
+    for i, t in enumerate(params.get("tail", [])):
+        x, ncv, nst = _rec_decode(t["rec"], cfg, x, cache["tail_conv"][i], cache["tail_state"][i])
+        x = _mlp_block(t["mlp"], cfg, x)
+        if i == 0:
+            new_cache["tail_conv"] = cache["tail_conv"]
+            new_cache["tail_state"] = cache["tail_state"]
+        new_cache["tail_conv"] = new_cache["tail_conv"].at[i].set(ncv)
+        new_cache["tail_state"] = new_cache["tail_state"].at[i].set(nst)
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = L.unembed(hidden, params["embed"])
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray):
+    """Logits-only prefill (forward pass); decode state handoff is done by
+    replaying the last window through decode_step (DESIGN.md note) — the
+    roofline-relevant compute is the forward pass lowered here."""
+    hidden = forward(params, cfg, tokens)
+    logits = L.unembed(hidden[:, -1:, :], params["embed"])
+    return logits, init_cache(cfg, tokens.shape[0], min(tokens.shape[1], cfg.rglru.attn_window))
+
+
+def n_params(cfg: ArchConfig) -> int:
+    r = cfg.rglru
+    W, D = r.lru_width, cfg.d_model
+    rec = 2 * D * W + W * r.d_conv + 4 * W + W * D + D
+    mlp_half = 3 * D * cfg.d_ff + D
+    attn = D * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim + cfg.n_heads * cfg.head_dim * D + D
+    per_sb = 2 * rec + 3 * mlp_half + attn
+    tail = n_tail_rec(cfg) * (rec + mlp_half)
+    return n_superblocks(cfg) * per_sb + tail + cfg.vocab * D + D
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    return n_params(cfg)

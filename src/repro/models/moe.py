@@ -1,0 +1,344 @@
+"""Mixture-of-Experts LM family: olmoe-1b-7b (64e top-8) and
+deepseek-moe-16b (2 shared + 64 routed top-6, dense first layer).
+
+Token-choice top-k routing with capacity-factor einsum dispatch (GShard
+style): tokens are blocked into groups, each group dispatches into
+(experts x capacity) slots via one-hot position-in-expert tensors.  Under
+the production mesh the dispatch/return einsums lower to all-to-alls
+(groups sharded over data, experts over model) — expert parallelism without
+manual collectives.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.train.losses import softmax_cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# expert MLP + router
+# ---------------------------------------------------------------------------
+
+
+def _init_moe_block(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    ks = jax.random.split(rng, 5)
+    D, F, E = cfg.d_model, cfg.d_ff, m.n_experts
+    p = {
+        "router": L.dense_init(ks[0], D, E),
+        "w_gate": jax.random.normal(ks[1], (E, D, F)) / jnp.sqrt(D),
+        "w_up": jax.random.normal(ks[2], (E, D, F)) / jnp.sqrt(D),
+        "w_down": jax.random.normal(ks[3], (E, F, D)) / jnp.sqrt(F),
+    }
+    if m.n_shared > 0:
+        p["shared"] = L.init_mlp(ks[4], D, m.n_shared * F, gated=True)
+    return p
+
+
+def _moe_block_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    axes = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    if cfg.moe.n_shared > 0:
+        axes["shared"] = L.mlp_param_axes(gated=True)
+    return axes
+
+
+def moe_mlp(p: Dict[str, Any], x: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).  Group-blocked top-k dispatch."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    tokens = B * S
+    g = min(m.group_size, tokens)
+    G = tokens // g
+    assert G * g == tokens, (tokens, g)
+    xt = x.reshape(G, g, D)
+    xt = shard(xt, "act_groups", None, "act_embed")
+
+    logits = jnp.einsum("Ggd,de->Gge", xt, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G,g,E)
+    gate_vals, idx = jax.lax.top_k(probs, k)                    # (G,g,k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    C = int(max(4, round(g * k / E * m.capacity_factor)))
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (G,g,k,E)
+    # position of each (token, choice) within its expert queue, in slot order
+    flat = onehot.reshape(G, g * k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, k, E)  # (G,g,k,E)
+    keep = (pos < C).astype(jnp.float32) * onehot
+    # dispatch/combine (G,g,E,C) accumulated per choice to bound peak memory
+    dispatch = jnp.zeros((G, g, E, C), jnp.float32)
+    combine = jnp.zeros((G, g, E, C), jnp.float32)
+    for j in range(k):
+        slot = jax.nn.one_hot(pos[:, :, j, :].astype(jnp.int32), C, dtype=jnp.float32)  # (G,g,E,C)
+        dj = keep[:, :, j, :, None] * slot
+        dispatch = dispatch + dj
+        combine = combine + dj * gate_vals[:, :, j, None, None]
+    dispatch = shard(dispatch.astype(x.dtype), "act_groups", None, "act_experts", None)
+    combine = shard(combine.astype(x.dtype), "act_groups", None, "act_experts", None)
+
+    # dispatch -> (E, G, C, D): all-to-all under (G: data, E: model) sharding
+    expert_in = jnp.einsum("GgEC,Ggd->EGCd", dispatch, xt)
+    expert_in = shard(expert_in, "act_experts", "act_groups", None, "act_embed")
+    gate = jnp.einsum("EGCd,Edf->EGCf", expert_in, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("EGCd,Edf->EGCf", expert_in, p["w_up"].astype(x.dtype))
+    act = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("EGCf,Efd->EGCd", act, p["w_down"].astype(x.dtype))
+    expert_out = shard(expert_out, "act_experts", "act_groups", None, "act_embed")
+    out = jnp.einsum("GgEC,EGCd->Ggd", combine, expert_out)
+
+    if m.n_shared > 0:
+        out = out + L.mlp(p["shared"], xt, cfg.act)
+
+    # Switch-style load-balance aux loss
+    density = jnp.mean(onehot.sum(2), axis=(0, 1))              # fraction per expert
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * router_prob)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# model assembly (attention layers from the dense family)
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng, cfg: ArchConfig, dense_mlp: bool) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "attn": L.init_attention(k1, cfg.d_model, T.attn_dims(cfg)),
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "ln2": jnp.zeros((cfg.d_model,)),
+    }
+    if dense_mlp:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.moe.dense_ff or cfg.d_ff, gated=True)
+    else:
+        p["moe"] = _init_moe_block(k2, cfg)
+    return p
+
+
+def init(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    k_embed, k_layers, k_first, k_out = jax.random.split(rng, 4)
+    n_scan = cfg.n_layers - (1 if m.dense_first_layer else 0)
+    layer_keys = jax.random.split(k_layers, n_scan)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model),
+        "layers": jax.vmap(lambda r: _init_layer(r, cfg, dense_mlp=False))(layer_keys),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+    }
+    if m.dense_first_layer:
+        params["first_layer"] = _init_layer(k_first, cfg, dense_mlp=True)
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(k_out, cfg.vocab, cfg.d_model)
+    return jax.tree.map(lambda x: x.astype(cfg.param_dt), params)
+
+
+def param_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    attn_axes = L.attention_param_axes(T.attn_dims(cfg))
+    lp = {
+        "attn": {k: ("layers",) + v for k, v in attn_axes.items()},
+        "moe": {k: ("layers",) + v for k, v in _moe_block_axes(cfg).items()
+                if k != "shared"},
+        "ln1": ("layers", "embed"),
+        "ln2": ("layers", "embed"),
+    }
+    if cfg.moe.n_shared > 0:
+        lp["moe"]["shared"] = {k: ("layers",) + v for k, v in L.mlp_param_axes(True).items()}
+    axes = {"embed": ("vocab", "embed"), "layers": lp, "ln_f": ("embed",)}
+    if cfg.moe.dense_first_layer:
+        axes["first_layer"] = {
+            "attn": attn_axes,
+            "mlp": L.mlp_param_axes(True),
+            "ln1": ("embed",),
+            "ln2": ("embed",),
+        }
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("vocab", "embed")
+    return axes
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    use_chunked = S >= cfg.attn_chunk_threshold
+    dims = T.attn_dims(cfg)
+
+    def attn_part(lp, x):
+        h = L.rms_norm(x, lp["ln1"])
+        a, _ = L.attention(lp["attn"], h, dims, positions=positions,
+                           rope_theta=cfg.rope_theta, use_chunked=use_chunked)
+        return x + a
+
+    if "first_layer" in params:
+        fl = params["first_layer"]
+        x = attn_part(fl, x)
+        x = x + L.mlp(fl["mlp"], L.rms_norm(x, fl["ln2"]), cfg.act)
+
+    def body(carry, lp):
+        x, aux = carry
+        x = attn_part(lp, x)
+        h = L.rms_norm(x, lp["ln2"])
+        mo, a = moe_mlp(lp["moe"], h, cfg)
+        x = shard(x + mo, "act_batch", "act_seq", "act_embed")
+        return (x, aux + a), ()
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    n_moe = cfg.n_layers - (1 if cfg.moe.dense_first_layer else 0)
+    return L.rms_norm(x, params["ln_f"]), aux / n_moe
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> jnp.ndarray:
+    hidden, aux = forward(params, cfg, batch["tokens"])
+    logits = T.logits_fn(params, cfg, hidden)
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dt
+    n_scan = cfg.n_layers - (1 if cfg.moe.dense_first_layer else 0)
+    shape = (n_scan, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+             "pos": jnp.zeros((), jnp.int32)}
+    if cfg.moe.dense_first_layer:
+        fshape = (batch, cache_len, cfg.n_kv, cfg.head_dim)
+        cache["first_k"] = jnp.zeros(fshape, dtype)
+        cache["first_v"] = jnp.zeros(fshape, dtype)
+    return cache
+
+
+def cache_axes(cfg: ArchConfig):
+    kv = ("layers", "cache_batch", "cache_seq", "cache_kv_heads", None)
+    axes = {"k": kv, "v": kv, "pos": ()}
+    if cfg.moe.dense_first_layer:
+        axes["first_k"] = kv[1:]
+        axes["first_v"] = kv[1:]
+    return axes
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    B, S = tokens.shape
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    positions = jnp.broadcast_to(pos[None, None] + jnp.arange(S, dtype=jnp.int32), (B, S))
+    dims = T.attn_dims(cfg)
+    new_cache = dict(cache)
+
+    def attn_decode(lp, x, ck, cv):
+        h = L.rms_norm(x, lp["ln1"])
+        a, nc = L.attention(lp["attn"], h, dims, positions=positions,
+                            rope_theta=cfg.rope_theta,
+                            cache={"k": ck, "v": cv}, cache_pos=pos)
+        return x + a, nc
+
+    if "first_layer" in params:
+        fl = params["first_layer"]
+        x, nc = attn_decode(fl, x, cache["first_k"], cache["first_v"])
+        x = x + L.mlp(fl["mlp"], L.rms_norm(x, fl["ln2"]), cfg.act)
+        new_cache["first_k"], new_cache["first_v"] = nc["k"], nc["v"]
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        x, nc = attn_decode(lp, x, ck, cv)
+        h = L.rms_norm(x, lp["ln2"])
+        mo, _ = moe_mlp(lp["moe"], h, cfg)
+        return x + mo, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = T.logits_fn(params, cfg, hidden)
+    new_cache.update(k=nk, v=nv, pos=pos + S)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray):
+    """Full-sequence prefill with KV-cache materialization."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    use_chunked = S >= cfg.attn_chunk_threshold
+    dims = T.attn_dims(cfg)
+    cache = {}
+
+    def attn_prefill(lp, x):
+        h = L.rms_norm(x, lp["ln1"])
+        a, (k, v) = L.attention(lp["attn"], h, dims, positions=positions,
+                                rope_theta=cfg.rope_theta, use_chunked=use_chunked,
+                                return_kv=True)
+        return x + a, k.astype(cfg.compute_dt), v.astype(cfg.compute_dt)
+
+    if "first_layer" in params:
+        fl = params["first_layer"]
+        x, fk, fv = attn_prefill(fl, x)
+        x = x + L.mlp(fl["mlp"], L.rms_norm(x, fl["ln2"]), cfg.act)
+        cache["first_k"], cache["first_v"] = fk, fv
+
+    def body(x, lp):
+        x, k, v = attn_prefill(lp, x)
+        h = L.rms_norm(x, lp["ln2"])
+        mo, _ = moe_mlp(lp["moe"], h, cfg)
+        x = shard(x + mo, "act_batch", "act_seq", "act_embed")
+        return x, (k, v)
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"])
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = T.logits_fn(params, cfg, hidden[:, -1:, :])
+    cache.update(k=ks, v=vs, pos=jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    return cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * cfg.d_model
+
+
+def n_params(cfg: ArchConfig) -> int:
+    m = cfg.moe
+    expert = 3 * cfg.d_model * cfg.d_ff
+    shared = 3 * cfg.d_model * (m.n_shared * cfg.d_ff) if m.n_shared else 0
+    router = cfg.d_model * m.n_experts
+    n_moe = cfg.n_layers - (1 if m.dense_first_layer else 0)
+    per_moe_layer = _attn_params(cfg) + m.n_experts * expert + shared + router + 2 * cfg.d_model
+    total = n_moe * per_moe_layer
+    if m.dense_first_layer:
+        total += _attn_params(cfg) + 3 * cfg.d_model * (m.dense_ff or cfg.d_ff) + 2 * cfg.d_model
+    total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2) + cfg.d_model
+    return total
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    m = cfg.moe
+    expert = 3 * cfg.d_model * cfg.d_ff
+    shared = 3 * cfg.d_model * (m.n_shared * cfg.d_ff) if m.n_shared else 0
+    router = cfg.d_model * m.n_experts
+    n_moe = cfg.n_layers - (1 if m.dense_first_layer else 0)
+    per_layer = _attn_params(cfg) + m.top_k * expert + shared + router + 2 * cfg.d_model
+    total = n_moe * per_layer
+    if m.dense_first_layer:
+        total += _attn_params(cfg) + 3 * cfg.d_model * (m.dense_ff or cfg.d_ff) + 2 * cfg.d_model
+    total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2) + cfg.d_model
+    return total

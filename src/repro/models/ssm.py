@@ -1,0 +1,324 @@
+"""mamba2-1.3b — state-space duality (SSD) blocks, attention-free.
+
+Train path: the chunked SSD algorithm (Mamba-2, arXiv:2405.21060 Listing 1)
+— quadratic attention-like einsums *within* chunks, a linear state
+recurrence *across* chunks (lax.scan) — all matmul-friendly for the MXU.
+
+The depthwise causal conv1d in front of the SSD is the paper's operator:
+it routes through ``repro.core.dwconv`` with a selectable kernel variant —
+the assigned-architecture integration of the paper's technique.
+
+Decode path: constant-size recurrent state (conv ring + SSM state), which is
+why this arch carries the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dwconv import dwconv
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.train.losses import softmax_cross_entropy
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(rng, 8)
+    D, N = cfg.d_model, s.d_state
+    return {
+        "w_z": L.dense_init(ks[0], D, d_inner),
+        "w_x": L.dense_init(ks[1], D, d_inner),
+        "w_B": L.dense_init(ks[2], D, N),
+        "w_C": L.dense_init(ks[3], D, N),
+        "w_dt": L.dense_init(ks[4], D, H),
+        "conv_w": jax.random.normal(ks[5], (conv_dim, s.d_conv)) / jnp.sqrt(s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "d_skip": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))),
+        "norm": jnp.zeros((d_inner,)),
+        "w_out": L.dense_init(ks[6], d_inner, D),
+        "ln": jnp.zeros((D,)),
+    }
+
+
+def init(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    k_embed, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model),
+        "layers": jax.vmap(lambda r: _init_layer(r, cfg))(layer_keys),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+    }
+    return jax.tree.map(lambda x: x.astype(cfg.param_dt), params)
+
+
+def param_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    lp = {
+        "w_z": ("layers", "embed", "mlp"),
+        "w_x": ("layers", "embed", "mlp"),
+        "w_B": ("layers", "embed", "state"),
+        "w_C": ("layers", "embed", "state"),
+        "w_dt": ("layers", "embed", "heads"),
+        "conv_w": ("layers", "mlp", "conv_k"),
+        "conv_b": ("layers", "mlp"),
+        "a_log": ("layers", "heads"),
+        "d_skip": ("layers", "heads"),
+        "dt_bias": ("layers", "heads"),
+        "norm": ("layers", "mlp"),
+        "w_out": ("layers", "mlp", "embed"),
+        "ln": ("layers", "embed"),
+    }
+    return {"embed": ("vocab", "embed"), "layers": lp, "ln_f": ("embed",)}
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., T) -> (..., T, T) with out[i,j] = sum_{k in (j, i]} x_k, -inf above diag."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xdt, dA, Bm, Cm, chunk: int):
+    """SSD scan.  xdt: (b,S,H,P) pre-multiplied by dt; dA: (b,S,H) = dt*A;
+    Bm, Cm: (b,S,N) (n_groups=1).  Returns y (b,S,H,P), final state (b,H,P,N)."""
+    b, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    c = S // Q
+    xdt = xdt.reshape(b, c, Q, H, P)
+    dA_c = dA.reshape(b, c, Q, H).transpose(0, 3, 1, 2)          # (b,H,c,Q)
+    Bc = Bm.reshape(b, c, Q, N)
+    Cc = Cm.reshape(b, c, Q, N)
+    A_cum = jnp.cumsum(dA_c, axis=-1)                            # (b,H,c,Q)
+
+    # 1. intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(dA_c))                                # (b,H,c,Q,Q)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, xdt)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)              # (b,H,c,Q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # 3. inter-chunk linear recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(A_cum[..., -1])                        # (b,H,c)
+
+    def scan_body(carry, inp):
+        st, dec = inp                                            # (b,H,P,N), (b,H)
+        prev = carry                                             # f32 carry
+        new = prev * dec[..., None, None].astype(jnp.float32) + st.astype(jnp.float32)
+        return new, prev
+
+    states_c = states.transpose(1, 0, 2, 3, 4)                   # (c,b,H,P,N)
+    decay_c = chunk_decay.transpose(2, 0, 1)                     # (c,b,H)
+    init_state = jnp.zeros((b, H, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(scan_body, init_state, (states_c, decay_c))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4).astype(xdt.dtype)  # (b,c,H,P,N)
+
+    # 4. state -> output (inter-chunk contribution)
+    state_decay_out = jnp.exp(A_cum)                             # (b,H,c,Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+
+def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
+    """One mamba2 block (train path).  x: (B, S, D)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    B_, S_, D = x.shape
+    h = L.rms_norm(x, lp["ln"])
+    z = jnp.einsum("bsd,di->bsi", h, lp["w_z"].astype(h.dtype))
+    xs = jnp.einsum("bsd,di->bsi", h, lp["w_x"].astype(h.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", h, lp["w_B"].astype(h.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", h, lp["w_C"].astype(h.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", h, lp["w_dt"].astype(h.dtype))
+
+    # depthwise causal conv over (x, B, C) — the paper's operator
+    if s.split_conv:
+        # shard-aligned variant: conv each component with its own filter
+        # slice; x stays model-sharded end-to-end, B/C stay replicated —
+        # no mid-layer resharding of a concat dim (§Perf hillclimb C).
+        def _conv(t, lo, hi, axes):
+            tt = shard(t.transpose(0, 2, 1), *axes)
+            tt = dwconv(tt, lp["conv_w"][lo:hi].astype(tt.dtype),
+                        padding="causal", variant=s.conv_variant)
+            tt = tt + lp["conv_b"][lo:hi].astype(tt.dtype)[None, :, None]
+            return jax.nn.silu(tt).transpose(0, 2, 1)
+
+        xs = _conv(xs, 0, d_inner, ("act_batch", "act_mlp", None))
+        Bm = _conv(Bm, d_inner, d_inner + s.d_state, ("act_batch", None, None))
+        Cm = _conv(Cm, d_inner + s.d_state, conv_dim, ("act_batch", None, None))
+    else:
+        xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)             # (B,S,conv_dim)
+        xbc = shard(xbc.transpose(0, 2, 1), "act_batch", "act_mlp", None)
+        xbc = dwconv(xbc, lp["conv_w"].astype(xbc.dtype), padding="causal",
+                     variant=s.conv_variant)
+        xbc = xbc + lp["conv_b"].astype(xbc.dtype)[None, :, None]
+        xbc = jax.nn.silu(xbc).transpose(0, 2, 1)
+        xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["a_log"].astype(jnp.float32))                # (H,)
+    xh = xs.reshape(B_, S_, H, s.head_dim)
+    xh = shard(xh, "act_batch", "act_seq", "act_heads", None)
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    dA = dt * A                                                  # (B,S,H) f32
+    y, final_state = ssd_chunked(xdt, dA.astype(jnp.float32), Bm, Cm, s.chunk)
+    y = y.astype(x.dtype)
+    y = y + lp["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, S_, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["norm"])
+    out = jnp.einsum("bsi,id->bsd", y, lp["w_out"].astype(y.dtype))
+    res = shard(x + out, "act_batch", "act_seq", "act_embed")
+    if return_state:
+        return res, final_state.astype(jnp.float32)
+    return res
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+
+    def body(x, lp):
+        return _block(lp, cfg, x), ()
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    return L.rms_norm(x, params["ln_f"])
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"])
+    logits = L.unembed(hidden, params["embed"])  # tied
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: recurrent decode (constant state)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    """cache_len is irrelevant for an SSM — state is O(1) in sequence."""
+    dtype = dtype or cfg.compute_dt
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, conv_dim, s.d_conv - 1), dtype),
+        "state": jnp.zeros((cfg.n_layers, batch, H, s.head_dim, s.d_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    return {
+        "conv": ("layers", "cache_batch", "act_mlp", None),
+        "state": ("layers", "cache_batch", "act_heads", None, "state"),
+        "pos": (),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    B_, S_ = tokens.shape
+    assert S_ == 1, "recurrent decode is one token at a time"
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+
+    def body(x, inp):
+        lp, conv_st, ssm_st = inp
+        h = L.rms_norm(x, lp["ln"])[:, 0]                        # (B,D)
+        z = h @ lp["w_z"].astype(h.dtype)
+        xs = h @ lp["w_x"].astype(h.dtype)
+        Bm = h @ lp["w_B"].astype(h.dtype)
+        Cm = h @ lp["w_C"].astype(h.dtype)
+        dt = h @ lp["w_dt"].astype(h.dtype)
+        xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)             # (B,conv_dim)
+        buf = jnp.concatenate([conv_st, xbc[..., None]], axis=-1)  # (B,conv_dim,K)
+        conv_out = jnp.einsum("bck,ck->bc", buf, lp["conv_w"].astype(buf.dtype))
+        conv_out = jax.nn.silu(conv_out + lp["conv_b"].astype(buf.dtype))
+        new_conv = buf[..., 1:]
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(lp["a_log"].astype(jnp.float32))
+        dA = jnp.exp(dt * A)                                     # (B,H)
+        xh = xs.reshape(B_, H, s.head_dim).astype(jnp.float32)
+        delta = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bm.astype(jnp.float32))
+        new_state = ssm_st * dA[..., None, None] + delta
+        y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+        y = y + lp["d_skip"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(B_, d_inner).astype(x.dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), lp["norm"])
+        out = y @ lp["w_out"].astype(y.dtype)
+        return x + out[:, None, :], (new_conv, new_state)
+
+    x, (nconv, nstate) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = L.unembed(hidden, params["embed"])
+    return logits, {"conv": nconv, "state": nstate, "pos": cache["pos"] + 1}
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray):
+    """Prefill via the chunked-SSD path, materializing the per-layer final
+    SSM states for subsequent recurrent decode.  (The conv ring state is
+    reconstructed from the last d_conv-1 tokens at decode start.)"""
+    B_ = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+
+    def body(x, lp):
+        x, st = _block(lp, cfg, x, return_state=True)
+        return x, st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = L.unembed(hidden[:, -1:, :], params["embed"])
+    cache = init_cache(cfg, B_, 0)
+    cache["state"] = states
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, cache
+
+
+def n_params(cfg: ArchConfig) -> int:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    D, N = cfg.d_model, s.d_state
+    per_layer = (2 * D * d_inner + 2 * D * N + D * H + conv_dim * s.d_conv
+                 + conv_dim + 3 * H + d_inner + d_inner * D + D)
+    return cfg.n_layers * per_layer + cfg.vocab * D + D
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    return n_params(cfg)

@@ -1,0 +1,441 @@
+"""Dense decoder-only LM family: llama3-8b, qwen2-0.5b, smollm-135m,
+gemma3-27b (5:1 local:global interleave via per-layer scanned window/theta).
+
+Scan-over-layers with stacked parameters keeps the HLO compact for the
+62-layer dry-run cells; heterogeneous local/global layers share one scan
+body because the window size and RoPE theta are *traced per-layer scalars*
+feeding the mask arithmetic, not Python control flow.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.train.losses import softmax_cross_entropy
+
+
+def attn_dims(cfg: ArchConfig) -> L.AttnDims:
+    return L.AttnDims(
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm,
+    )
+
+
+def layer_schedule(cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-layer (window, rope_theta) arrays — the local:global interleave."""
+    windows, thetas = [], []
+    for i in range(cfg.n_layers):
+        if cfg.local_global_pattern > 0:
+            is_global = (i + 1) % (cfg.local_global_pattern + 1) == 0
+        else:
+            is_global = cfg.window == 0
+        if is_global:
+            windows.append(0)  # full attention
+            thetas.append(cfg.rope_theta_global or cfg.rope_theta)
+        else:
+            windows.append(cfg.window or 1024)
+            thetas.append(cfg.rope_theta)
+    return jnp.asarray(windows, jnp.int32), jnp.asarray(thetas, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "attn": L.init_attention(k1, cfg.d_model, attn_dims(cfg)),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True),
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "ln2": jnp.zeros((cfg.d_model,)),
+    }
+    return p
+
+
+def init(rng: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    k_embed, k_layers, k_out = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda r: _init_layer(r, cfg))(layer_keys)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "ln_f": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(k_out, cfg.vocab, cfg.d_model)
+    return jax.tree.map(lambda x: x.astype(cfg.param_dt), params)
+
+
+def param_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    lp = {
+        "attn": {k: ("layers",) + v for k, v in L.attention_param_axes(attn_dims(cfg)).items()},
+        "mlp": {k: ("layers",) + v for k, v in L.mlp_param_axes(gated=True).items()},
+        "ln1": ("layers", "embed"),
+        "ln2": ("layers", "embed"),
+    }
+    axes = {"embed": ("vocab", "embed"), "layers": lp, "ln_f": ("embed",)}
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("vocab", "embed")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _layer_body(cfg: ArchConfig, x, lp, window, theta, positions, use_chunked):
+    h = L.rms_norm(x, lp["ln1"])
+    a, _ = L.attention(
+        lp["attn"], h, attn_dims(cfg),
+        positions=positions, rope_theta=theta, window=window, use_chunked=use_chunked,
+    )
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"])
+    x = x + L.mlp(lp["mlp"], h, cfg.act)
+    return shard(x, "act_batch", "act_seq", "act_embed")
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B, S) -> final hidden states (B, S, D)."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    windows, thetas = layer_schedule(cfg)
+    use_chunked = S >= cfg.attn_chunk_threshold
+
+    def body(x, inp):
+        lp, w, th = inp
+        return _layer_body(cfg, x, lp, w, th, positions, use_chunked), ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["layers"], windows, thetas))
+    return L.rms_norm(x, params["ln_f"])
+
+
+def logits_fn(params, cfg: ArchConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(hidden, table)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"])
+    logits = logits_fn(params, cfg, hidden)
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _lg_structure(cfg: ArchConfig):
+    """(n_superblocks, block_len, n_tail) for a local:global interleave.
+    gemma3-27b: 62 = 10 x (5 local + 1 global) + 2 local tail."""
+    per = cfg.local_global_pattern + 1
+    return cfg.n_layers // per, per, cfg.n_layers % per
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or cfg.compute_dt
+    if cfg.local_global_pattern > 0:
+        # Window-capped caches: local layers only ever attend within the
+        # sliding window, so their cache is a ring of `window` slots —
+        # 52/62 gemma3 layers drop from seq_len to 1024 slots.
+        nb, per, tail = _lg_structure(cfg)
+        W = min(cfg.window or 1024, cache_len)
+        kvshape = lambda n, s: (n, batch, s, cfg.n_kv, cfg.head_dim)
+        cache = {
+            "local_k": jnp.zeros((nb, per - 1) + kvshape(1, W)[1:], dtype),
+            "local_v": jnp.zeros((nb, per - 1) + kvshape(1, W)[1:], dtype),
+            "global_k": jnp.zeros(kvshape(nb, cache_len), dtype),
+            "global_v": jnp.zeros(kvshape(nb, cache_len), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        if tail:
+            cache["tail_k"] = jnp.zeros(kvshape(tail, W), dtype)
+            cache["tail_v"] = jnp.zeros(kvshape(tail, W), dtype)
+        return cache
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    kv = ("layers", "cache_batch", "cache_seq", "cache_kv_heads", None)
+    if cfg.local_global_pattern > 0:
+        lkv = ("layers", None, "cache_batch", None, "cache_kv_heads", None)
+        axes = {"local_k": lkv, "local_v": lkv,
+                "global_k": kv, "global_v": kv, "pos": ()}
+        if _lg_structure(cfg)[2]:
+            tkv = ("layers", "cache_batch", None, "cache_kv_heads", None)
+            axes["tail_k"] = tkv
+            axes["tail_v"] = tkv
+        return axes
+    return {"k": kv, "v": kv, "pos": ()}
+
+
+def _decode_layer_ring(cfg, lp, x, ck, cv, pos, theta, window):
+    """Windowed decode with a ring-buffer cache (slot = pos % W)."""
+    dims = attn_dims(cfg)
+    B = x.shape[0]
+    h = L.rms_norm(x, lp["ln1"])
+    q, k, v = L._project_qkv(lp["attn"], h, h, dims)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q = L.rope(q, positions, theta)
+    k = L.rope(k, positions, theta)
+    W = ck.shape[1]
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    s = jnp.arange(W, dtype=jnp.int32)
+    kv_pos = pos - ((pos - s) % W)
+    valid = (kv_pos >= 0) & (kv_pos <= pos) & (pos - kv_pos < window)
+    bias = jnp.where(valid, 0.0, -1e30)[None, :]
+    out = L._sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), bias, dims)
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, -1),
+                   lp["attn"]["wo"].astype(x.dtype))
+    x = x + y
+    x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"]), cfg.act)
+    return x, ck, cv
+
+
+def _decode_layer_full(cfg, lp, x, ck, cv, pos, theta, window):
+    """Full-length decode against a sequence-sharded cache."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    h = L.rms_norm(x, lp["ln1"])
+    a, nc = L.attention(
+        lp["attn"], h, attn_dims(cfg), positions=positions, rope_theta=theta,
+        window=window, cache={"k": ck, "v": cv}, cache_pos=pos,
+    )
+    x = x + a
+    x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"]), cfg.act)
+    return x, nc["k"], nc["v"]
+
+
+def _decode_step_lg(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    """Decode for local:global interleaves with window-capped local caches."""
+    B, S = tokens.shape
+    assert S == 1
+    nb, per, tail = _lg_structure(cfg)
+    n_local = per - 1
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    local_theta = cfg.rope_theta
+    global_theta = cfg.rope_theta_global or cfg.rope_theta
+    W = cfg.window or 1024
+
+    main = jax.tree.map(lambda t: t[: nb * per].reshape(nb, per, *t.shape[1:]),
+                        params["layers"])
+
+    def inner(x, lin):
+        lpp, ck, cv = lin
+        x, nk, nv = _decode_layer_ring(cfg, lpp, x, ck, cv, pos, local_theta, W)
+        return x, (nk, nv)
+
+    def body(x, inp):
+        sbp, lk, lv, gk, gv = inp
+        local_p = jax.tree.map(lambda t: t[:n_local], sbp)
+        x, (nlk, nlv) = jax.lax.scan(inner, x, (local_p, lk, lv))
+        global_p = jax.tree.map(lambda t: t[n_local], sbp)
+        x, ngk, ngv = _decode_layer_full(cfg, global_p, x, gk, gv, pos,
+                                         global_theta, 0)
+        return x, (nlk, nlv, ngk, ngv)
+
+    x, (nlk, nlv, ngk, ngv) = jax.lax.scan(
+        body, x,
+        (main, cache["local_k"], cache["local_v"],
+         cache["global_k"], cache["global_v"]))
+    new_cache = {"local_k": nlk, "local_v": nlv, "global_k": ngk,
+                 "global_v": ngv, "pos": pos + 1}
+    if tail:
+        ntk, ntv = [], []
+        for i in range(tail):
+            lpp = jax.tree.map(lambda t: t[nb * per + i], params["layers"])
+            x, nk, nv = _decode_layer_ring(
+                cfg, lpp, x, cache["tail_k"][i], cache["tail_v"][i], pos,
+                local_theta, W)
+            ntk.append(nk)
+            ntv.append(nv)
+        new_cache["tail_k"] = jnp.stack(ntk)
+        new_cache["tail_v"] = jnp.stack(ntv)
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = logits_fn(params, cfg, hidden)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    """One decode step.  tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    if cfg.local_global_pattern > 0:
+        return _decode_step_lg(params, cfg, cache, tokens)
+    B, S = tokens.shape
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(pos[None, None] + jnp.arange(S, dtype=jnp.int32), (B, S)) \
+        if pos.ndim == 0 else pos
+    windows, thetas = layer_schedule(cfg)
+
+    def body(x, inp):
+        lp, w, th, ck, cv = inp
+        h = L.rms_norm(x, lp["ln1"])
+        a, new_c = L.attention(
+            lp["attn"], h, attn_dims(cfg),
+            positions=positions, rope_theta=th, window=w,
+            cache={"k": ck, "v": cv}, cache_pos=cache["pos"],
+        )
+        x = x + a
+        h = L.rms_norm(x, lp["ln2"])
+        x = x + L.mlp(lp["mlp"], h, cfg.act)
+        return x, (new_c["k"], new_c["v"])
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], windows, thetas, cache["k"], cache["v"]))
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = logits_fn(params, cfg, hidden)
+    new_cache = {"k": nk, "v": nv, "pos": cache["pos"] + S}
+    return logits, new_cache
+
+
+def _ring_gather_idx(S: int, W: int):
+    """Static gather indices mapping ring slot s -> the position in the last
+    W tokens whose ring slot is s (slot = pos % W)."""
+    import numpy as np
+
+    s = np.arange(W)
+    return (S - W) + ((s - (S % W)) % W)
+
+
+def _prefill_lg(params, cfg: ArchConfig, tokens: jnp.ndarray):
+    """Prefill for local:global interleaves; local caches capped at the
+    window (ring layout matching _decode_layer_ring)."""
+    B, S = tokens.shape
+    nb, per, tail = _lg_structure(cfg)
+    n_local = per - 1
+    W = cfg.window or 1024
+    assert S >= W, (S, W)
+    ring_idx = jnp.asarray(_ring_gather_idx(S, W))
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    use_chunked = S >= cfg.attn_chunk_threshold
+    dims = attn_dims(cfg)
+    local_theta = cfg.rope_theta
+    global_theta = cfg.rope_theta_global or cfg.rope_theta
+
+    def layer(x, lp, w, th):
+        h = L.rms_norm(x, lp["ln1"])
+        a, (k, v) = L.attention(lp["attn"], h, dims, positions=positions,
+                                rope_theta=th, window=w, use_chunked=use_chunked,
+                                return_kv=True)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"]), cfg.act)
+        return shard(x, "act_batch", "act_seq", "act_embed"), k, v
+
+    def inner(x, lpp):
+        x, k, v = layer(x, lpp, W, local_theta)
+        # keep only the live window, in ring layout
+        rk = jnp.take(k, ring_idx, axis=1).astype(cfg.compute_dt)
+        rv = jnp.take(v, ring_idx, axis=1).astype(cfg.compute_dt)
+        return x, (rk, rv)
+
+    def body(x, sbp):
+        local_p = jax.tree.map(lambda t: t[:n_local], sbp)
+        x, (lk, lv) = jax.lax.scan(inner, x, local_p)
+        global_p = jax.tree.map(lambda t: t[n_local], sbp)
+        x, gk, gv = layer(x, global_p, 0, global_theta)
+        return x, (lk, lv, gk.astype(cfg.compute_dt), gv.astype(cfg.compute_dt))
+
+    main = jax.tree.map(lambda t: t[: nb * per].reshape(nb, per, *t.shape[1:]),
+                        params["layers"])
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, (lk, lv, gk, gv) = jax.lax.scan(body_fn, x, main)
+    cache = {"local_k": lk, "local_v": lv, "global_k": gk, "global_v": gv,
+             "pos": jnp.asarray(S, jnp.int32)}
+    if tail:
+        tks, tvs = [], []
+        for i in range(tail):
+            lpp = jax.tree.map(lambda t: t[nb * per + i], params["layers"])
+            x, (rk, rv) = inner(x, lpp)
+            tks.append(rk)
+            tvs.append(rv)
+        cache["tail_k"] = jnp.stack(tks)
+        cache["tail_v"] = jnp.stack(tvs)
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = logits_fn(params, cfg, hidden[:, -1:, :])
+    return logits, cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray):
+    """Full-sequence prefill: returns (last-token logits, filled cache)."""
+    if cfg.local_global_pattern > 0:
+        return _prefill_lg(params, cfg, tokens)
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    windows, thetas = layer_schedule(cfg)
+    use_chunked = S >= cfg.attn_chunk_threshold
+    dims = attn_dims(cfg)
+
+    def body(x, inp):
+        lp, w, th = inp
+        h = L.rms_norm(x, lp["ln1"])
+        a, (k, v) = L.attention(
+            lp["attn"], h, dims,
+            positions=positions, rope_theta=th, window=w, use_chunked=use_chunked,
+            return_kv=True,
+        )
+        x = x + a
+        h2 = L.rms_norm(x, lp["ln2"])
+        x = x + L.mlp(lp["mlp"], h2, cfg.act)
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        return x, (k.astype(cfg.compute_dt), v.astype(cfg.compute_dt))
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows, thetas))
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = logits_fn(params, cfg, hidden[:, -1:, :])
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def n_params(cfg: ArchConfig) -> int:
+    attn = cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * cfg.d_model
+    mlp_p = 3 * cfg.d_model * cfg.d_ff
+    per_layer = attn + mlp_p + 2 * cfg.d_model
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return cfg.n_layers * per_layer + emb + cfg.d_model
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    return n_params(cfg)

@@ -1,0 +1,246 @@
+"""llama-3.2-vision-11b backbone — llama3-style text stack with gated
+cross-attention layers interleaved every 5th layer (8 cross in 40).
+
+Per the assignment the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, n_img_tokens, d_model).  Cross layers use
+tanh-gated residuals (zero-init, as in the released checkpoints) so the
+backbone starts text-equivalent.
+
+Scan structure: 8 stacked superblocks of (4 self-attn layers + 1 cross
+layer); the inner 4 self layers are themselves a stacked scan.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.train.losses import softmax_cross_entropy
+
+
+def _n_blocks(cfg: ArchConfig):
+    per = cfg.vlm.cross_every
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1  # (superblocks, self layers per block)
+
+
+def _init_cross_layer(rng, cfg: ArchConfig):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn": L.init_attention(k1, cfg.d_model, T.attn_dims(cfg)),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True),
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "kv_norm": jnp.zeros((cfg.d_model,)),
+        "gate_attn": jnp.zeros(()),
+        "gate_mlp": jnp.zeros(()),
+    }
+
+
+def _init_superblock(rng, cfg: ArchConfig):
+    nb, n_self = _n_blocks(cfg)
+    k1, k2 = jax.random.split(rng)
+    self_keys = jax.random.split(k1, n_self)
+    return {
+        "self": jax.vmap(lambda r: T._init_layer(r, cfg))(self_keys),
+        "cross": _init_cross_layer(k2, cfg),
+    }
+
+
+def init(rng, cfg: ArchConfig):
+    nb, _ = _n_blocks(cfg)
+    ks = jax.random.split(rng, 3)
+    keys = jax.random.split(ks[0], nb)
+    params = {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(lambda r: _init_superblock(r, cfg))(keys),
+        "ln_f": jnp.zeros((cfg.d_model,)),
+        "unembed": L.embed_init(ks[2], cfg.vocab, cfg.d_model),
+    }
+    return jax.tree.map(lambda x: x.astype(cfg.param_dt), params)
+
+
+def param_axes(cfg: ArchConfig):
+    # inner self stack adds one more leading stacked axis (superblock, layer)
+    inner = {
+        "attn": {k: (None, None) + v for k, v in L.attention_param_axes(T.attn_dims(cfg)).items()},
+        "mlp": {k: (None, None) + v for k, v in L.mlp_param_axes(True).items()},
+        "ln1": (None, None, "embed"),
+        "ln2": (None, None, "embed"),
+    }
+    cross = {
+        "attn": {k: (None,) + v for k, v in L.attention_param_axes(T.attn_dims(cfg)).items()},
+        "mlp": {k: (None,) + v for k, v in L.mlp_param_axes(True).items()},
+        "ln1": (None, "embed"), "ln2": (None, "embed"), "kv_norm": (None, "embed"),
+        "gate_attn": (None,), "gate_mlp": (None,),
+    }
+    return {
+        "embed": ("vocab", "embed"),
+        "blocks": {"self": inner, "cross": cross},
+        "ln_f": ("embed",),
+        "unembed": ("vocab", "embed"),
+    }
+
+
+def _cross_layer(lp, cfg: ArchConfig, x, img):
+    dims = T.attn_dims(cfg)
+    h = L.rms_norm(x, lp["ln1"])
+    kv = L.rms_norm(img, lp["kv_norm"])
+    a, _ = L.attention(lp["attn"], h, dims, kv_x=kv)
+    x = x + jnp.tanh(lp["gate_attn"].astype(x.dtype)) * a
+    h = L.rms_norm(x, lp["ln2"])
+    x = x + jnp.tanh(lp["gate_mlp"].astype(x.dtype)) * L.mlp(lp["mlp"], h, cfg.act)
+    return shard(x, "act_batch", "act_seq", "act_embed")
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray, img: jnp.ndarray):
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    img = img.astype(cfg.compute_dt)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    use_chunked = S >= cfg.attn_chunk_threshold
+
+    def inner_body(x, lp):
+        return T._layer_body(cfg, x, lp, 0, cfg.rope_theta, positions, use_chunked), ()
+
+    def body(x, sb):
+        x, _ = jax.lax.scan(inner_body, x, sb["self"])
+        x = _cross_layer(sb["cross"], cfg, x, img)
+        return x, ()
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    return L.rms_norm(x, params["ln_f"])
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"], batch["img"])
+    logits = L.unembed(hidden, params["unembed"])
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dt
+    nb, n_self = _n_blocks(cfg)
+    shape = (nb, n_self, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    cross = (nb, batch, cfg.vlm.n_img_tokens, cfg.n_kv, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+        "img_k": jnp.zeros(cross, dtype), "img_v": jnp.zeros(cross, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    kv = ("layers", None, "cache_batch", "cache_seq", "cache_kv_heads", None)
+    ckv = ("layers", "cache_batch", None, "cache_kv_heads", None)
+    return {"k": kv, "v": kv, "img_k": ckv, "img_v": ckv, "pos": ()}
+
+
+def precompute_img_cache(params, cfg: ArchConfig, img: jnp.ndarray):
+    dims = T.attn_dims(cfg)
+
+    def body(_, sb):
+        lp = sb["cross"]
+        kvx = L.rms_norm(img.astype(cfg.compute_dt), lp["kv_norm"])
+        _, (k, v) = L.attention(lp["attn"], kvx[:, :1, :], dims, kv_x=kvx, return_kv=True)
+        return (), (k.astype(cfg.compute_dt), v.astype(cfg.compute_dt))
+
+    _, (ik, iv) = jax.lax.scan(body, (), params["blocks"])
+    return ik, iv
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
+    B, S = tokens.shape
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    positions = jnp.broadcast_to(pos[None, None] + jnp.arange(S, dtype=jnp.int32), (B, S))
+    dims = T.attn_dims(cfg)
+
+    def inner_body(x, inp):
+        lp, ck, cv = inp
+        h = L.rms_norm(x, lp["ln1"])
+        a, nc = L.attention(lp["attn"], h, dims, positions=positions,
+                            rope_theta=cfg.rope_theta,
+                            cache={"k": ck, "v": cv}, cache_pos=pos)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"]), cfg.act)
+        return x, (nc["k"], nc["v"])
+
+    def body(x, inp):
+        sb, ck, cv, ik, iv = inp
+        x, (nk, nv) = jax.lax.scan(inner_body, x, (sb["self"], ck, cv))
+        lp = sb["cross"]
+        h = L.rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["attn"]["wq"].astype(h.dtype))
+        out = L._sdpa(q, ik.astype(q.dtype), iv.astype(q.dtype), None, dims)
+        c = jnp.einsum("bsf,fd->bsd", out.reshape(B, S, cfg.n_heads * cfg.head_dim),
+                       lp["attn"]["wo"].astype(h.dtype))
+        x = x + jnp.tanh(lp["gate_attn"].astype(x.dtype)) * c
+        h = L.rms_norm(x, lp["ln2"])
+        x = x + jnp.tanh(lp["gate_mlp"].astype(x.dtype)) * L.mlp(lp["mlp"], h, cfg.act)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["img_k"], cache["img_v"]))
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = L.unembed(hidden, params["unembed"])
+    return logits, dict(cache, k=nk, v=nv, pos=pos + S)
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray, img: jnp.ndarray = None):
+    """Prefill with self-attn KV caches + precomputed image cross K/V."""
+    B, S = tokens.shape
+    if img is None:
+        img = jnp.zeros((B, cfg.vlm.n_img_tokens, cfg.d_model), cfg.compute_dt)
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    use_chunked = S >= cfg.attn_chunk_threshold
+    dims = T.attn_dims(cfg)
+
+    def inner_body(x, lp):
+        h = L.rms_norm(x, lp["ln1"])
+        a, (k, v) = L.attention(lp["attn"], h, dims, positions=positions,
+                                rope_theta=cfg.rope_theta, use_chunked=use_chunked,
+                                return_kv=True)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], L.rms_norm(x, lp["ln2"]), cfg.act)
+        return x, (k.astype(cfg.compute_dt), v.astype(cfg.compute_dt))
+
+    def body(x, sb):
+        x, (k, v) = jax.lax.scan(inner_body, x, sb["self"])
+        x = _cross_layer(sb["cross"], cfg, x, img)
+        return x, (k, v)
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["blocks"])
+    ik, iv = precompute_img_cache(params, cfg, img)
+    hidden = L.rms_norm(x, params["ln_f"])
+    logits = L.unembed(hidden[:, -1:, :], params["unembed"])
+    cache = {"k": ks, "v": vs, "img_k": ik, "img_v": iv,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def n_params(cfg: ArchConfig) -> int:
+    nb, n_self = _n_blocks(cfg)
+    attn = cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * cfg.d_model
+    mlp_p = 3 * cfg.d_model * cfg.d_ff
+    self_layer = attn + mlp_p + 2 * cfg.d_model
+    cross_layer = attn + mlp_p + 3 * cfg.d_model + 2
+    return nb * (n_self * self_layer + cross_layer) + 2 * cfg.vocab * cfg.d_model + cfg.d_model
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    return n_params(cfg)

@@ -1,0 +1,33 @@
+"""Loss functions: RMSLE (paper §III-C) and cross-entropy for the LM pool."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsle(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Root-mean-squared log error; both inputs must be non-negative."""
+    lp = jnp.log1p(jnp.maximum(pred, 0.0))
+    lt = jnp.log1p(jnp.maximum(target, 0.0))
+    return jnp.sqrt(jnp.mean((lp - lt) ** 2) + 1e-12)
+
+
+def msle(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Squared-log error (RMSLE^2) — a smoother training objective whose
+    gradients match RMSLE direction; benchmarks report true RMSLE."""
+    lp = jnp.log1p(jnp.maximum(pred, 0.0))
+    lt = jnp.log1p(jnp.maximum(target, 0.0))
+    return jnp.mean((lp - lt) ** 2)
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Token-level CE.  logits (..., V) f32/bf16, labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,101 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+The paper's training configuration (§III-C) is SGD with momentum 0.9,
+lr 1e-3, and global-norm gradient clipping at 1.0; the LM architecture pool
+uses AdamW.  Both are implemented as (init, update) pairs over arbitrary
+parameter pytrees, sharding-transparent (states inherit parameter
+shardings under pjit), with optional f32 master state for bf16 params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState], Tuple[Params, OptState]]
+    name: str = "opt"
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def sgd_momentum(lr: float = 1e-3, momentum: float = 0.9, clip_norm: Optional[float] = 1.0) -> Optimizer:
+    """Paper §III-C configuration."""
+
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, params, state):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        new_params = jax.tree.map(lambda p, m: (p - lr * m.astype(p.dtype)).astype(p.dtype), params, mu)
+        return new_params, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update, name="sgd_momentum")
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+    warmup_steps: int = 0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, params, state):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        sched = jnp.minimum(1.0, step.astype(jnp.float32) / max(warmup_steps, 1)) if warmup_steps else 1.0
+        lr_t = lr * sched
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update, name="adamw")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd_momentum":
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

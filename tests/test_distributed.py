@@ -1,0 +1,77 @@
+"""Distribution-layer integration tests on a real (fake-)multi-device mesh.
+
+Runs in a subprocess with 8 host devices so the main test process keeps its
+single-device jax config.  Exercises: sharding rules -> NamedShardings,
+microbatched+compressed train step executing under pjit with FSDP+TP, and
+the seq-sharded decode step.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.registry import get_config
+    from repro.models.api import get_model, make_demo_batch
+    from repro.distributed import sharding as shd
+    from repro.distributed.stepfn import (build_train_step, build_serve_step,
+        params_shardings, opt_state_shardings, cache_shardings)
+    from repro.launch.mesh import make_mesh
+    from repro.train.optim import adamw
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = get_model(cfg)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    opt = adamw(lr=1e-3)
+
+    with mesh, shd.use_sharding(mesh, "train"):
+        p_shard = params_shardings(model, mesh, "train")
+        o_shard = opt_state_shardings(model, opt, mesh, "train")
+        params = jax.jit(model.init, out_shardings=p_shard)(jax.random.PRNGKey(0))
+        opt_state = jax.jit(opt.init, out_shardings=o_shard)(params)
+        step = jax.jit(build_train_step(model, opt, microbatches=2,
+                                        grad_dtype="bfloat16"),
+                       donate_argnums=(0, 1))
+        batch = make_demo_batch(cfg, 8, 32)
+        losses = []
+        for i in range(4):
+            params, opt_state, m = step(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(l) for l in losses), losses
+        assert losses[-1] < losses[0], losses  # same batch -> must descend
+        # params must actually be sharded over the mesh
+        leaf = params["layers"]["mlp"]["w_up"]
+        assert len(leaf.sharding.device_set) == 8
+        print("TRAIN_OK", losses[0], losses[-1])
+
+    with mesh, shd.use_sharding(mesh, "serve"):
+        cache = model.init_cache(8, 32)
+        c_shapes = jax.eval_shape(lambda: model.init_cache(8, 32))
+        c_shard = cache_shardings(model, mesh, "serve", c_shapes)
+        cache = jax.tree.map(lambda x, s: jax.device_put(x, s), cache, c_shard)
+        serve = jax.jit(build_serve_step(model), donate_argnums=(1,))
+        tok = jnp.zeros((8, 1), jnp.int32)
+        for _ in range(3):
+            nxt, cache = serve(params, cache, {"tokens": tok})
+            tok = nxt[:, None]
+        assert int(cache["pos"]) == 3
+        # KV cache sequence axis must be sharded over `model`
+        spec = cache["k"].sharding.spec
+        assert "model" in str(spec), spec
+        print("SERVE_OK", str(spec))
+""")
+
+
+def test_multidevice_train_and_serve():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run([sys.executable, "-c", CHILD], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "TRAIN_OK" in r.stdout and "SERVE_OK" in r.stdout

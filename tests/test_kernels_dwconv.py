@@ -1,0 +1,206 @@
+"""Per-kernel validation: every Pallas variant x every execution path vs the
+pure-jnp oracle, across a shape/dtype sweep (the role of the paper's App. A),
+plus hypothesis property tests on the operator's invariants.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dwconv as dw
+from repro.kernels import ops, ref
+from repro.kernels.common import pad_widths, adjoint_pad_widths
+
+SHAPES = [
+    # (B, H, L, K, padding) — includes the paper's config family (L=K=48),
+    # even/odd K, causal short filters (mamba/RG-LRU), unaligned H and L.
+    (2, 8, 48, 48, "same"),
+    (3, 16, 100, 7, "same"),
+    (2, 4, 200, 4, "causal"),
+    (1, 8, 130, 48, "same"),
+    (2, 3, 48, 5, "same"),
+    (1, 1, 7, 3, "same"),
+    (4, 8, 256, 48, "causal"),
+]
+FWD_VARIANTS = ["row", "block", "naive", "lane"]
+BWDK_VARIANTS = ["accum", "twostage", "naive"]
+SMALL_OPTS = ops.KernelOptions(batch_chunk=2)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES)
+def test_oracles_agree(B, H, L, K, pad):
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    np.testing.assert_allclose(
+        ref.dwconv_fwd_ref(x, k, pad), ref.dwconv_lax_ref(x, k, pad), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES)
+def test_ref_adjoints_match_autodiff(B, H, L, K, pad):
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    _, vjp = jax.vjp(lambda x, k: ref.dwconv_fwd_ref(x, k, pad), x, k)
+    dx_auto, dk_auto = vjp(dy)
+    np.testing.assert_allclose(ref.dwconv_bwd_input_ref(dy, k, pad), dx_auto, atol=1e-4)
+    np.testing.assert_allclose(ref.dwconv_bwd_kernel_ref(x, dy, K, pad), dk_auto, atol=2e-3)
+
+
+@pytest.mark.parametrize("variant", FWD_VARIANTS)
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES)
+def test_fwd_variants_allclose(variant, B, H, L, K, pad):
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    got = dw.run_fwd(x, k, pad, variant=variant)
+    want = ref.dwconv_fwd_ref(x, k, pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", FWD_VARIANTS)
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES[:4])
+def test_bwd_input_variants_allclose(variant, B, H, L, K, pad):
+    dy = _rand((B, H, L), jnp.float32, 2)
+    k = _rand((H, K), jnp.float32, 1)
+    got = dw.run_bwd_input(dy, k, pad, variant=variant)
+    want = ref.dwconv_bwd_input_ref(dy, k, pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", BWDK_VARIANTS)
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES[:5])
+def test_bwd_kernel_variants_allclose(variant, B, H, L, K, pad):
+    x = _rand((B, H, L), jnp.float32, 0)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    got = ops.dwconv_bwd_kernel_op(x, dy, K, pad, variant, SMALL_OPTS)
+    want = ref.dwconv_bwd_kernel_ref(x, dy, K, pad)
+    # Parallel-reduction accumulation-order tolerance (paper §V-A).
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("variant", ["row", "block"])
+def test_dtype_sweep(variant, dtype, atol):
+    B, H, L, K = 2, 8, 96, 9
+    x = _rand((B, H, L), dtype, 0)
+    k = _rand((H, K), dtype, 1)
+    got = np.asarray(dw.run_fwd(x, k, "same", variant=variant), np.float32)
+    want = np.asarray(ref.dwconv_fwd_ref(x, k, "same"), np.float32)
+    np.testing.assert_allclose(got, want, atol=atol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("variant", ["xla", "row", "block"])
+def test_custom_vjp_matches_autodiff(variant):
+    x = _rand((2, 8, 64), jnp.float32, 0)
+    k = _rand((8, 5), jnp.float32, 1)
+
+    def loss_custom(x, k):
+        return jnp.sum(jnp.sin(dw.dwconv(x, k, variant=variant)))
+
+    def loss_ref(x, k):
+        return jnp.sum(jnp.sin(ref.dwconv_fwd_ref(x, k)))
+
+    gx, gk = jax.grad(loss_custom, argnums=(0, 1))(x, k)
+    rx, rk = jax.grad(loss_ref, argnums=(0, 1))(x, k)
+    np.testing.assert_allclose(gx, rx, atol=1e-4)
+    np.testing.assert_allclose(gk, rk, atol=1e-3)
+
+
+def test_block_tiling_configs():
+    """Sweep tile shapes: results must be tiling-invariant."""
+    x = _rand((2, 16, 300, ), jnp.float32, 0)
+    k = _rand((16, 11), jnp.float32, 1)
+    want = ref.dwconv_fwd_ref(x, k, "same")
+    for bh in (4, 8, 16):
+        for bt in (128, 256, 512):
+            got = dw.run_fwd(x, k, "same", variant="block",
+                             opts=ops.KernelOptions(block_h=bh, block_t=bt))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                                       err_msg=f"bh={bh} bt={bt}")
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis) on operator invariants
+# ---------------------------------------------------------------------------
+
+dims = st.tuples(
+    st.integers(1, 3),        # B
+    st.integers(1, 12),       # H
+    st.integers(4, 96),       # L
+    st.integers(1, 16),       # K
+    st.sampled_from(["same", "causal"]),
+)
+
+
+@hypothesis.given(dims, st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_linearity(d, seed):
+    """conv(a*x1 + x2, k) == a*conv(x1,k) + conv(x2,k)."""
+    B, H, L, K, pad = d
+    x1 = _rand((B, H, L), jnp.float32, seed)
+    x2 = _rand((B, H, L), jnp.float32, seed + 1)
+    k = _rand((H, K), jnp.float32, seed + 2)
+    a = 0.7
+    lhs = ref.dwconv_fwd_ref(a * x1 + x2, k, pad)
+    rhs = a * ref.dwconv_fwd_ref(x1, k, pad) + ref.dwconv_fwd_ref(x2, k, pad)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+
+
+@hypothesis.given(dims, st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_adjoint_identity(d, seed):
+    """<dy, conv(x,k)> == <x, bwd_input(dy,k)> == <k, bwd_kernel(x,dy)>."""
+    B, H, L, K, pad = d
+    x = _rand((B, H, L), jnp.float32, seed)
+    k = _rand((H, K), jnp.float32, seed + 1)
+    dy = _rand((B, H, L), jnp.float32, seed + 2)
+    a = float(jnp.vdot(dy, ref.dwconv_fwd_ref(x, k, pad)))
+    b = float(jnp.vdot(x, ref.dwconv_bwd_input_ref(dy, k, pad)))
+    c = float(jnp.vdot(k, ref.dwconv_bwd_kernel_ref(x, dy, K, pad)))
+    scale = max(1.0, abs(a))
+    assert abs(a - b) / scale < 1e-3
+    assert abs(a - c) / scale < 1e-3
+
+
+@hypothesis.given(dims, st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_pallas_row_matches_ref(d, seed):
+    B, H, L, K, pad = d
+    x = _rand((B, H, L), jnp.float32, seed)
+    k = _rand((H, K), jnp.float32, seed + 1)
+    got = dw.run_fwd(x, k, pad, variant="row")
+    want = ref.dwconv_fwd_ref(x, k, pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@hypothesis.given(
+    st.integers(1, 2), st.integers(1, 8), st.integers(8, 64), st.integers(1, 8),
+    st.integers(1, 16), st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_causal_shift_equivariance(B, H, L, K, shift, seed):
+    """Causal conv commutes with right-shift (zero-fill), away from the edge."""
+    hypothesis.assume(shift < L)
+    x = _rand((B, H, L), jnp.float32, seed)
+    k = _rand((H, K), jnp.float32, seed + 1)
+    shifted = jnp.pad(x, ((0, 0), (0, 0), (shift, 0)))[:, :, :L]
+    y = ref.dwconv_fwd_ref(x, k, "causal")
+    ys = ref.dwconv_fwd_ref(shifted, k, "causal")
+    y_shift = jnp.pad(y, ((0, 0), (0, 0), (shift, 0)))[:, :, :L]
+    # Positions < shift + K - 1 see the zero boundary; compare beyond it.
+    lo = min(L, shift + K - 1)
+    np.testing.assert_allclose(ys[:, :, lo:], y_shift[:, :, lo:], atol=1e-4)
+
+
+def test_padding_width_math():
+    assert pad_widths(48, "same") == (24, 23)
+    assert pad_widths(47, "same") == (23, 23)
+    assert pad_widths(4, "causal") == (3, 0)
+    assert adjoint_pad_widths(48, "same") == (23, 24)

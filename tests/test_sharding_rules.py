@@ -1,0 +1,65 @@
+"""Unit tests for the logical-axis sharding rule engine, including the
+divisibility-aware fallback that drives §Perf pair D."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    LONG_SERVE_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    logical_to_spec,
+    spec_for_axes,
+)
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_basic_mapping(mesh):
+    spec = logical_to_spec(("act_batch", "act_seq", "act_embed"), TRAIN_RULES,
+                           mesh, (8, 16, 32))
+    # pod missing from this mesh -> only data survives for act_batch
+    assert spec == P("data", None, None)
+
+
+def test_no_duplicate_mesh_axes(mesh):
+    # act_heads takes `model`; act_attn_q must NOT reuse it
+    spec = logical_to_spec(("act_batch", "act_heads", "act_attn_q", None),
+                           TRAIN_RULES, mesh, (8, 16, 4096, 4096))
+    assert spec == P("data", "model", None, None)
+
+
+def test_divisibility_fallback_to_seq(mesh):
+    # 14 heads on a 16-wide model axis: heads cannot shard -> the
+    # query-sequence dim claims `model` instead (pair D mechanism).
+    big = make_mesh((1, 16), ("data", "model")) if jax.device_count() >= 16 else None
+    if big is None:
+        # emulate with shape math on the 1x1 mesh by checking the rule order
+        spec = logical_to_spec(("act_batch", "act_heads", "act_attn_q", None),
+                               TRAIN_RULES, mesh, (8, 14, 4096, 4096))
+        # on a 1-wide axis everything divides; heads keep it
+        assert spec == P("data", "model", None, None)
+        return
+    spec = logical_to_spec(("act_batch", "act_heads", "act_attn_q", None),
+                           TRAIN_RULES, big, (8, 14, 4096, 4096))
+    assert spec == P("data", None, "model", None)
+
+
+def test_non_divisible_dim_left_unsharded(mesh):
+    spec = spec_for_axes(("vocab", "embed"), mesh, "train", (50280, 64))
+    assert spec.spec[1] == "data" or spec.spec[1] is None
+
+
+def test_serve_rules_shard_cache_seq():
+    assert SERVE_RULES["cache_seq"] == "model"
+    assert LONG_SERVE_RULES["cache_seq"] == ("data", "model")
+    assert SERVE_RULES["embed"] == "data"  # 2D weight sharding at serve
+
+
+def test_missing_rule_is_replicated(mesh):
+    spec = logical_to_spec(("nonexistent_axis", None), TRAIN_RULES, mesh, (4, 4))
+    assert spec == P(None, None)
