@@ -17,13 +17,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import paper_table2, paper_table3, paper_roofline, paper_validation
-    from benchmarks import roofline_table, s4convd_e2e
+    from benchmarks import paper_autotune, roofline_table, s4convd_e2e
 
     modules = [
         ("paper_table2", paper_table2),
         ("paper_table3", paper_table3),
         ("paper_roofline", paper_roofline),
         ("paper_validation", paper_validation),
+        ("paper_autotune", paper_autotune),
         ("s4convd_e2e", s4convd_e2e),
         ("roofline_table", roofline_table),
     ]

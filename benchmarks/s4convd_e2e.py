@@ -23,23 +23,32 @@ class Row:
     derived: str
 
 
-def run(fast: bool = False) -> List[Row]:
-    cfg = s4convd.S4ConvDConfig(H=64, N=8, n_blocks=2, L=48, K=48, conv_variant="xla")
+def run(fast: bool = False, variant: str = "xla") -> List[Row]:
+    cfg = s4convd.S4ConvDConfig(H=64, N=8, n_blocks=2, L=48, K=48)
     data = GEP3Config(n_buildings=16, n_hours=400 if fast else 800)
     res = train(
         cfg, data, batch_size=256, epochs=2 if fast else 3,
         max_steps_per_epoch=8 if fast else 20,
+        conv_variant=variant,
     )
     rows = [
-        Row("s4convd_e2e/steady_epoch", res.steady_epoch_time_s * 1e6,
+        Row(f"s4convd_e2e/{variant}/steady_epoch", res.steady_epoch_time_s * 1e6,
             f"loss_first={res.epoch_losses[0]:.4f} loss_last={res.epoch_losses[-1]:.4f} "
             f"dev_rmsle={res.dev_rmsle:.4f}"),
     ]
     assert res.epoch_losses[-1] < res.epoch_losses[0], "training must converge"
-    rows.append(Row("s4convd_e2e/convergence", 0.0, "loss decreases REPRODUCED"))
+    rows.append(Row(f"s4convd_e2e/{variant}/convergence", 0.0, "loss decreases REPRODUCED"))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="xla",
+                    choices=["xla", "row", "block", "lane", "naive", "auto"],
+                    help='"auto" trains on the tuning cache\'s per-shape winner')
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    for r in run(fast=args.fast, variant=args.variant):
         print(f"{r.name},{r.us_per_call:.1f},{r.derived}")

@@ -17,7 +17,7 @@ from repro.train.s4_trainer import train
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", default="xla",
-                    choices=["xla", "row", "block", "lane", "naive"])
+                    choices=["xla", "row", "block", "lane", "naive", "auto"])
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--H", type=int, default=128)

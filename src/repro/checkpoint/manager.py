@@ -110,7 +110,10 @@ class CheckpointManager:
             except BaseException as e:  # surfaced on next wait()
                 self._last_error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        # Non-daemon: an in-flight save must survive an orderly process exit
+        # (sys.exit during the next step) — otherwise a checkpoint the loop
+        # already considers taken is silently lost and restart re-does work.
+        self._thread = threading.Thread(target=work, daemon=False)
         self._thread.start()
 
     def wait(self):

@@ -7,6 +7,9 @@ a one-argument switch anywhere in the framework.
 
   variant='xla'   : pure-jnp (SPMD-friendly; the default inside models)
   variant='row' / 'block' / 'lane' / 'naive' : Pallas TPU kernels
+  variant='auto'  : per-shape dispatch through the persistent tuning cache
+                    (see ``repro.tuning``); untuned shapes fall back to the
+                    'row'/'accum' defaults
 """
 from __future__ import annotations
 
@@ -66,26 +69,27 @@ def dwconv(
     """
     if x.ndim != 3 or k.ndim != 2 or x.shape[1] != k.shape[0]:
         raise ValueError(f"bad shapes x={x.shape} k={k.shape}")
-    return _dwconv(x, k, padding, variant, opts or ops.DEFAULT_OPTS)
+    # opts=None flows through so variant='auto' can apply cached tiling.
+    return _dwconv(x, k, padding, variant, opts)
 
 
 # Convenience aliases used by the operator-study benchmarks: run a single
 # execution path under a named variant without autodiff plumbing.
-def run_fwd(x, k, padding="same", variant="row", opts=ops.DEFAULT_OPTS):
+def run_fwd(x, k, padding="same", variant="row", opts=None):
     spec = get_variant(variant)
     if spec.fwd == "xla":
         return ref.dwconv_fwd_ref(x, k, padding)
     return ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts)
 
 
-def run_bwd_input(dy, k, padding="same", variant="row", opts=ops.DEFAULT_OPTS):
+def run_bwd_input(dy, k, padding="same", variant="row", opts=None):
     spec = get_variant(variant)
     if spec.bwd_in == "xla":
         return ref.dwconv_bwd_input_ref(dy, k, padding)
     return ops.dwconv_bwd_input_op(dy, k, padding, spec.bwd_in, opts)
 
 
-def run_bwd_kernel(x, dy, K, padding="same", variant="row", opts=ops.DEFAULT_OPTS):
+def run_bwd_kernel(x, dy, K, padding="same", variant="row", opts=None):
     spec = get_variant(variant)
     if spec.bwd_k == "xla":
         return ref.dwconv_bwd_kernel_ref(x, dy, K, padding)

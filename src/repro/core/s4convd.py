@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dwconv import dwconv
-from repro.kernels.ops import DEFAULT_OPTS, KernelOptions
+from repro.kernels.ops import KernelOptions
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,8 +41,9 @@ class S4ConvDConfig:
     n_blocks: int = 4
     dropout: float = 0.01
     padding: str = "same"          # paper eq. (7)-(8) convention
-    conv_variant: str = "xla"      # the study axis: naive/lane/block/row/xla
-    kernel_opts: KernelOptions = DEFAULT_OPTS
+    conv_variant: str = "xla"      # study axis: naive/lane/block/row/xla/auto
+    # None lets variant="auto" apply cached tiling (explicit opts override it)
+    kernel_opts: Optional[KernelOptions] = None
 
     @property
     def param_count_estimate(self) -> int:
@@ -60,9 +61,14 @@ def _init_block(rng: jax.Array, cfg: S4ConvDConfig) -> Dict[str, jnp.ndarray]:
     # frequency adjustment (S4ConvD): learnable multiplicative detuning
     freq_scale = jnp.ones((H, N)) + 0.01 * jax.random.normal(k1, (H, N))
     c = jax.random.normal(k2, (H, N, 2)) / math.sqrt(N)  # complex C as (re, im)
-    # adaptive timescale: log-uniform Delta in [1e-3, 1e-1] per channel
+    # Adaptive timescale (S4ConvD): log-uniform Delta per channel, with the
+    # range tied to the kernel support K so even the slowest channel's modes
+    # decay across the materialized filter (|A_re| * dt_min * K ~ 0.5).  The
+    # classic S4D range [1e-3, 1e-1] assumes L ~ 1e3; for the paper's short
+    # K = 48 filters it leaves kernels effectively non-decaying.
+    dt_min, dt_max = 1.0 / cfg.K, 10.0 / cfg.K
     u = jax.random.uniform(k3, (H,))
-    log_dt = u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3)
+    log_dt = u * (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min)
     w_out = jax.random.normal(k4, (H, H)) / math.sqrt(H)
     return {
         "log_a_real": log_a_real,

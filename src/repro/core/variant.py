@@ -48,6 +48,14 @@ REGISTRY: Dict[str, VariantSpec] = {
             "pure-jnp reference lowered by XLA (the PyTorch-reference role: "
             "numerical oracle + SPMD-friendly production path)",
         ),
+        VariantSpec(
+            "auto", "auto", "auto", "auto",
+            "per-shape dispatch through the persistent tuning cache "
+            "(repro.tuning): each execution path runs the counter-free "
+            "autotuner's winner for the current (B, H, L, K, dtype, "
+            "backend), falling back to the 'row'/'accum' defaults when the "
+            "shape has not been tuned",
+        ),
     ]
 }
 

@@ -9,21 +9,40 @@ entry points to ``dwconv_fwd.py`` / ``dwconv_bwdk.py``.
 ``interpret=None`` auto-selects: compiled on TPU, interpret mode elsewhere
 (this container is CPU-only, so tests/benches run the kernel bodies in
 interpret mode — the validation regime prescribed for this build).
+
+``variant="auto"`` (or ``opts=None`` with it) consults the persistent tuning
+cache written by ``repro.tuning`` (keyed on execution path + static shape +
+padding + dtype + backend) and dispatches the cached winner — implementation variant
+*and* tiling — falling back to the historical defaults (``row`` / ``accum``
+with ``DEFAULT_OPTS``) when no entry exists.  Resolution happens at trace
+time from static shapes, so jitted callers pay a dict lookup once per
+compilation, never per step.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dwconv_bwdk, dwconv_fwd
-from repro.kernels.common import LANE, Padding, adjoint_pad_widths, cdiv, pad_widths, round_up
+from repro.kernels import dwconv_bwdk, dwconv_fwd, ref
+from repro.kernels.common import (
+    LANE,
+    DWConvDims,
+    Padding,
+    adjoint_pad_widths,
+    cdiv,
+    pad_widths,
+    round_up,
+)
 
 FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
 BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
+
+# Pre-autotuner hard-coded choices, kept as the no-cache-entry fallback.
+AUTO_FALLBACK = {"fwd": "row", "bwd_in": "row", "bwd_k": "accum"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +61,51 @@ class KernelOptions:
 
 
 DEFAULT_OPTS = KernelOptions()
+
+
+def resolve_variant(
+    path: str,
+    variant: str,
+    opts: Optional[KernelOptions],
+    *,
+    B: int,
+    H: int,
+    L: int,
+    K: int,
+    dtype,
+    padding: Padding = "same",
+) -> Tuple[str, KernelOptions]:
+    """Resolve ``variant="auto"`` / ``opts=None`` through the tuning cache.
+
+    Explicit ``opts`` always wins over cached tiling (the caller asked for
+    it); a cached entry decides the variant and, absent explicit opts, the
+    tiling; with no cache entry the pre-autotuner defaults apply.
+    """
+    if variant != "auto":
+        return variant, (opts if opts is not None else DEFAULT_OPTS)
+    from repro.tuning import cache as _tuning_cache  # deferred: tuning imports ops
+    from repro.tuning import space as _tuning_space
+
+    entry = _tuning_cache.lookup(
+        path=path, B=B, H=H, L=L, K=K,
+        dtype=jnp.dtype(dtype).name, backend=jax.default_backend(),
+        padding=padding,
+    )
+    if entry is None:
+        return AUTO_FALLBACK[path], (opts if opts is not None else DEFAULT_OPTS)
+    if opts is None:
+        return entry.variant, entry.options()
+    # The cache tuned (variant, tiling) together; pairing its variant with
+    # caller tiling can violate that variant's kernel asserts (e.g. a 'lane'
+    # winner with an unaligned explicit block_t).  Keep the caller's opts —
+    # they asked for them — and drop to the always-safe fallback variant
+    # whenever the combination is illegal.
+    cand = _tuning_space.Candidate(
+        path=path, variant=entry.variant,
+        block_h=opts.block_h, block_t=opts.block_t, batch_chunk=opts.batch_chunk)
+    if _tuning_space.is_legal(cand, DWConvDims(B=B, H=H, L=L, K=K, padding=padding))[0]:
+        return entry.variant, opts
+    return AUTO_FALLBACK[path], opts
 
 
 def _pad_channels(a: jnp.ndarray, H: int, Hb: int, axis: int) -> jnp.ndarray:
@@ -102,10 +166,17 @@ def dwconv_fwd_op(
     k: jnp.ndarray,
     padding: Padding = "same",
     variant: str = "row",
-    opts: KernelOptions = DEFAULT_OPTS,
+    opts: Optional[KernelOptions] = None,
 ) -> jnp.ndarray:
-    """y[b,h,t] = sum_j x_pad[b,h,t+j] k[h,j]."""
-    p_left, _ = pad_widths(k.shape[-1], padding)
+    """y[b,h,t] = sum_j x_pad[b,h,t+j] k[h,j].  ``variant="auto"`` dispatches
+    the tuned (variant, tiling) for this shape; ``"xla"`` runs the reference."""
+    B, H, L = x.shape
+    K = k.shape[-1]
+    variant, opts = resolve_variant("fwd", variant, opts, B=B, H=H, L=L, K=K,
+                                    dtype=x.dtype, padding=padding)
+    if variant == "xla":
+        return ref.dwconv_fwd_ref(x, k, padding)
+    p_left, _ = pad_widths(K, padding)
     return _fwd_impl(x, k, p_left, variant, opts)
 
 
@@ -114,11 +185,17 @@ def dwconv_bwd_input_op(
     k: jnp.ndarray,
     padding: Padding = "same",
     variant: str = "row",
-    opts: KernelOptions = DEFAULT_OPTS,
+    opts: Optional[KernelOptions] = None,
 ) -> jnp.ndarray:
     """dx: flipped-filter correlation under adjoint padding (same kernels as
     the forward path — the structural symmetry the paper exploits)."""
-    p_left, _ = adjoint_pad_widths(k.shape[-1], padding)
+    B, H, L = dy.shape
+    K = k.shape[-1]
+    variant, opts = resolve_variant("bwd_in", variant, opts, B=B, H=H, L=L, K=K,
+                                    dtype=dy.dtype, padding=padding)
+    if variant == "xla":
+        return ref.dwconv_bwd_input_ref(dy, k, padding)
+    p_left, _ = adjoint_pad_widths(K, padding)
     return _fwd_impl(dy, k[:, ::-1], p_left, variant, opts)
 
 
@@ -161,22 +238,28 @@ def dwconv_bwd_kernel_op(
     K: int,
     padding: Padding = "same",
     variant: str = "accum",
-    opts: KernelOptions = DEFAULT_OPTS,
+    opts: Optional[KernelOptions] = None,
 ) -> jnp.ndarray:
-    """dk[h,j] = sum_{b,t} dy[b,h,t] x_pad[b,h,t+j].  Returns f32 (H, K)."""
+    """dk[h,j] = sum_{b,t} dy[b,h,t] x_pad[b,h,t+j].  Returns f32 (H, K)
+    (the ``"xla"`` reference returns x.dtype; callers cast to the param dtype)."""
+    B, H, L = x.shape
+    variant, opts = resolve_variant("bwd_k", variant, opts, B=B, H=H, L=L, K=K,
+                                    dtype=x.dtype, padding=padding)
+    if variant == "xla":
+        return ref.dwconv_bwd_kernel_ref(x, dy, K, padding)
     return _bwdk_impl(x, dy, K, padding, variant, opts)
 
 
 @functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))
-def dwconv_fwd_jit(x, k, padding="same", variant="row", opts=DEFAULT_OPTS):
+def dwconv_fwd_jit(x, k, padding="same", variant="row", opts=None):
     return dwconv_fwd_op(x, k, padding, variant, opts)
 
 
 @functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))
-def dwconv_bwd_input_jit(dy, k, padding="same", variant="row", opts=DEFAULT_OPTS):
+def dwconv_bwd_input_jit(dy, k, padding="same", variant="row", opts=None):
     return dwconv_bwd_input_op(dy, k, padding, variant, opts)
 
 
 @functools.partial(jax.jit, static_argnames=("K", "padding", "variant", "opts"))
-def dwconv_bwd_kernel_jit(x, dy, K, padding="same", variant="accum", opts=DEFAULT_OPTS):
+def dwconv_bwd_kernel_jit(x, dy, K, padding="same", variant="accum", opts=None):
     return dwconv_bwd_kernel_op(x, dy, K, padding, variant, opts)

@@ -8,20 +8,28 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # ``axis_types`` only exists on newer jax; Auto is the default there, so
+    # passing nothing on older versions (0.4.x has no jax.sharding.AxisType)
+    # is semantically identical.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi-pod adds a leading pod axis (2 pods =
     512 chips).  The ``pod`` axis carries only gradient all-reduces (DCN);
     ``data``/``model`` collectives stay on ICI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/elastic restarts (e.g. (2,4) on 8 devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(tuple(shape), tuple(axes))
 
 
 def describe(mesh) -> str:

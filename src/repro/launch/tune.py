@@ -1,0 +1,114 @@
+"""Autotuning CLI — counter-free per-shape kernel selection.
+
+  PYTHONPATH=src python -m repro.launch.tune --shapes paper --budget 50
+  PYTHONPATH=src python -m repro.launch.tune --shapes paper --budget 20 --fast
+  PYTHONPATH=src python -m repro.launch.tune --shapes 64x128x48x48 --search hillclimb
+
+Workflow (see ``repro.tuning``): enumerate the legal candidate space, rank
+it with the analytical traffic/roofline model, measure only the top
+survivors with the paper's §III-F event-style timing, and persist winners
+into the tuning cache (``REPRO_TUNE_CACHE`` or ``results/tuning/cache.json``)
+that ``variant="auto"`` dispatch reads.
+
+``--shapes`` accepts comma-separated presets and/or explicit ``BxHxLxK``
+quads.  Preset ``paper`` is the paper's (16384, 128, 48, 48) study shape;
+``--fast`` (CI / CPU-interpret regime) swaps it for the benchmark harness's
+reduced-batch geometry (64, 128, 48, 48) and trims measurement iterations —
+interpret mode executes kernel bodies in Python, so full-batch metering on
+CPU is not meaningful, exactly as in ``benchmarks/paper_table2.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+from repro.kernels.common import DWConvDims
+from repro.tuning.cache import TuningCache
+from repro.tuning.space import PAPER_DIMS_CPU, PAPER_DIMS_FULL, PATHS
+from repro.tuning.tuner import tune_path
+
+PRESETS = {
+    "paper": PAPER_DIMS_FULL,
+    "paper-cpu": PAPER_DIMS_CPU,
+}
+
+
+def parse_shapes(spec: str, fast: bool) -> List[DWConvDims]:
+    out: List[DWConvDims] = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if tok in PRESETS:
+            d = PRESETS[tok]
+            if fast and tok == "paper":
+                d = PAPER_DIMS_CPU
+            out.append(d)
+        else:
+            try:
+                b, h, l, k = (int(v) for v in tok.lower().split("x"))
+            except ValueError:
+                raise SystemExit(
+                    f"bad shape {tok!r}: expected a preset {sorted(PRESETS)} or BxHxLxK")
+            out.append(DWConvDims(B=b, H=h, L=l, K=k))
+    if not out:
+        raise SystemExit("no shapes given")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--shapes", default="paper",
+                    help="comma-separated presets (paper, paper-cpu) and/or BxHxLxK")
+    ap.add_argument("--budget", type=int, default=50,
+                    help="total measured candidates per shape (split across paths)")
+    ap.add_argument("--paths", default=",".join(PATHS),
+                    help=f"execution paths to tune (default {','.join(PATHS)})")
+    ap.add_argument("--search", default="grid", choices=["grid", "hillclimb"])
+    ap.add_argument("--dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--cache", default="",
+                    help="cache file (default: $REPRO_TUNE_CACHE or results/tuning/cache.json)")
+    ap.add_argument("--iters", type=int, default=3, help="timing iterations per candidate")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI mode: reduced paper batch, 1 timing iteration")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    shapes = parse_shapes(args.shapes, args.fast)
+    paths = [p.strip() for p in args.paths.split(",") if p.strip()]
+    for p in paths:
+        if p not in PATHS:
+            raise SystemExit(f"unknown path {p!r}; known: {PATHS}")
+    iters = 1 if args.fast else args.iters
+    cache = TuningCache(args.cache) if args.cache else TuningCache()
+    per_path = max(1, args.budget // len(paths))
+
+    print(f"[tune] cache={cache.path} search={args.search} "
+          f"budget={args.budget} ({per_path}/path) dtype={args.dtype}", flush=True)
+    for d in shapes:
+        for path in paths:
+            t0 = time.perf_counter()
+            res = tune_path(
+                d, path,
+                dtype=args.dtype, budget=per_path, search=args.search,
+                warmup=args.warmup, iters=iters, cache=cache,
+                verbose=args.verbose,
+            )
+            e = res.best
+            print(
+                f"[tune] {res.key.encode()}: {e.variant} "
+                f"bh={e.block_h} bt={e.block_t} bc={e.batch_chunk} "
+                f"{e.time_us:.1f}us  (space={res.candidates_considered} "
+                f"measured={res.candidates_measured} in {time.perf_counter() - t0:.1f}s)",
+                flush=True,
+            )
+    print(f"[tune] wrote {len(cache)} entries to {cache.path}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

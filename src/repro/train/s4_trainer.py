@@ -66,7 +66,12 @@ def train(
     optimizer_name: str = "sgd_momentum",
     max_steps_per_epoch: Optional[int] = None,
     log_every: int = 0,
+    conv_variant: Optional[str] = None,
 ) -> TrainResult:
+    """``conv_variant`` overrides ``cfg.conv_variant`` (the study axis) —
+    ``"auto"`` trains on whatever the tuning cache selected for this shape."""
+    if conv_variant is not None:
+        cfg = dataclasses.replace(cfg, conv_variant=conv_variant)
     splits = make_splits(data_cfg)
     optimizer = get_optimizer(optimizer_name)
     rng = jax.random.PRNGKey(seed)

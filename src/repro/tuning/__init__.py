@@ -1,0 +1,42 @@
+"""Counter-free kernel autotuner (paper §III-F methodology as a tuner).
+
+The paper's central result — a 3.26x kernel speedup from re-mapping the same
+operator — is a *per-shape* selection problem: which implementation variant
+and which tile shape win depends on (B, H, L, K, dtype, backend).  This
+package turns the reproduction's fixed choices into a shape-general
+optimization engine with four layers:
+
+  space.py : declarative search space over (variant, block_h, block_t,
+             batch_chunk) per execution path, with the legality constraints
+             of the Pallas kernels lifted into predicates.
+  cost.py  : two-stage cost model — analytical traffic/roofline pre-ranking
+             (``analysis/traffic.py`` + ``analysis/hw.py``) followed by
+             counter-free steady-state measurement of the top survivors
+             (``analysis/timer.time_fn``, the paper's CUDA-event analogue).
+  cache.py : persistent JSON tuning database keyed by
+             (path, B, H, L, K, padding, dtype, backend), versioned,
+             memoized in-process, overridable via ``REPRO_TUNE_CACHE``.
+  tuner.py : grid and greedy-hillclimb search drivers; writes winners into
+             the cache that ``kernels/ops.py`` consults for
+             ``variant="auto"`` dispatch.
+
+CLI: ``python -m repro.launch.tune --shapes paper --budget 50``.
+"""
+from repro.tuning.cache import (  # noqa: F401
+    CACHE_ENV_VAR,
+    CACHE_VERSION,
+    ShapeKey,
+    TuneEntry,
+    TuningCache,
+    default_cache,
+    lookup,
+    reset_default_cache,
+)
+from repro.tuning.cost import analytical_time_s, measure_candidate, rank_candidates  # noqa: F401
+from repro.tuning.space import (  # noqa: F401
+    PATHS,
+    Candidate,
+    is_legal,
+    search_space,
+)
+from repro.tuning.tuner import TuneResult, tune_path, tune_shape  # noqa: F401

@@ -1,0 +1,220 @@
+"""Persistent tuning database for the counter-free autotuner.
+
+A flat JSON file maps shape keys ``(path, B, H, L, K, padding, dtype,
+backend)`` to
+the winning kernel configuration plus the counter-free measurement that
+selected it.  Design points:
+
+  * **versioned**: the file carries ``CACHE_VERSION``; entries written by an
+    incompatible tuner are ignored (never mis-applied) and overwritten on
+    the next save;
+  * **memoized**: one in-process :class:`TuningCache` per resolved file path
+    — ``variant="auto"`` dispatch in ``kernels/ops.py`` costs a dict lookup
+    after the first miss, not file I/O per call;
+  * **overridable**: ``REPRO_TUNE_CACHE=/path/to/cache.json`` redirects both
+    the tuner's writes and auto-dispatch reads (cluster jobs point it at a
+    shared artifact; tests point it at a tmpdir);
+  * **atomic**: writes go to ``<path>.tmp`` then ``os.replace`` so a crashed
+    tuning run never corrupts the database.
+
+The cache stores *decisions*, not timings-as-truth: measured microseconds
+are kept for reporting (``benchmarks/paper_autotune.py``) but dispatch only
+reads the configuration fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.kernels.ops import KernelOptions
+
+CACHE_VERSION = 2  # v2: padding joined the shape key ('same' vs 'causal')
+CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
+# Anchored to the source tree (src/repro/tuning/ -> repo root), not the CWD:
+# a tuner run from the repo root and a training job launched from a scratch
+# directory must resolve the same database.
+DEFAULT_CACHE_PATH = Path(__file__).resolve().parents[3] / "results/tuning/cache.json"
+
+
+def resolve_cache_path(path: Optional[os.PathLike] = None) -> Path:
+    """Explicit argument > ``REPRO_TUNE_CACHE`` env > repo-local default."""
+    if path is not None:
+        return Path(path)
+    env = os.environ.get(CACHE_ENV_VAR)
+    return Path(env) if env else DEFAULT_CACHE_PATH
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeKey:
+    """Identity of one tuned problem: execution path + static shape + regime.
+
+    ``padding`` is part of the identity: 'same' and 'causal' problems with
+    equal dims are measured under different windows and must not share a
+    tuning decision.
+    """
+
+    path: str        # "fwd" | "bwd_in" | "bwd_k"
+    B: int
+    H: int
+    L: int
+    K: int
+    dtype: str       # e.g. "float32", "bfloat16"
+    backend: str     # jax.default_backend(): "cpu" | "tpu" | "gpu"
+    padding: str = "same"
+
+    def encode(self) -> str:
+        return (f"{self.path}/B{self.B}-H{self.H}-L{self.L}-K{self.K}/"
+                f"{self.padding}/{self.dtype}/{self.backend}")
+
+    @classmethod
+    def decode(cls, s: str) -> "ShapeKey":
+        path, dims, padding, dtype, backend = s.split("/")
+        vals = {p[0]: int(p[1:]) for p in dims.split("-")}
+        return cls(path=path, B=vals["B"], H=vals["H"], L=vals["L"], K=vals["K"],
+                   dtype=dtype, backend=backend, padding=padding)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneEntry:
+    """The tuner's decision for one :class:`ShapeKey`."""
+
+    variant: str
+    block_h: int
+    block_t: int
+    batch_chunk: int
+    time_us: float = 0.0          # counter-free steady-state measurement
+    analytical_time_us: float = 0.0
+    source: str = "measured"      # "measured" | "analytical" | "manual"
+
+    def options(self, interpret: Optional[bool] = None) -> KernelOptions:
+        return KernelOptions(
+            block_h=self.block_h,
+            block_t=self.block_t,
+            batch_chunk=self.batch_chunk,
+            interpret=interpret,
+        )
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TuneEntry":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+class TuningCache:
+    """One JSON tuning database (thread-safe; load-once, save-on-put)."""
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = resolve_cache_path(path)
+        self._lock = threading.Lock()
+        self._entries: Dict[str, TuneEntry] = {}
+        self._loaded = False
+
+    # ------------------------------------------------------------------- I/O
+    def _read_disk(self) -> Dict[str, TuneEntry]:
+        """Current on-disk entries (empty on missing/corrupt/stale-version)."""
+        if not self.path.exists():
+            return {}
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return {}  # unreadable/corrupt: treat as empty, next save rewrites
+        if raw.get("version") != CACHE_VERSION:
+            return {}  # incompatible schema: never mis-apply stale decisions
+        out: Dict[str, TuneEntry] = {}
+        for key, ed in raw.get("entries", {}).items():
+            try:
+                out[key] = TuneEntry.from_dict(ed)
+            except TypeError:
+                continue
+        return out
+
+    def _load_locked(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        self._entries.update(self._read_disk())
+
+    def save(self) -> None:
+        with self._lock:
+            self._load_locked()
+            # Re-read and overlay so concurrent tuners sharing one file only
+            # lose on *colliding* keys (last decision wins), never on
+            # disjoint shapes tuned in parallel.
+            merged = self._read_disk()
+            merged.update(self._entries)
+            self._entries = merged
+            payload = {
+                "version": CACHE_VERSION,
+                "entries": {k: e.to_dict() for k, e in sorted(merged.items())},
+            }
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+            tmp.write_text(json.dumps(payload, indent=1))
+            os.replace(tmp, self.path)
+
+    # ------------------------------------------------------------- accessors
+    def get(self, key: ShapeKey) -> Optional[TuneEntry]:
+        with self._lock:
+            self._load_locked()
+            return self._entries.get(key.encode())
+
+    def put(self, key: ShapeKey, entry: TuneEntry, *, persist: bool = True) -> None:
+        with self._lock:
+            self._load_locked()
+            self._entries[key.encode()] = entry
+        if persist:
+            self.save()
+
+    def items(self) -> Dict[ShapeKey, TuneEntry]:
+        with self._lock:
+            self._load_locked()
+            return {ShapeKey.decode(k): e for k, e in self._entries.items()}
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load_locked()
+            return len(self._entries)
+
+    def __bool__(self) -> bool:
+        # An *empty* cache is still a cache — never let `cache or default`
+        # style code silently swap in a different instance.
+        return True
+
+
+# ---------------------------------------------------------------------------
+# process-wide memoized caches (one per resolved file path)
+# ---------------------------------------------------------------------------
+
+_CACHES: Dict[str, TuningCache] = {}
+_CACHES_LOCK = threading.Lock()
+
+
+def default_cache(path: Optional[os.PathLike] = None) -> TuningCache:
+    """The memoized cache for ``path`` (or the env/default location)."""
+    p = str(resolve_cache_path(path))
+    with _CACHES_LOCK:
+        c = _CACHES.get(p)
+        if c is None:
+            c = _CACHES[p] = TuningCache(p)
+        return c
+
+
+def reset_default_cache() -> None:
+    """Drop all memoized caches (tests; or after external file edits)."""
+    with _CACHES_LOCK:
+        _CACHES.clear()
+
+
+def lookup(path: str, B: int, H: int, L: int, K: int, dtype: str,
+           backend: str, padding: str = "same") -> Optional[TuneEntry]:
+    """The single entry point ``kernels/ops.py`` uses for auto dispatch."""
+    return default_cache().get(
+        ShapeKey(path=path, B=B, H=H, L=L, K=K, dtype=dtype, backend=backend,
+                 padding=padding))

@@ -1,0 +1,221 @@
+"""Declarative search space for the depthwise-conv kernel autotuner.
+
+A :class:`Candidate` names, for one execution path, the kernel implementation
+variant plus the tiling knobs :class:`~repro.kernels.ops.KernelOptions`
+understands.  The legality predicates mirror the asserts inside
+``kernels/dwconv_fwd.py`` / ``kernels/dwconv_bwdk.py`` *after* the padding
+``kernels/ops.py`` applies, so every candidate emitted by
+:func:`search_space` is guaranteed to execute:
+
+  * ``naive``/``lane`` fwd kernels require the effective temporal tile
+    ``Lt = min(block_t, Lout)`` to be lane-aligned (``Lt % LANE == 0``);
+  * the ``block`` fwd kernel requires the halo to fit one neighbour tile
+    (``Lt >= K - 1``);
+  * ``H % Hb == 0`` / ``B % Bc == 0`` are discharged by the channel/batch
+    padding in ``ops.py``, so ``block_h`` / ``batch_chunk`` only need to be
+    positive — but values above the dimension are clamped by the kernels,
+    so candidates are *normalized* (clamped + irrelevant knobs pinned to
+    defaults) and deduplicated to keep the space minimal;
+  * staged slabs must fit on-chip memory: the VMEM working-set estimate per
+    grid cell is checked against the hardware model's ``vmem_bytes``.
+
+The same structure generalizes the paper's four-variant study axis: the
+tuner explores exactly the implementations the controlled study compares.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.hw import TPU_V5E, HardwareModel
+from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
+from repro.kernels.ops import KernelOptions
+
+PATHS = ("fwd", "bwd_in", "bwd_k")
+
+# Kernel implementations selectable per path ("xla" = the jnp reference,
+# which is also the SPMD production path — a legitimate tuning outcome).
+FWD_SPACE_VARIANTS = ("row", "block", "lane", "naive", "xla")
+BWDK_SPACE_VARIANTS = ("accum", "twostage", "naive", "xla")
+
+# Tiling lattices (clamped to the problem dims during normalization).
+BLOCK_H_CHOICES = (1, 2, 4, 8, 16, 32)
+BLOCK_T_CHOICES = (128, 256, 512, 1024, 2048)
+BATCH_CHUNK_CHOICES = (8, 16, 32, 64, 128, 256)
+
+# The paper's study shape (B, H, L, K) = (16384, 128, 48, 48) and the
+# CPU-interpret reduction used by the benchmark harness (same geometry,
+# batch cut so interpret-mode measurement stays tractable).
+PAPER_DIMS_FULL = DWConvDims(B=16384, H=128, L=48, K=48)
+PAPER_DIMS_CPU = DWConvDims(B=64, H=128, L=48, K=48)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the per-path search space (hashable, normalized)."""
+
+    path: str            # "fwd" | "bwd_in" | "bwd_k"
+    variant: str         # kernel implementation for that path
+    block_h: int = 8
+    block_t: int = 512
+    batch_chunk: int = 128
+
+    def options(self, interpret: Optional[bool] = None) -> KernelOptions:
+        return KernelOptions(
+            block_h=self.block_h,
+            block_t=self.block_t,
+            batch_chunk=self.batch_chunk,
+            interpret=interpret,
+        )
+
+
+_DEFAULT = Candidate(path="fwd", variant="row")  # source of default knob values
+
+
+def _effective_tiles(c: Candidate, d: DWConvDims) -> Tuple[int, int, int, int]:
+    """(Hb, Lt, Bc, Lout) exactly as ops.py/kernels compute them."""
+    Hb = max(1, min(c.block_h, d.H))
+    Lout = round_up(d.L, LANE)
+    Lt = max(1, min(c.block_t, Lout))
+    Bc = max(1, min(c.batch_chunk, d.B))
+    return Hb, Lt, Bc, Lout
+
+
+def normalize(c: Candidate, d: DWConvDims) -> Candidate:
+    """Clamp knobs to the problem dims and pin knobs the variant ignores.
+
+    Two candidates that resolve to the same executed configuration collapse
+    to the same normalized value, which keeps the measured set minimal.
+    """
+    Hb, Lt, Bc, _ = _effective_tiles(c, d)
+    if c.variant == "xla":  # reference path has no tiling knobs
+        return Candidate(c.path, c.variant, _DEFAULT.block_h,
+                         _DEFAULT.block_t, _DEFAULT.batch_chunk)
+    if c.path in ("fwd", "bwd_in"):
+        if c.variant == "row":  # row stages the whole temporal row: no Lt
+            Lt = _DEFAULT.block_t
+        return Candidate(c.path, c.variant, Hb, Lt, _DEFAULT.batch_chunk)
+    return Candidate(c.path, c.variant, Hb, _DEFAULT.block_t, Bc)
+
+
+def _vmem_working_set_bytes(c: Candidate, d: DWConvDims, itemsize: int) -> int:
+    """Per-grid-cell VMEM staging estimate for the candidate's kernel."""
+    Hb, Lt, Bc, Lout = _effective_tiles(c, d)
+    Wpad = round_up(Lout + d.K - 1, LANE)
+    if c.path in ("fwd", "bwd_in"):
+        if c.variant == "row":
+            return Hb * (Wpad + Lout) * itemsize
+        if c.variant == "block":
+            return Hb * 3 * Lt * itemsize          # cur + halo + out tile
+        return Hb * (Lt + LANE + Lt) * itemsize    # naive/lane scratch + out
+    # bwd_k: both operand slabs staged per (h-block, batch-chunk) cell.
+    return Bc * Hb * (Wpad + d.L) * itemsize
+
+
+def is_legal(
+    c: Candidate,
+    d: DWConvDims,
+    *,
+    itemsize: int = 4,
+    hw: HardwareModel = TPU_V5E,
+) -> Tuple[bool, str]:
+    """Check the kernel asserts (post-ops-padding) for this candidate.
+
+    Returns ``(ok, reason)`` — the reason names the violated constraint so
+    tuner logs stay self-explanatory.
+    """
+    if c.path not in PATHS:
+        return False, f"unknown path {c.path!r}"
+    variants = FWD_SPACE_VARIANTS if c.path in ("fwd", "bwd_in") else BWDK_SPACE_VARIANTS
+    if c.variant not in variants:
+        return False, f"variant {c.variant!r} not applicable to path {c.path!r}"
+    if min(c.block_h, c.block_t, c.batch_chunk) < 1:
+        return False, "tiling knobs must be positive"
+    if c.variant == "xla":
+        return True, "ok"
+
+    Hb, Lt, Bc, Lout = _effective_tiles(c, d)
+    if c.path in ("fwd", "bwd_in"):
+        if c.variant in ("naive", "lane") and Lt % LANE != 0:
+            return False, f"Lt={Lt} not lane-aligned (Lt % {LANE} != 0)"
+        if c.variant == "block" and Lt < d.K - 1:
+            return False, f"halo K-1={d.K - 1} does not fit tile Lt={Lt}"
+    if hw.vmem_bytes:
+        need = _vmem_working_set_bytes(c, d, itemsize)
+        if need > hw.vmem_bytes:
+            return False, f"VMEM working set {need}B > {int(hw.vmem_bytes)}B"
+    return True, "ok"
+
+
+def search_space(
+    d: DWConvDims,
+    path: str,
+    *,
+    variants: Optional[Sequence[str]] = None,
+    block_h_choices: Iterable[int] = BLOCK_H_CHOICES,
+    block_t_choices: Iterable[int] = BLOCK_T_CHOICES,
+    batch_chunk_choices: Iterable[int] = BATCH_CHUNK_CHOICES,
+    include_xla: bool = True,
+    itemsize: int = 4,
+    hw: HardwareModel = TPU_V5E,
+) -> List[Candidate]:
+    """Enumerate the legal, normalized, deduplicated candidates for a path."""
+    if path not in PATHS:
+        raise ValueError(f"unknown path {path!r}; known: {PATHS}")
+    if variants is None:
+        variants = FWD_SPACE_VARIANTS if path in ("fwd", "bwd_in") else BWDK_SPACE_VARIANTS
+    if not include_xla:
+        variants = tuple(v for v in variants if v != "xla")
+
+    seen = set()
+    out: List[Candidate] = []
+    for v, bh, bt, bc in itertools.product(
+        variants, block_h_choices, block_t_choices, batch_chunk_choices
+    ):
+        cand = normalize(Candidate(path, v, bh, bt, bc), d)
+        if cand in seen:
+            continue
+        seen.add(cand)
+        ok, _ = is_legal(cand, d, itemsize=itemsize, hw=hw)
+        if ok:
+            out.append(cand)
+    return out
+
+
+def neighbors(c: Candidate, d: DWConvDims, *, itemsize: int = 4,
+              hw: HardwareModel = TPU_V5E) -> List[Candidate]:
+    """Single-knob moves on the tiling lattice plus variant switches —
+    the move set of the greedy hillclimb driver."""
+    moves: List[Candidate] = []
+    for field, choices in (
+        ("block_h", BLOCK_H_CHOICES),
+        ("block_t", BLOCK_T_CHOICES),
+        ("batch_chunk", BATCH_CHUNK_CHOICES),
+    ):
+        cur = getattr(c, field)
+        ordered = sorted(choices)
+        # The lattice points straddling ``cur``.  For an off-lattice value
+        # (a clamped knob, e.g. block_h=12 on {...8,16...}) BOTH straddling
+        # points are single moves — a nearest±1 scheme would skip one.
+        lo = bisect.bisect_left(ordered, cur)
+        below = ordered[lo - 1] if lo > 0 else None
+        if lo < len(ordered) and ordered[lo] == cur:
+            above = ordered[lo + 1] if lo + 1 < len(ordered) else None
+        else:
+            above = ordered[lo] if lo < len(ordered) else None
+        for nv in (below, above):
+            if nv is not None and nv != cur:
+                moves.append(dataclasses.replace(c, **{field: nv}))
+    variants = FWD_SPACE_VARIANTS if c.path in ("fwd", "bwd_in") else BWDK_SPACE_VARIANTS
+    for v in variants:
+        if v != c.variant:
+            moves.append(dataclasses.replace(c, variant=v))
+    uniq, seen = [], {c}
+    for m in moves:
+        m = normalize(m, d)
+        if m not in seen and is_legal(m, d, itemsize=itemsize, hw=hw)[0]:
+            seen.add(m)
+            uniq.append(m)
+    return uniq

@@ -1,0 +1,160 @@
+"""Search drivers: analytical pre-rank + metered grid / greedy hillclimb.
+
+``tune_path`` optimizes one execution path for one problem shape:
+
+  1. enumerate the legal candidate space (``space.search_space``);
+  2. rank every candidate with the analytical traffic/roofline model
+     (``cost.rank_candidates``) — no execution;
+  3. spend the measurement *budget* only on the analytical front-runners:
+       * ``grid``      — measure the top ``budget`` candidates outright;
+       * ``hillclimb`` — measure the analytical best, then walk single-knob
+         neighbour moves (``space.neighbors``), accepting improvements,
+         until the budget is exhausted or a local optimum is reached;
+  4. write the winner into the persistent tuning cache, where
+     ``variant="auto"`` dispatch (``kernels/ops.py``) picks it up.
+
+This is the TVM-style analytical-model-guided empirical search, built
+entirely from the paper's counter-free measurement apparatus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.hw import TPU_V5E, HardwareModel
+from repro.kernels.common import DWConvDims
+from repro.tuning import cost, space
+from repro.tuning.cache import ShapeKey, TuneEntry, TuningCache, default_cache
+from repro.tuning.space import Candidate
+
+MeasureFn = Callable[[Candidate, DWConvDims], float]
+
+
+@dataclasses.dataclass
+class TuneResult:
+    key: ShapeKey
+    best: TuneEntry
+    candidates_considered: int
+    candidates_measured: int
+    # (candidate, analytical_s, measured_s) for every metered candidate
+    history: List[Tuple[Candidate, float, float]]
+
+    @property
+    def best_candidate(self) -> Candidate:
+        return Candidate(
+            path=self.key.path,
+            variant=self.best.variant,
+            block_h=self.best.block_h,
+            block_t=self.best.block_t,
+            batch_chunk=self.best.batch_chunk,
+        )
+
+
+def _make_key(d: DWConvDims, path: str, dtype: str, backend: Optional[str]) -> ShapeKey:
+    return ShapeKey(
+        path=path, B=d.B, H=d.H, L=d.L, K=d.K, dtype=dtype,
+        backend=backend if backend is not None else jax.default_backend(),
+        padding=d.padding,
+    )
+
+
+def tune_path(
+    d: DWConvDims,
+    path: str,
+    *,
+    dtype: str = "float32",
+    backend: Optional[str] = None,
+    budget: int = 20,
+    search: str = "grid",
+    variants: Optional[Sequence[str]] = None,
+    hw: HardwareModel = TPU_V5E,
+    itemsize: int = 4,
+    measure_fn: Optional[MeasureFn] = None,
+    warmup: int = 1,
+    iters: int = 3,
+    cache: Optional[TuningCache] = None,
+    persist: bool = True,
+    verbose: bool = False,
+) -> TuneResult:
+    """Tune one (shape, path) and record the winner in the cache."""
+    if budget < 1:
+        raise ValueError(f"budget must be >= 1, got {budget}")
+    if measure_fn is None:
+        def measure_fn(c: Candidate, dd: DWConvDims) -> float:
+            return cost.measure_candidate(
+                c, dd, dtype=dtype, warmup=warmup, iters=iters)
+
+    cands = space.search_space(d, path, variants=variants, itemsize=itemsize, hw=hw)
+    ranked = cost.rank_candidates(cands, d, itemsize=itemsize, hw=hw)
+    analytical: Dict[Candidate, float] = dict(ranked)
+
+    measured: Dict[Candidate, float] = {}
+
+    def meter(c: Candidate) -> float:
+        if c not in measured:
+            measured[c] = measure_fn(c, d)
+            if verbose:
+                print(f"  [tune] {c.path}/{c.variant} bh={c.block_h} bt={c.block_t} "
+                      f"bc={c.batch_chunk}: {measured[c] * 1e6:.1f}us "
+                      f"(analytical {analytical.get(c, float('nan')) * 1e6:.1f}us)",
+                      flush=True)
+        return measured[c]
+
+    if search == "grid":
+        for c, _ in ranked[:budget]:
+            meter(c)
+    elif search == "hillclimb":
+        cur = ranked[0][0]
+        meter(cur)
+        improved = True
+        while improved and len(measured) < budget:
+            improved = False
+            moves = space.neighbors(cur, d, itemsize=itemsize, hw=hw)
+            # visit neighbours in analytical order: best-looking moves first
+            moves.sort(key=lambda m: analytical.get(
+                m, cost.analytical_time_s(m, d, itemsize=itemsize, hw=hw)))
+            for m in moves:
+                if len(measured) >= budget:
+                    break
+                if meter(m) < measured[cur]:
+                    cur = m
+                    improved = True
+                    break  # greedy: restart the walk from the new optimum
+    else:
+        raise ValueError(f"unknown search {search!r}; use 'grid' or 'hillclimb'")
+
+    best_c = min(measured, key=measured.get)
+    key = _make_key(d, path, dtype, backend)
+    entry = TuneEntry(
+        variant=best_c.variant,
+        block_h=best_c.block_h,
+        block_t=best_c.block_t,
+        batch_chunk=best_c.batch_chunk,
+        time_us=measured[best_c] * 1e6,
+        analytical_time_us=analytical.get(best_c, 0.0) * 1e6,
+        source="measured",
+    )
+    (cache if cache is not None else default_cache()).put(key, entry, persist=persist)
+    history = [(c, analytical.get(c, 0.0), t) for c, t in measured.items()]
+    history.sort(key=lambda h: h[2])
+    return TuneResult(
+        key=key,
+        best=entry,
+        candidates_considered=len(cands),
+        candidates_measured=len(measured),
+        history=history,
+    )
+
+
+def tune_shape(
+    d: DWConvDims,
+    *,
+    paths: Sequence[str] = space.PATHS,
+    budget: int = 20,
+    **kw,
+) -> Dict[str, TuneResult]:
+    """Tune every execution path of one shape; budget is split across paths."""
+    per_path = max(1, budget // max(len(paths), 1))
+    return {p: tune_path(d, p, budget=per_path, **kw) for p in paths}

@@ -16,6 +16,7 @@ from repro.analysis import (
     time_fn,
 )
 from repro.analysis.hlo import CollectiveOp
+from repro.launch.mesh import make_mesh
 from repro.kernels.common import DWConvDims
 
 PAPER_DIMS = DWConvDims(B=16384, H=128, L=48, K=48)
@@ -99,7 +100,7 @@ def test_analyze_real_compiled_hlo():
     and confirm the parser finds its collectives."""
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     def f(x):

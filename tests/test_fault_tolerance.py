@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager, _flatten, _unflatten_into
+from repro.launch.mesh import make_mesh
 from repro.launch.supervisor import Heartbeat, Supervisor, SupervisorConfig, detect_stragglers
 
 REPO = Path(__file__).resolve().parent.parent
@@ -59,7 +60,7 @@ def test_checkpoint_elastic_remesh(tmp_path):
     current device set (mesh-independence)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     mgr = CheckpointManager(tmp_path)
     t = {"w": jnp.arange(8.0)}
     mgr.save(1, params=t)

@@ -1,9 +1,17 @@
 """Per-kernel validation: every Pallas variant x every execution path vs the
 pure-jnp oracle, across a shape/dtype sweep (the role of the paper's App. A),
 plus hypothesis property tests on the operator's invariants.
+
+``hypothesis`` is an *optional* dev dependency: when it is absent the
+property tests below are skipped, but the deterministic shape-sweep tests
+still run (the tier-1 suite must degrade gracefully, not abort collection).
 """
-import hypothesis
-import hypothesis.strategies as st
+try:  # optional dev dependency (see README "Optional dependencies")
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # property tests skip; deterministic sweeps still run
+    hypothesis = None
+    st = None
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -127,76 +135,79 @@ def test_block_tiling_configs():
 
 
 # ---------------------------------------------------------------------------
-# Property tests (hypothesis) on operator invariants
+# Property tests (hypothesis) on operator invariants — skipped when the
+# optional ``hypothesis`` package is not installed.
 # ---------------------------------------------------------------------------
 
-dims = st.tuples(
-    st.integers(1, 3),        # B
-    st.integers(1, 12),       # H
-    st.integers(4, 96),       # L
-    st.integers(1, 16),       # K
-    st.sampled_from(["same", "causal"]),
-)
+if hypothesis is None:
 
+    def test_property_suite_requires_hypothesis():
+        pytest.skip("hypothesis not installed — property tests skipped")
 
-@hypothesis.given(dims, st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_property_linearity(d, seed):
-    """conv(a*x1 + x2, k) == a*conv(x1,k) + conv(x2,k)."""
-    B, H, L, K, pad = d
-    x1 = _rand((B, H, L), jnp.float32, seed)
-    x2 = _rand((B, H, L), jnp.float32, seed + 1)
-    k = _rand((H, K), jnp.float32, seed + 2)
-    a = 0.7
-    lhs = ref.dwconv_fwd_ref(a * x1 + x2, k, pad)
-    rhs = a * ref.dwconv_fwd_ref(x1, k, pad) + ref.dwconv_fwd_ref(x2, k, pad)
-    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+else:
+    dims = st.tuples(
+        st.integers(1, 3),        # B
+        st.integers(1, 12),       # H
+        st.integers(4, 96),       # L
+        st.integers(1, 16),       # K
+        st.sampled_from(["same", "causal"]),
+    )
 
+    @hypothesis.given(dims, st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_property_linearity(d, seed):
+        """conv(a*x1 + x2, k) == a*conv(x1,k) + conv(x2,k)."""
+        B, H, L, K, pad = d
+        x1 = _rand((B, H, L), jnp.float32, seed)
+        x2 = _rand((B, H, L), jnp.float32, seed + 1)
+        k = _rand((H, K), jnp.float32, seed + 2)
+        a = 0.7
+        lhs = ref.dwconv_fwd_ref(a * x1 + x2, k, pad)
+        rhs = a * ref.dwconv_fwd_ref(x1, k, pad) + ref.dwconv_fwd_ref(x2, k, pad)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-3)
 
-@hypothesis.given(dims, st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_property_adjoint_identity(d, seed):
-    """<dy, conv(x,k)> == <x, bwd_input(dy,k)> == <k, bwd_kernel(x,dy)>."""
-    B, H, L, K, pad = d
-    x = _rand((B, H, L), jnp.float32, seed)
-    k = _rand((H, K), jnp.float32, seed + 1)
-    dy = _rand((B, H, L), jnp.float32, seed + 2)
-    a = float(jnp.vdot(dy, ref.dwconv_fwd_ref(x, k, pad)))
-    b = float(jnp.vdot(x, ref.dwconv_bwd_input_ref(dy, k, pad)))
-    c = float(jnp.vdot(k, ref.dwconv_bwd_kernel_ref(x, dy, K, pad)))
-    scale = max(1.0, abs(a))
-    assert abs(a - b) / scale < 1e-3
-    assert abs(a - c) / scale < 1e-3
+    @hypothesis.given(dims, st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_property_adjoint_identity(d, seed):
+        """<dy, conv(x,k)> == <x, bwd_input(dy,k)> == <k, bwd_kernel(x,dy)>."""
+        B, H, L, K, pad = d
+        x = _rand((B, H, L), jnp.float32, seed)
+        k = _rand((H, K), jnp.float32, seed + 1)
+        dy = _rand((B, H, L), jnp.float32, seed + 2)
+        a = float(jnp.vdot(dy, ref.dwconv_fwd_ref(x, k, pad)))
+        b = float(jnp.vdot(x, ref.dwconv_bwd_input_ref(dy, k, pad)))
+        c = float(jnp.vdot(k, ref.dwconv_bwd_kernel_ref(x, dy, K, pad)))
+        scale = max(1.0, abs(a))
+        assert abs(a - b) / scale < 1e-3
+        assert abs(a - c) / scale < 1e-3
 
+    @hypothesis.given(dims, st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_property_pallas_row_matches_ref(d, seed):
+        B, H, L, K, pad = d
+        x = _rand((B, H, L), jnp.float32, seed)
+        k = _rand((H, K), jnp.float32, seed + 1)
+        got = dw.run_fwd(x, k, pad, variant="row")
+        want = ref.dwconv_fwd_ref(x, k, pad)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
-@hypothesis.given(dims, st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_property_pallas_row_matches_ref(d, seed):
-    B, H, L, K, pad = d
-    x = _rand((B, H, L), jnp.float32, seed)
-    k = _rand((H, K), jnp.float32, seed + 1)
-    got = dw.run_fwd(x, k, pad, variant="row")
-    want = ref.dwconv_fwd_ref(x, k, pad)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
-
-
-@hypothesis.given(
-    st.integers(1, 2), st.integers(1, 8), st.integers(8, 64), st.integers(1, 8),
-    st.integers(1, 16), st.integers(0, 2**31 - 1),
-)
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_property_causal_shift_equivariance(B, H, L, K, shift, seed):
-    """Causal conv commutes with right-shift (zero-fill), away from the edge."""
-    hypothesis.assume(shift < L)
-    x = _rand((B, H, L), jnp.float32, seed)
-    k = _rand((H, K), jnp.float32, seed + 1)
-    shifted = jnp.pad(x, ((0, 0), (0, 0), (shift, 0)))[:, :, :L]
-    y = ref.dwconv_fwd_ref(x, k, "causal")
-    ys = ref.dwconv_fwd_ref(shifted, k, "causal")
-    y_shift = jnp.pad(y, ((0, 0), (0, 0), (shift, 0)))[:, :, :L]
-    # Positions < shift + K - 1 see the zero boundary; compare beyond it.
-    lo = min(L, shift + K - 1)
-    np.testing.assert_allclose(ys[:, :, lo:], y_shift[:, :, lo:], atol=1e-4)
+    @hypothesis.given(
+        st.integers(1, 2), st.integers(1, 8), st.integers(8, 64), st.integers(1, 8),
+        st.integers(1, 16), st.integers(0, 2**31 - 1),
+    )
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_property_causal_shift_equivariance(B, H, L, K, shift, seed):
+        """Causal conv commutes with right-shift (zero-fill), away from the edge."""
+        hypothesis.assume(shift < L)
+        x = _rand((B, H, L), jnp.float32, seed)
+        k = _rand((H, K), jnp.float32, seed + 1)
+        shifted = jnp.pad(x, ((0, 0), (0, 0), (shift, 0)))[:, :, :L]
+        y = ref.dwconv_fwd_ref(x, k, "causal")
+        ys = ref.dwconv_fwd_ref(shifted, k, "causal")
+        y_shift = jnp.pad(y, ((0, 0), (0, 0), (shift, 0)))[:, :, :L]
+        # Positions < shift + K - 1 see the zero boundary; compare beyond it.
+        lo = min(L, shift + K - 1)
+        np.testing.assert_allclose(ys[:, :, lo:], y_shift[:, :, lo:], atol=1e-4)
 
 
 def test_padding_width_math():

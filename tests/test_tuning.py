@@ -1,0 +1,403 @@
+"""Autotuner subsystem tests (repro.tuning): search-space legality (every
+emitted candidate actually executes and matches the XLA oracle), cache
+round-trip + versioning + env override, deterministic tuning under a stubbed
+timer, and ``variant="auto"`` dispatch equivalence in ``kernels/ops.py``.
+
+All execution happens on tiny shapes in interpret mode; no timing assertions
+are made here (that is ``benchmarks/paper_autotune.py``'s job).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.common import DWConvDims
+from repro.tuning import cache as tcache
+from repro.tuning import cost, space, tuner
+from repro.tuning.cache import ShapeKey, TuneEntry, TuningCache
+from repro.tuning.space import Candidate
+
+# Small enough to execute every candidate in interpret mode, but with the
+# paper's L=K geometry represented.
+SMALL_DIMS = DWConvDims(B=2, H=4, L=48, K=5)
+PAPERISH_DIMS = DWConvDims(B=2, H=4, L=48, K=48)
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the process-wide default cache at a fresh tmp file."""
+    p = tmp_path / "cache.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    yield p
+    tcache.reset_default_cache()
+
+
+# ---------------------------------------------------------------------------
+# search space
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [SMALL_DIMS, PAPERISH_DIMS], ids=["K5", "K48"])
+@pytest.mark.parametrize("path", space.PATHS)
+def test_search_space_nonempty_normalized_legal(d, path):
+    cands = space.search_space(d, path)
+    assert cands, f"empty search space for {path}"
+    seen = set()
+    for c in cands:
+        assert c.path == path
+        ok, reason = space.is_legal(c, d)
+        assert ok, reason
+        assert space.normalize(c, d) == c, "emitted candidate not normalized"
+        assert c not in seen, "duplicate candidate emitted"
+        seen.add(c)
+    # the hard-coded defaults and the xla escape hatch are always in-space
+    variants = {c.variant for c in cands}
+    assert "xla" in variants
+    assert ("row" if path != "bwd_k" else "accum") in variants
+
+
+@pytest.mark.parametrize("path", space.PATHS)
+def test_every_emitted_candidate_executes_and_matches_oracle(path):
+    """Legality predicates really mirror the kernel asserts: run everything."""
+    d = SMALL_DIMS
+    x = _rand((d.B, d.H, d.L), 0)
+    k = _rand((d.H, d.K), 1)
+    dy = _rand((d.B, d.H, d.L), 2)
+    if path == "fwd":
+        want = ref.dwconv_fwd_ref(x, k, d.padding)
+    elif path == "bwd_in":
+        want = ref.dwconv_bwd_input_ref(dy, k, d.padding)
+    else:
+        want = ref.dwconv_bwd_kernel_ref(x, dy, d.K, d.padding)
+    for c in space.search_space(d, path):
+        opts = c.options(interpret=True)
+        if path == "fwd":
+            got = (ref.dwconv_fwd_ref(x, k, d.padding) if c.variant == "xla"
+                   else ops.dwconv_fwd_op(x, k, d.padding, c.variant, opts))
+        elif path == "bwd_in":
+            got = (ref.dwconv_bwd_input_ref(dy, k, d.padding) if c.variant == "xla"
+                   else ops.dwconv_bwd_input_op(dy, k, d.padding, c.variant, opts))
+        else:
+            got = (ref.dwconv_bwd_kernel_ref(x, dy, d.K, d.padding) if c.variant == "xla"
+                   else ops.dwconv_bwd_kernel_op(x, dy, d.K, d.padding, c.variant, opts))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                                   err_msg=f"candidate {c} diverges from oracle")
+
+
+def test_illegal_candidates_are_rejected_with_reason():
+    d = SMALL_DIMS
+    ok, reason = space.is_legal(Candidate("fwd", "naive", block_t=100), d)
+    # naive requires lane alignment; 100 < Lout so it is NOT clamped away
+    assert not ok and "lane" in reason
+    ok, reason = space.is_legal(Candidate("bwd_k", "row"), d)
+    assert not ok and "not applicable" in reason
+    ok, reason = space.is_legal(Candidate("fwd", "block", block_t=0), d)
+    assert not ok
+    with pytest.raises(ValueError):
+        space.search_space(d, "sideways")
+
+
+def test_neighbors_reach_both_straddling_lattice_points():
+    """A clamped off-lattice knob (block_h=12 with H=12) must offer BOTH
+    adjacent lattice values (8 and 16->clamped) as single hillclimb moves."""
+    d = DWConvDims(B=2, H=12, L=48, K=5)
+    c = space.normalize(Candidate("fwd", "block", block_h=12), d)
+    assert c.block_h == 12
+    hs = {m.block_h for m in space.neighbors(c, d) if m.variant == "block"}
+    assert 8 in hs, "lower straddling lattice point unreachable in one move"
+
+
+def test_neighbors_are_legal_single_moves():
+    d = PAPERISH_DIMS
+    c = space.normalize(Candidate("fwd", "row"), d)
+    moves = space.neighbors(c, d)
+    assert moves, "hillclimb move set empty"
+    for m in moves:
+        assert m != c
+        assert space.is_legal(m, d)[0]
+        assert space.normalize(m, d) == m
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+KEY = ShapeKey(path="fwd", B=64, H=128, L=48, K=48, dtype="float32", backend="cpu")
+ENTRY = TuneEntry(variant="block", block_h=4, block_t=512, batch_chunk=128,
+                  time_us=12.5, analytical_time_us=10.0)
+
+
+def test_cache_round_trip(tmp_path):
+    p = tmp_path / "db.json"
+    TuningCache(p).put(KEY, ENTRY)
+    assert p.exists()
+    reloaded = TuningCache(p)  # fresh instance: forces disk read
+    got = reloaded.get(KEY)
+    assert got == ENTRY
+    assert len(reloaded) == 1
+    assert reloaded.items() == {KEY: ENTRY}
+    # key codec is its own inverse
+    assert ShapeKey.decode(KEY.encode()) == KEY
+
+
+def test_cache_version_mismatch_ignored(tmp_path):
+    p = tmp_path / "db.json"
+    c = TuningCache(p)
+    c.put(KEY, ENTRY)
+    raw = json.loads(p.read_text())
+    raw["version"] = tcache.CACHE_VERSION + 1
+    p.write_text(json.dumps(raw))
+    assert TuningCache(p).get(KEY) is None, "stale-schema entry was applied"
+
+
+def test_cache_corrupt_file_starts_empty(tmp_path):
+    p = tmp_path / "db.json"
+    p.write_text("{not json")
+    c = TuningCache(p)
+    assert c.get(KEY) is None
+    c.put(KEY, ENTRY)  # save must rewrite the corrupt file
+    assert TuningCache(p).get(KEY) == ENTRY
+
+
+def test_padding_is_part_of_the_shape_key(tmp_cache):
+    """'same' and 'causal' tunings of equal dims must not collide, and auto
+    dispatch must only see the entry for its own padding."""
+    same = ShapeKey(path="fwd", B=2, H=4, L=48, K=5, dtype="float32",
+                    backend=jax.default_backend(), padding="same")
+    causal = ShapeKey(path="fwd", B=2, H=4, L=48, K=5, dtype="float32",
+                      backend=jax.default_backend(), padding="causal")
+    assert same.encode() != causal.encode()
+    tcache.default_cache().put(causal, TuneEntry(
+        variant="lane", block_h=2, block_t=256, batch_chunk=2))
+    # dispatch under 'same' padding misses the causal entry -> fallback
+    v, _ = ops.resolve_variant("fwd", "auto", None, B=2, H=4, L=48, K=5,
+                               dtype=jnp.float32, padding="same")
+    assert v == ops.AUTO_FALLBACK["fwd"]
+    v, _ = ops.resolve_variant("fwd", "auto", None, B=2, H=4, L=48, K=5,
+                               dtype=jnp.float32, padding="causal")
+    assert v == "lane"
+    # tuner keys carry the problem's padding
+    dd = DWConvDims(B=2, H=4, L=48, K=5, padding="causal")
+    res = tuner.tune_path(dd, "fwd", budget=2, measure_fn=_stub_measure,
+                          persist=False)
+    assert res.key.padding == "causal"
+
+
+def test_cache_env_override_and_memoization(tmp_cache):
+    c1 = tcache.default_cache()
+    assert str(c1.path) == str(tmp_cache)
+    assert tcache.default_cache() is c1, "default cache not memoized"
+    c1.put(KEY, ENTRY)
+    assert tcache.lookup("fwd", 64, 128, 48, 48, "float32", "cpu") == ENTRY
+    assert tcache.lookup("fwd", 64, 128, 48, 47, "float32", "cpu") is None
+
+
+# ---------------------------------------------------------------------------
+# tuner (stubbed timer: deterministic, no real measurement)
+# ---------------------------------------------------------------------------
+
+
+def _stub_measure(c, d):
+    """Deterministic fake clock: 'block' with block_h=4 is the planted winner."""
+    t = 100.0
+    if c.variant == "block":
+        t -= 50.0
+    t += abs(c.block_h - 4)
+    return t + 1e-3 * (c.block_t / 512) + 1e-4 * (c.batch_chunk / 128)
+
+
+@pytest.mark.parametrize("search", ["grid", "hillclimb"])
+def test_tuner_is_deterministic_and_respects_budget(search, tmp_path):
+    d = PAPERISH_DIMS
+    cache = TuningCache(tmp_path / "db.json")
+    res1 = tuner.tune_path(d, "fwd", budget=6, search=search,
+                           measure_fn=_stub_measure, cache=cache)
+    res2 = tuner.tune_path(d, "fwd", budget=6, search=search,
+                           measure_fn=_stub_measure, cache=cache)
+    assert res1.best == res2.best, "tuning not deterministic under a fixed timer"
+    assert res1.candidates_measured <= 6
+    assert res1.candidates_considered >= res1.candidates_measured
+    # winner == argmin of the stub over everything actually measured
+    best_measured = min(res1.history, key=lambda h: h[2])
+    assert res1.best.variant == best_measured[0].variant
+    # the decision was persisted under the right key
+    got = cache.get(res1.key)
+    assert got is not None and got.variant == res1.best.variant
+    assert res1.key.path == "fwd" and res1.key.B == d.B and res1.key.K == d.K
+
+
+def test_grid_finds_planted_winner_with_full_budget(tmp_path):
+    d = PAPERISH_DIMS
+    cache = TuningCache(tmp_path / "db.json")
+    res = tuner.tune_path(d, "fwd", budget=10_000, search="grid",
+                          measure_fn=_stub_measure, cache=cache)
+    assert res.best.variant == "block"
+    assert res.best.block_h == 4
+    assert res.best.time_us == pytest.approx(min(h[2] for h in res.history) * 1e6)
+
+
+def test_tune_shape_covers_all_paths(tmp_path):
+    cache = TuningCache(tmp_path / "db.json")
+    out = tuner.tune_shape(SMALL_DIMS, budget=6, measure_fn=_stub_measure,
+                           cache=cache)
+    assert set(out) == set(space.PATHS)
+    assert len(cache) == len(space.PATHS)
+
+
+def test_tuner_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        tuner.tune_path(SMALL_DIMS, "fwd", budget=0, measure_fn=_stub_measure)
+    with pytest.raises(ValueError):
+        tuner.tune_path(SMALL_DIMS, "fwd", search="anneal", measure_fn=_stub_measure)
+
+
+def test_analytical_rank_is_total_and_positive():
+    d = PAPERISH_DIMS
+    cands = space.search_space(d, "fwd")
+    ranked = cost.rank_candidates(cands, d)
+    assert [c for c, _ in ranked[:3]] == [c for c, _ in cost.rank_candidates(cands, d, top_n=3)]
+    assert all(t > 0 for _, t in ranked)
+    times = [t for _, t in ranked]
+    assert times == sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# variant="auto" dispatch through ops.py
+# ---------------------------------------------------------------------------
+
+
+def test_auto_falls_back_to_row_without_cache_entry(tmp_cache):
+    d = SMALL_DIMS
+    x, k = _rand((d.B, d.H, d.L), 0), _rand((d.H, d.K), 1)
+    auto = ops.dwconv_fwd_op(x, k, d.padding, "auto", ops.KernelOptions(interpret=True))
+    row = ops.dwconv_fwd_op(x, k, d.padding, "row", ops.KernelOptions(interpret=True))
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(row))
+
+
+def test_auto_resolves_cached_entry_and_matches_reference(tmp_cache):
+    d = SMALL_DIMS
+    backend = jax.default_backend()
+    for path, variant in (("fwd", "block"), ("bwd_in", "lane"), ("bwd_k", "twostage")):
+        tcache.default_cache().put(
+            ShapeKey(path=path, B=d.B, H=d.H, L=d.L, K=d.K,
+                     dtype="float32", backend=backend),
+            TuneEntry(variant=variant, block_h=2, block_t=256, batch_chunk=2),
+        )
+    x, k, dy = _rand((d.B, d.H, d.L), 0), _rand((d.H, d.K), 1), _rand((d.B, d.H, d.L), 2)
+    opts = ops.KernelOptions(block_h=2, block_t=256, batch_chunk=2, interpret=True)
+
+    v, o = ops.resolve_variant("fwd", "auto", None, B=d.B, H=d.H, L=d.L, K=d.K,
+                               dtype=jnp.float32)
+    assert v == "block" and (o.block_h, o.block_t, o.batch_chunk) == (2, 256, 2)
+    # explicit opts win over cached tiling
+    _, o2 = ops.resolve_variant("fwd", "auto", opts, B=d.B, H=d.H, L=d.L, K=d.K,
+                                dtype=jnp.float32)
+    assert o2 is opts
+
+    # opts=None: the cached tiling itself is exercised (interpret auto-resolves)
+    np.testing.assert_allclose(
+        np.asarray(ops.dwconv_fwd_op(x, k, d.padding, "auto")),
+        np.asarray(ref.dwconv_fwd_ref(x, k, d.padding)), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.dwconv_bwd_input_op(dy, k, d.padding, "auto")),
+        np.asarray(ref.dwconv_bwd_input_ref(dy, k, d.padding)), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.dwconv_bwd_kernel_op(x, dy, d.K, d.padding, "auto")),
+        np.asarray(ref.dwconv_bwd_kernel_ref(x, dy, d.K, d.padding)), atol=1e-4)
+
+
+def test_auto_with_illegal_explicit_opts_falls_back_safely(tmp_cache):
+    """Cached variant + caller tiling that violates its kernel asserts must
+    drop to the fallback variant, not crash inside Pallas."""
+    d = SMALL_DIMS
+    tcache.default_cache().put(
+        ShapeKey(path="fwd", B=d.B, H=d.H, L=d.L, K=d.K,
+                 dtype="float32", backend=jax.default_backend()),
+        TuneEntry(variant="lane", block_h=8, block_t=512, batch_chunk=128),
+    )
+    bad = ops.KernelOptions(block_t=100, interpret=True)  # Lt=100: not lane-aligned
+    v, o = ops.resolve_variant("fwd", "auto", bad, B=d.B, H=d.H, L=d.L, K=d.K,
+                               dtype=jnp.float32)
+    assert v == ops.AUTO_FALLBACK["fwd"] and o is bad
+    x, k = _rand((d.B, d.H, d.L), 0), _rand((d.H, d.K), 1)
+    got = ops.dwconv_fwd_op(x, k, d.padding, "auto", bad)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.dwconv_fwd_ref(x, k, d.padding)),
+                               atol=1e-5)
+    # a *legal* explicit tiling still gets the cached variant
+    good = ops.KernelOptions(block_t=128, interpret=True)
+    v, o = ops.resolve_variant("fwd", "auto", good, B=d.B, H=d.H, L=d.L, K=d.K,
+                               dtype=jnp.float32)
+    assert v == "lane" and o is good
+
+
+def test_concurrent_cache_writers_merge_disjoint_keys(tmp_path):
+    """Two cache instances sharing one file must not clobber each other's
+    disjoint entries on save (the shared-artifact cluster workflow)."""
+    p = tmp_path / "shared.json"
+    a, b = TuningCache(p), TuningCache(p)
+    key_b = ShapeKey(path="bwd_k", B=8, H=4, L=48, K=5, dtype="float32", backend="cpu")
+    a.get(KEY)  # both load the (empty) file before either writes
+    b.get(KEY)
+    a.put(KEY, ENTRY)
+    b.put(key_b, TuneEntry(variant="accum", block_h=2, block_t=512, batch_chunk=8))
+    fresh = TuningCache(p)
+    assert fresh.get(KEY) == ENTRY
+    assert fresh.get(key_b) is not None
+
+
+def test_auto_equivalent_to_row_through_differentiable_dwconv(tmp_cache):
+    """End-to-end: core.dwconv with variant='auto' (tuned to 'row') matches
+    both the explicit 'row' path and XLA autodiff, grads included."""
+    from repro.core.dwconv import dwconv
+
+    d = SMALL_DIMS
+    backend = jax.default_backend()
+    for path in space.PATHS:
+        tcache.default_cache().put(
+            ShapeKey(path=path, B=d.B, H=d.H, L=d.L, K=d.K,
+                     dtype="float32", backend=backend),
+            TuneEntry(variant="row" if path != "bwd_k" else "accum",
+                      block_h=8, block_t=512, batch_chunk=128),
+        )
+    x, k = _rand((d.B, d.H, d.L), 0), _rand((d.H, d.K), 1)
+
+    def loss(variant):
+        def f(x, k):
+            return jnp.sum(dwconv(x, k, padding=d.padding, variant=variant) ** 2)
+        return f
+
+    y_auto, grads_auto = jax.value_and_grad(loss("auto"), argnums=(0, 1))(x, k)
+    y_xla, grads_xla = jax.value_and_grad(loss("xla"), argnums=(0, 1))(x, k)
+    np.testing.assert_allclose(float(y_auto), float(y_xla), rtol=1e-5)
+    for ga, gx in zip(grads_auto, grads_xla):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gx), atol=2e-3)
+
+
+def test_tune_then_auto_dispatch_round_trip(tmp_cache):
+    """The acceptance flow in miniature: tune (stubbed clock) -> cache file
+    on disk -> fresh process-level lookup -> auto runs the tuned config."""
+    d = SMALL_DIMS
+    tuner.tune_path(d, "fwd", budget=4, measure_fn=_stub_measure,
+                    backend=jax.default_backend())
+    assert tmp_cache.exists(), "tuner did not persist the cache file"
+    tcache.reset_default_cache()  # simulate a new process reading the file
+    v, _ = ops.resolve_variant("fwd", "auto", None, B=d.B, H=d.H, L=d.L, K=d.K,
+                               dtype=jnp.float32)
+    entry = tcache.lookup("fwd", d.B, d.H, d.L, d.K, "float32", jax.default_backend())
+    assert entry is not None and v == entry.variant
+
+    x, k = _rand((d.B, d.H, d.L), 0), _rand((d.H, d.K), 1)
+    np.testing.assert_allclose(
+        np.asarray(ops.dwconv_fwd_op(x, k, d.padding, "auto",
+                                     ops.KernelOptions(interpret=True))),
+        np.asarray(ref.dwconv_fwd_ref(x, k, d.padding)), atol=1e-5)
