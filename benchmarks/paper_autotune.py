@@ -76,8 +76,15 @@ def run(fast: bool = False) -> List[Row]:
                           block_t=entry.block_t, batch_chunk=entry.batch_chunk)
         default = _default_candidate(path)
 
-        t_tuned = cost.measure_candidate(tuned, d, warmup=1, iters=iters, timer=time_fn)
         t_default = cost.measure_candidate(default, d, warmup=1, iters=iters, timer=time_fn)
+        if tuned == default:
+            # The tuner kept the fallback configuration (it always meters the
+            # baseline, so this is a legitimate decision): the no-regression
+            # property holds by construction — re-measuring the identical
+            # configuration would only gate on wall-clock noise.
+            t_tuned = t_default
+        else:
+            t_tuned = cost.measure_candidate(tuned, d, warmup=1, iters=iters, timer=time_fn)
         speedup = t_default / max(t_tuned, 1e-12)
         verdict = "TUNED_OK" if t_tuned <= t_default * NOISE_FACTOR else "TUNED_SLOWER"
         rows.append(Row(

@@ -1,0 +1,110 @@
+"""Fused-vs-split backward gate (the fused-backward PR's tentpole benchmark).
+
+Two regimes, mirroring the counter-free methodology:
+
+  *modeled*  — whole-backward HBM bytes at the paper's full study shape
+               (16384, 128, 48, 48) for the fused single pass vs the split
+               (bwd_in + bwd_k) path, with padded-layout materialization
+               charged (``analysis/traffic.py``); each estimate is pushed
+               through the TPU-v5e roofline for the bound it implies.
+               **Gate**: fused bytes <= 0.6x split bytes.
+
+  *measured* — interpret-mode wall-clock of the fused op vs the split pair
+               at the reduced-batch geometry (the CPU validation regime:
+               structure, not TPU prediction), printed alongside the model.
+               The measured fused-vs-split speedup is exported as the
+               ``--json`` top-level metric by ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import traffic
+from repro.analysis.hw import TPU_V5E
+from repro.analysis.timer import time_fn
+from repro.kernels import ops
+from repro.tuning.space import PAPER_DIMS_CPU, PAPER_DIMS_FULL
+
+# Acceptance gate: the fused backward must move at most this fraction of the
+# split path's modeled HBM bytes on the paper shape.
+GATE_RATIO = 0.6
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def modeled_rows() -> List[Row]:
+    d = PAPER_DIMS_FULL
+    hw = TPU_V5E
+    fused = traffic.bwd_fused_traffic(d, "fused")
+    split = traffic.bwd_split_traffic(d)
+    rows: List[Row] = []
+    for name, est in (("fused", fused), ("split", split)):
+        compute_s = est.flops / hw.peak_flops_f32
+        memory_s = est.bytes_moved / hw.hbm_bw
+        rows.append(Row(
+            f"paper_fused_bwd/modeled/{name}", max(compute_s, memory_s) * 1e6,
+            f"bytes={est.bytes_moved / 1e9:.3f}GB "
+            f"AI={est.arithmetic_intensity:.2f} "
+            f"roofline={'memory' if memory_s >= compute_s else 'compute'}-bound",
+        ))
+    ratio = fused.bytes_moved / split.bytes_moved
+    # A FAILED verdict (not an exception) gates the harness: benchmarks.run
+    # exits nonzero on it while every diagnostic row still prints.
+    verdict = "GATE_OK" if ratio <= GATE_RATIO else "GATE_FAILED"
+    rows.append(Row(
+        "paper_fused_bwd/modeled/ratio", 0.0,
+        f"fused_vs_split_bytes={ratio:.3f} (gate <= {GATE_RATIO}) {verdict}"))
+    return rows
+
+
+def measured_rows(iters: int = 3) -> List[Row]:
+    d = PAPER_DIMS_CPU
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(d.H, d.K)), jnp.float32)
+    opts = ops.KernelOptions(batch_chunk=16)
+
+    f_fused = jax.jit(
+        lambda x, dy, k: ops.dwconv_bwd_fused_op(x, dy, k, d.padding, "fused", opts))
+    f_split = jax.jit(
+        lambda x, dy, k: (
+            ops.dwconv_bwd_input_op(dy, k, d.padding, "row", opts),
+            ops.dwconv_bwd_kernel_op(x, dy, d.K, d.padding, "accum", opts)))
+    t_fused = time_fn(f_fused, x, dy, k, warmup=1, iters=iters)
+    t_split = time_fn(f_split, x, dy, k, warmup=1, iters=iters)
+    speedup = t_split.mean_s / max(t_fused.mean_s, 1e-12)
+    return [
+        Row("paper_fused_bwd/measured/fused", t_fused.us,
+            "one staged pass -> (dx, dk), interpret mode"),
+        Row("paper_fused_bwd/measured/split", t_split.us,
+            "bwd_in(row) + bwd_k(accum), interpret mode"),
+        Row("paper_fused_bwd/measured/speedup", 0.0,
+            f"fused_vs_split={speedup:.2f}x (interpret-mode wall-clock)"),
+    ]
+
+
+def run(fast: bool = False) -> List[Row]:
+    rows = modeled_rows()
+    rows += measured_rows(iters=2 if fast else 3)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run()
+    for r in rows:
+        print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
+    if any("FAILED" in r.derived for r in rows):
+        sys.exit(1)

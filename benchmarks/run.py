@@ -1,23 +1,36 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--fast`` trims iteration
-counts (used by CI); ``--only <prefix>`` filters benchmarks.
+counts (used by CI); ``--only <prefix>`` filters benchmarks; ``--json
+<path>`` additionally writes machine-readable results (conventionally
+``BENCH_kernels.json``) so the perf trajectory is recorded per run — the
+fused-vs-split backward speedup is promoted to a top-level metric.
+
+A module may signal a soft failure by emitting a row whose ``derived``
+contains ``FAILED`` (e.g. the e2e convergence check): the remaining rows
+still print, but the harness exits nonzero.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
 import traceback
+
+_SPEEDUP_RE = re.compile(r"fused_vs_split=([0-9.]+)x")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write machine-readable results (BENCH_kernels.json)")
     args = ap.parse_args()
 
     from benchmarks import paper_table2, paper_table3, paper_roofline, paper_validation
-    from benchmarks import paper_autotune, roofline_table, s4convd_e2e
+    from benchmarks import paper_autotune, paper_fused_bwd, roofline_table, s4convd_e2e
 
     modules = [
         ("paper_table2", paper_table2),
@@ -25,21 +38,41 @@ def main() -> None:
         ("paper_roofline", paper_roofline),
         ("paper_validation", paper_validation),
         ("paper_autotune", paper_autotune),
+        ("paper_fused_bwd", paper_fused_bwd),
         ("s4convd_e2e", s4convd_e2e),
         ("roofline_table", roofline_table),
     ]
     print("name,us_per_call,derived")
     failures = 0
+    results = []
+    fused_vs_split = None
     for name, mod in modules:
         if args.only and not name.startswith(args.only):
             continue
         try:
             for row in mod.run(fast=args.fast):
                 print(f"{row.name},{row.us_per_call:.1f},{row.derived}")
+                results.append({"name": row.name, "us_per_call": row.us_per_call,
+                                "derived": row.derived})
+                if "FAILED" in row.derived:
+                    failures += 1
+                m = _SPEEDUP_RE.search(row.derived)
+                if m and row.name.startswith("paper_fused_bwd/measured"):
+                    fused_vs_split = float(m.group(1))
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", file=sys.stdout)
+            results.append({"name": name, "us_per_call": 0.0, "derived": "ERROR"})
             traceback.print_exc()
+    if args.json:
+        payload = {
+            "fused_vs_split_backward_speedup": fused_vs_split,
+            "failures": failures,
+            "results": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

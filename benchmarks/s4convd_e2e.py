@@ -5,6 +5,16 @@ workload under the XLA production path, and reports the kernel-level vs
 end-to-end decomposition the paper highlights: kernel speedups translate
 sublinearly because non-conv components (projections, optimizer, framework)
 take a growing runtime share.
+
+A convergence regression is reported as a ``convergence FAILED`` row (the
+harness exits nonzero on it) rather than an exception, so the perf rows
+still print when training regresses.
+
+``variant_comparison_rows`` additionally trains a miniature configuration
+under ``conv_variant="fused"`` (single-pass fused backward) and
+``conv_variant="auto"`` (tuning-cache dispatch) next to the XLA baseline —
+the end-to-end leg of the fused-backward study.  The mini geometry keeps
+interpret-mode Pallas execution tractable on CPU.
 """
 from __future__ import annotations
 
@@ -15,12 +25,31 @@ from repro.core import s4convd
 from repro.data.gep3 import GEP3Config
 from repro.train.s4_trainer import train
 
+E2E_VARIANTS = ["xla", "row", "block", "lane", "naive", "fused", "auto"]
+
 
 @dataclasses.dataclass
 class Row:
     name: str
     us_per_call: float
     derived: str
+
+
+def _rows_for(res, variant: str, prefix: str = "s4convd_e2e",
+              convergence: bool = True) -> List[Row]:
+    rows = [
+        Row(f"{prefix}/{variant}/steady_epoch", res.steady_epoch_time_s * 1e6,
+            f"loss_first={res.epoch_losses[0]:.4f} loss_last={res.epoch_losses[-1]:.4f} "
+            f"dev_rmsle={res.dev_rmsle:.4f}"),
+    ]
+    if convergence:
+        converged = res.epoch_losses[-1] < res.epoch_losses[0]
+        rows.append(Row(
+            f"{prefix}/{variant}/convergence", 0.0,
+            "loss decreases REPRODUCED" if converged else
+            f"convergence FAILED (loss {res.epoch_losses[0]:.4f} -> "
+            f"{res.epoch_losses[-1]:.4f})"))
+    return rows
 
 
 def run(fast: bool = False, variant: str = "xla") -> List[Row]:
@@ -31,24 +60,60 @@ def run(fast: bool = False, variant: str = "xla") -> List[Row]:
         max_steps_per_epoch=8 if fast else 20,
         conv_variant=variant,
     )
-    rows = [
-        Row(f"s4convd_e2e/{variant}/steady_epoch", res.steady_epoch_time_s * 1e6,
-            f"loss_first={res.epoch_losses[0]:.4f} loss_last={res.epoch_losses[-1]:.4f} "
-            f"dev_rmsle={res.dev_rmsle:.4f}"),
-    ]
-    assert res.epoch_losses[-1] < res.epoch_losses[0], "training must converge"
-    rows.append(Row(f"s4convd_e2e/{variant}/convergence", 0.0, "loss decreases REPRODUCED"))
+    # --fast trains too few steps for a convergence verdict; the full run
+    # gates on it (a FAILED row makes the harness exit nonzero).
+    rows = _rows_for(res, variant, convergence=not fast)
+    if variant == "xla":
+        rows += variant_comparison_rows(fast)
+    return rows
+
+
+def variant_comparison_rows(fast: bool = False,
+                            variants=("xla", "fused", "auto")) -> List[Row]:
+    """Same mini workload, only ``conv_variant`` varied (the study axis) —
+    the fused backward runs inside the jitted train step via its custom VJP.
+    The gate here is *consistency*, not convergence (the run is deliberately
+    tiny): every variant must land on the XLA baseline's loss."""
+    cfg = s4convd.S4ConvDConfig(H=16, N=4, n_blocks=1, L=48, K=48)
+    data = GEP3Config(n_buildings=4, n_hours=160)
+    rows: List[Row] = []
+    times, losses = {}, {}
+    for variant in variants:
+        res = train(
+            cfg, data, batch_size=32, epochs=2,
+            max_steps_per_epoch=2 if fast else 4,
+            conv_variant=variant,
+        )
+        times[variant] = res.steady_epoch_time_s
+        losses[variant] = res.epoch_losses[-1]
+        rows += _rows_for(res, variant, prefix="s4convd_e2e/mini",
+                          convergence=False)
+    base_t, base_l = times.get("xla"), losses.get("xla")
+    for variant in variants:
+        if variant == "xla" or base_t is None:
+            continue
+        consistent = abs(losses[variant] - base_l) <= 1e-3 * max(1.0, abs(base_l))
+        verdict = "REPRODUCED" if consistent else "FAILED"
+        rows.append(Row(
+            f"s4convd_e2e/mini/{variant}/vs_xla", 0.0,
+            f"epoch_time_ratio={times[variant] / base_t:.2f}x "
+            f"loss_match={verdict} (interpret-mode Pallas vs compiled XLA "
+            f"on CPU; structure check, not a TPU prediction)"))
     return rows
 
 
 if __name__ == "__main__":
     import argparse
+    import sys
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--variant", default="xla",
-                    choices=["xla", "row", "block", "lane", "naive", "auto"],
-                    help='"auto" trains on the tuning cache\'s per-shape winner')
+    ap.add_argument("--variant", default="xla", choices=E2E_VARIANTS,
+                    help='"fused" = single-pass fused backward; '
+                         '"auto" trains on the tuning cache\'s per-shape winner')
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
-    for r in run(fast=args.fast, variant=args.variant):
+    rows = run(fast=args.fast, variant=args.variant)
+    for r in rows:
         print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
+    if any("FAILED" in r.derived for r in rows):
+        sys.exit(1)

@@ -10,14 +10,14 @@ epoch excluded (§III-F).
 import argparse
 
 from repro.core.s4convd import S4ConvDConfig
+from repro.core.variant import REGISTRY
 from repro.data.gep3 import GEP3Config
 from repro.train.s4_trainer import train
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--variant", default="xla",
-                    choices=["xla", "row", "block", "lane", "naive", "auto"])
+    ap.add_argument("--variant", default="xla", choices=sorted(REGISTRY))
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--H", type=int, default=128)

@@ -8,6 +8,8 @@ from repro.analysis.roofline import (  # noqa: F401
 )
 from repro.analysis.traffic import (  # noqa: F401
     TrafficEstimate,
+    bwd_fused_traffic,
+    bwd_split_traffic,
     bwdk_traffic,
     fwd_traffic,
     path_flops,

@@ -68,17 +68,19 @@ def fwd_traffic(
 
     if variant == "naive":
         # K unaligned per-tap DMAs of an (Hb, Lt) window per output tile.
-        read = n_tiles * d.K * (Hb * Lt) * itemsize + n_tiles * k_bytes_once / max(cdiv(d.H, Hb), 1)
+        # Filter reads are charged uniformly across variants: one logical
+        # pass over the (H, K) filter bank.
+        read = n_tiles * d.K * (Hb * Lt) * itemsize + k_bytes_once
         tx = n_tiles * d.K
         return TrafficEstimate(flops, read, y_bytes, tx, aligned=False, reliable=False)
     if variant == "lane":
         # Same per-tap redundancy; windows widened to lane alignment.
-        read = n_tiles * d.K * (Hb * (Lt + LANE)) * itemsize
+        read = n_tiles * d.K * (Hb * (Lt + LANE)) * itemsize + k_bytes_once
         tx = n_tiles * d.K
         return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
     if variant == "block":
         # Current + neighbour halo tile staged in VMEM per output tile.
-        read = n_tiles * 2 * (Hb * Lt) * itemsize
+        read = n_tiles * 2 * (Hb * Lt) * itemsize + k_bytes_once
         tx = n_tiles * 2
         return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
     if variant == "row":
@@ -132,6 +134,86 @@ def bwdk_traffic(
         read = 2 * slab
         return TrafficEstimate(flops, read, dk_bytes, 0, aligned=True, reliable=True)
     raise ValueError(variant)
+
+
+# ---------------------------------------------------------------------------
+# Whole-backward accounting: fused single pass vs the split two-op path.
+#
+# Unlike the per-kernel models above, these charge the *padded-layout
+# materialization* traffic (each ``jnp.pad`` reads its source and writes the
+# padded buffer to HBM) — that is exactly the traffic the fusion removes, so
+# a fused-vs-split comparison that ignored it would miss the point.  The
+# split backward materializes three layouts (dy in the adjoint layout, x
+# re-padded, dy again in the forward-aligned layout) and reads dy from HBM
+# twice; the fused backward materializes one dy layout, reuses the forward's
+# padded x residual verbatim, and reads each operand once.
+# ---------------------------------------------------------------------------
+
+
+def bwd_split_traffic(
+    d: DWConvDims,
+    itemsize: int = 4,
+    bwd_in_variant: str = "row",
+    bwd_k_variant: str = "accum",
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+) -> TrafficEstimate:
+    """Total modeled backward traffic for the split (bwd_in + bwd_k) path."""
+    est_in = fwd_traffic(d, bwd_in_variant, itemsize,
+                         block_h=block_h, block_t=block_t)
+    est_k = bwdk_traffic(d, bwd_k_variant, itemsize,
+                         block_h=block_h, batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L * itemsize
+    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize  # one padded layout
+    # Three pad materializations: dy -> adjoint layout, x -> x_pad,
+    # dy -> forward-aligned layout (each: read source, write padded buffer).
+    pad_read = 3 * slab
+    pad_written = 2 * pslab + slab
+    return TrafficEstimate(
+        flops=est_in.flops + est_k.flops,
+        bytes_read=pad_read + est_in.bytes_read + est_k.bytes_read,
+        bytes_written=pad_written + est_in.bytes_written + est_k.bytes_written,
+        transactions=est_in.transactions + est_k.transactions + 3,
+        aligned=est_in.aligned and est_k.aligned,
+        reliable=est_in.reliable and est_k.reliable,
+    )
+
+
+def bwd_fused_traffic(
+    d: DWConvDims,
+    variant: str = "fused",
+    itemsize: int = 4,
+    block_h: int = 8,
+    batch_chunk: int = 128,
+) -> TrafficEstimate:
+    """Backward traffic for the fused single-pass kernels (``"split"`` maps
+    to :func:`bwd_split_traffic` so the tuner compares like with like)."""
+    if variant == "split":
+        return bwd_split_traffic(d, itemsize, block_h=block_h,
+                                 batch_chunk=batch_chunk)
+    flops = 2.0 * path_flops(d)  # dx taps + dk reduction
+    Hb = min(block_h, d.H)
+    Bc = min(batch_chunk, d.B)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    slab = d.B * d.H * d.L * itemsize
+    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
+    k_bytes = d.H * d.K * itemsize
+    dk_bytes = d.H * d.K * itemsize
+    # One pad materialization (dy, single unified layout); the forward's
+    # x_pad residual is reused verbatim — zero backward pad cost for x.
+    read = slab + 2 * pslab + k_bytes   # pad source + x_pad + dy_pad + k
+    written = pslab + slab + dk_bytes   # dy_pad + dx + dk
+    tx = nH * nC * 3 + 1
+    if variant == "fused_partials":
+        partials = nC * d.H * round_up(d.K, LANE) * 4  # f32 HBM round-trip
+        read += partials
+        written += partials
+        tx += nH * nC
+    elif variant != "fused":
+        raise ValueError(variant)
+    return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
 
 
 # ---------------------------------------------------------------------------
@@ -198,8 +280,14 @@ def variant_traffic_table(
 
     out: Dict[str, Dict[str, TrafficEstimate]] = {}
     for name, spec in REGISTRY.items():
+        if spec.fwd == "auto":  # cache-dependent dispatch: no static model
+            continue
         fwd = fwd_traffic(d, spec.fwd, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t")})
         bwd_in = fwd_traffic(d, spec.bwd_in, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t")})
         bwd_k = bwdk_traffic(d, spec.bwd_k, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "batch_chunk")})
         out[name] = {"fwd": fwd, "bwd_in": bwd_in, "bwd_k": bwd_k}
+        if spec.bwd == "fused":
+            out[name]["bwd_fused"] = bwd_fused_traffic(
+                d, spec.bwd_fused, itemsize,
+                **{k: v for k, v in tiling.items() if k in ("block_h", "batch_chunk")})
     return out

@@ -7,9 +7,19 @@ a one-argument switch anywhere in the framework.
 
   variant='xla'   : pure-jnp (SPMD-friendly; the default inside models)
   variant='row' / 'block' / 'lane' / 'naive' : Pallas TPU kernels
+  variant='fused' : row forward + single-pass fused backward (dx and dk
+                    from one staged sweep; the forward's padded input is
+                    the VJP residual, so it is never re-padded)
   variant='auto'  : per-shape dispatch through the persistent tuning cache
                     (see ``repro.tuning``); untuned shapes fall back to the
-                    'row'/'accum' defaults
+                    'row'/'accum' defaults with a split backward
+
+Backward structure is governed by ``VariantSpec.bwd``: ``"split"`` keeps
+the two independent backward ops (the paper's controlled per-path study),
+``"fused"`` runs the fused kernel, ``"auto"`` resolves through the tuning
+cache's ``bwd_fused`` path.  The fwd and bwd VJP rules make this decision
+from identical static arguments, so the saved residual always matches what
+the backward expects.
 """
 from __future__ import annotations
 
@@ -32,14 +42,54 @@ def _dwconv(x, k, padding: Padding, variant: str, opts: ops.KernelOptions):
     return ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts)
 
 
+def _resolve_bwd_fused(spec, opts, *, B, H, L, K, dtype, padding):
+    """(fused_variant, resolved_opts) or (None, None) for a split backward.
+
+    Pure function of static (trace-time) arguments — called identically by
+    the fwd and bwd VJP rules so residual layout and consumer agree.
+    """
+    if spec.bwd == "fused":
+        return spec.bwd_fused, (opts if opts is not None else ops.DEFAULT_OPTS)
+    if spec.bwd == "auto":
+        v, o = ops.resolve_variant("bwd_fused", "auto", opts, B=B, H=H, L=L,
+                                   K=K, dtype=dtype, padding=padding)
+        # A stale/foreign cache entry naming an unknown fused kernel must
+        # degrade to the split backward, never crash the VJP.
+        if v in ops.BWD_FUSED_VARIANTS and v != "split":
+            return v, o
+    return None, None
+
+
 def _dwconv_fwd_rule(x, k, padding, variant, opts):
-    return _dwconv(x, k, padding, variant, opts), (x, k)
+    spec = get_variant(variant)
+    B, H, L = x.shape
+    K = k.shape[-1]
+    fused_v, _ = _resolve_bwd_fused(spec, opts, B=B, H=H, L=L, K=K,
+                                    dtype=x.dtype, padding=padding)
+    if fused_v is None:
+        return _dwconv(x, k, padding, variant, opts), (x, k)
+    # Fused backward: save the forward's unified-Wpad padded input as the
+    # residual (x itself when the reference forward materializes none).
+    y, xp = ops.dwconv_fwd_op_res(x, k, padding, spec.fwd, opts)
+    return y, (xp if xp is not None else x, k)
 
 
 def _dwconv_bwd_rule(padding, variant, opts, res, dy):
-    x, k = res
+    xr, k = res
     spec = get_variant(variant)
     K = k.shape[-1]
+    B, H, L = dy.shape
+    fused_v, fused_opts = _resolve_bwd_fused(spec, opts, B=B, H=H, L=L, K=K,
+                                             dtype=xr.dtype, padding=padding)
+    if fused_v is not None:
+        fwd_v, _ = ops.resolve_variant("fwd", spec.fwd, opts, B=B, H=H, L=L,
+                                       K=K, dtype=xr.dtype, padding=padding)
+        xp_saved = fwd_v != "xla"  # Pallas forwards saved the padded buffer
+        dx, dk = ops.dwconv_bwd_fused_op(
+            None if xp_saved else xr, dy, k, padding, fused_v, fused_opts,
+            xp=xr if xp_saved else None)
+        return dx.astype(xr.dtype), dk.astype(k.dtype)
+    x = xr
     if spec.bwd_in == "xla":
         dx = ref.dwconv_bwd_input_ref(dy, k, padding)
     else:
@@ -94,3 +144,9 @@ def run_bwd_kernel(x, dy, K, padding="same", variant="row", opts=None):
     if spec.bwd_k == "xla":
         return ref.dwconv_bwd_kernel_ref(x, dy, K, padding)
     return ops.dwconv_bwd_kernel_op(x, dy, K, padding, spec.bwd_k, opts)
+
+
+def run_bwd_fused(x, dy, k, padding="same", variant="fused", opts=None):
+    """Run the fused backward path standalone -> (dx, dk).  ``variant`` is a
+    ``BWD_FUSED_VARIANTS`` name ("split" runs the two independent ops)."""
+    return ops.dwconv_bwd_fused_op(x, dy, k, padding, variant, opts)

@@ -4,6 +4,12 @@ Exactly one thing varies across a study run: which kernel implementation
 executes each of the three execution paths (FWD / BWD_in / BWD_k).  A
 ``VariantSpec`` names the implementation for each path; the registry maps the
 paper's four CUDA variants (plus the XLA reference) to their TPU analogues.
+
+``bwd`` selects the backward-pass *structure*: ``"split"`` runs BWD_in and
+BWD_k as two independent ops (the paper's controlled per-path study);
+``"fused"`` computes both gradients in one staged pass
+(``kernels/dwconv_bwd_fused.py``), reusing the forward's padded residual;
+``"auto"`` lets the tuning cache decide per shape.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ class VariantSpec:
     bwd_in: str     # same kernel family as fwd (flipped filter)
     bwd_k: str      # one of ops.BWDK_VARIANTS
     description: str = ""
+    bwd: str = "split"        # backward structure: "split" | "fused" | "auto"
+    bwd_fused: str = "fused"  # kernel when bwd == "fused" (ops.BWD_FUSED_VARIANTS)
 
 
 REGISTRY: Dict[str, VariantSpec] = {
@@ -44,6 +52,15 @@ REGISTRY: Dict[str, VariantSpec] = {
             "(warp-tiled analogue)",
         ),
         VariantSpec(
+            "fused", "row", "row", "accum",
+            "full-row forward + single-pass fused backward: x_pad and dy "
+            "are staged in VMEM once per (h-block x batch-chunk) cell and "
+            "both dx and dk are computed from the shared slab, with the "
+            "forward's padded x reused as the VJP residual (bwd_in/bwd_k "
+            "here are the bwd='split' escape hatch configuration)",
+            bwd="fused", bwd_fused="fused",
+        ),
+        VariantSpec(
             "xla", "xla", "xla", "xla",
             "pure-jnp reference lowered by XLA (the PyTorch-reference role: "
             "numerical oracle + SPMD-friendly production path)",
@@ -54,7 +71,9 @@ REGISTRY: Dict[str, VariantSpec] = {
             "(repro.tuning): each execution path runs the counter-free "
             "autotuner's winner for the current (B, H, L, K, dtype, "
             "backend), falling back to the 'row'/'accum' defaults when the "
-            "shape has not been tuned",
+            "shape has not been tuned; the backward structure (fused vs "
+            "split) is likewise resolved through the 'bwd_fused' path",
+            bwd="auto",
         ),
     ]
 }

@@ -1,0 +1,183 @@
+"""Pallas TPU kernels — the *fused* backward pass (dx and dk in one sweep).
+
+The split backward runs two independent ops: the input-gradient path pads
+``dy`` into an adjoint layout and re-runs the forward kernels with a flipped
+filter, then the weight-gradient path pads ``dy`` *again* (into a different
+layout) and re-reads the freshly re-padded ``x``.  Every operand therefore
+crosses HBM twice and three distinct padded layouts are materialized.
+
+These kernels stage ``x_pad`` and ``dy`` in VMEM **once** per
+(h-block x batch-chunk) grid cell and compute *both* gradients from the
+shared slab:
+
+    dx[b,h,s] = sum_j dy_pad[b,h,s+j] * k[h,K-1-j]     (flipped-filter taps)
+    dk[h,j]   = sum_{b,t} dy[b,h,t] * x_pad[b,h,t+j]   (tap partials)
+
+A single ``dy`` layout serves both: ``dy`` is padded with ``p_right`` zeros
+on the left (the adjoint layout), so the dx taps read it at offset ``j`` and
+the dk reduction reads the un-shifted window at static offset
+``off_dk = p_right``.  Two family members mirror the weight-gradient study:
+
+  fused          : dk accumulates in-place into a revisited output block
+                   across the sequential batch-chunk grid (the ``accum``
+                   structure); dx blocks are written per cell.
+  fused_partials : per-chunk dk partials round-trip HBM and a second jnp
+                   reduction combines them (the ``twostage`` structure).
+
+Inputs arrive pre-padded from ``ops.py``:
+  xp  (B, H, >=Wk) with ``p_left`` forward padding — the *forward's own*
+      padded residual is accepted verbatim (its unified Wpad is a superset
+      of the ``Wk = round_up(round_up(L,LANE) + K - 1, LANE)`` window the
+      BlockSpecs slice);
+  dyp (B, H, Wk)   with ``p_right`` adjoint padding;
+  kp  (H, Kp)      lane-padded filters.
+Outputs: dx (B, H, Lout) in dy's dtype and dk (H, Kp) in f32; ``ops.py``
+slices both back to logical shapes.  Accumulation is f32; the dk partials
+are computed with the *same* slab shapes as ``dwconv_bwdk``'s staged
+variants, so fused dk matches the ``accum`` variant bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dwconv_bwdk import _taps_from_slabs
+
+
+def _dx_from_slab(dy32: jnp.ndarray, kv: jnp.ndarray, K: int, Lout: int) -> jnp.ndarray:
+    """(Bc, Hb, >=Lout+K-1) adjoint-padded dy slab -> dx taps (Bc, Hb, Lout)."""
+    acc = jnp.zeros(dy32.shape[:2] + (Lout,), jnp.float32)
+    for j in range(K):  # static unroll: flipped-filter multiply-adds from VMEM
+        acc = acc + dy32[:, :, j : j + Lout] * kv[:, K - 1 - j][None, :, None]
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# fused (accum-style): sequential-grid in-place dk accumulation
+# ---------------------------------------------------------------------------
+
+
+def _fused_accum_kernel(
+    x_ref, dy_ref, k_ref, dx_ref, dk_ref, *, K: int, Kp: int, Lout: int, off_dk: int
+):
+    c = pl.program_id(1)  # batch-chunk index — innermost, sequential
+
+    @pl.when(c == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+
+    # Both operand slabs staged once; every tap of BOTH gradients reads VMEM.
+    x32 = x_ref[...].astype(jnp.float32)
+    dy32 = dy_ref[...].astype(jnp.float32)
+    kv = k_ref[...].astype(jnp.float32)
+    dx_ref[...] = _dx_from_slab(dy32, kv, K, Lout).astype(dx_ref.dtype)
+    dy_win = dy32[:, :, off_dk : off_dk + Lout]  # forward-aligned window
+    dk_ref[...] += _taps_from_slabs(x32, dy_win, K, Kp).astype(dk_ref.dtype)
+
+
+def dwconv_bwd_fused_accum(
+    xp: jnp.ndarray,
+    dyp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    off_dk: int,
+    block_w: int,
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One staged pass -> (dx (B, H, Lout), dk (H, Kp) f32)."""
+    B, H, Wx = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    assert Wx >= block_w and dyp.shape[-1] >= block_w, (Wx, dyp.shape, block_w)
+    assert block_w >= Lout + K - 1 >= off_dk + Lout, (block_w, Lout, K, off_dk)
+    grid = (H // Hb, B // Bc)
+    return pl.pallas_call(
+        functools.partial(_fused_accum_kernel, K=K, Kp=Kp, Lout=Lout, off_dk=off_dk),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Lout), dyp.dtype),
+            jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+        ],
+        grid=grid,
+        in_specs=[
+            # Width block_w slices the staged window out of a possibly wider
+            # forward residual — the reuse is free, not a re-pad.
+            pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bc, Hb, Lout), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+        ],
+        interpret=interpret,
+    )(xp, dyp, kp)
+
+
+# ---------------------------------------------------------------------------
+# fused_partials (twostage-style): HBM dk partials + second reduction stage
+# ---------------------------------------------------------------------------
+
+
+def _fused_partials_kernel(
+    x_ref, dy_ref, k_ref, dx_ref, part_ref, *, K: int, Kp: int, Lout: int, off_dk: int
+):
+    x32 = x_ref[...].astype(jnp.float32)
+    dy32 = dy_ref[...].astype(jnp.float32)
+    kv = k_ref[...].astype(jnp.float32)
+    dx_ref[...] = _dx_from_slab(dy32, kv, K, Lout).astype(dx_ref.dtype)
+    dy_win = dy32[:, :, off_dk : off_dk + Lout]
+    part_ref[0] = _taps_from_slabs(x32, dy_win, K, Kp)
+
+
+def dwconv_bwd_fused_partials(
+    xp: jnp.ndarray,
+    dyp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    off_dk: int,
+    block_w: int,
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Staged pass with explicit per-chunk dk partials -> (dx, dk)."""
+    B, H, Wx = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    assert Wx >= block_w and dyp.shape[-1] >= block_w, (Wx, dyp.shape, block_w)
+    assert block_w >= Lout + K - 1 >= off_dk + Lout, (block_w, Lout, K, off_dk)
+    nC = B // Bc
+    grid = (H // Hb, nC)
+    dx, partials = pl.pallas_call(
+        functools.partial(_fused_partials_kernel, K=K, Kp=Kp, Lout=Lout, off_dk=off_dk),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Lout), dyp.dtype),
+            jax.ShapeDtypeStruct((nC, H, Kp), jnp.float32),
+        ],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bc, Hb, Lout), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((1, Hb, Kp), lambda h, c: (c, h, 0)),
+        ],
+        interpret=interpret,
+    )(xp, dyp, kp)
+    return dx, jnp.sum(partials, axis=0)  # second reduction stage

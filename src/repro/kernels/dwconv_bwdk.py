@@ -21,6 +21,11 @@ idiomatic structures:
 Inputs arrive pre-padded from ops.py: xp (B, H, Wpad), dy (B, H, L).
 Output: (H, Kp) with Kp = round_up(K, LANE); ops.py slices to (H, K).
 Accumulation is f32.
+
+``dwconv_bwd_fused.py`` extends the ``accum``/``twostage`` staging into a
+*fused* backward that also emits dx from the same slab (one HBM pass over
+each operand for the whole backward); this module remains the split-path
+weight-gradient study the paper's per-path tables are built from.
 """
 from __future__ import annotations
 

@@ -10,6 +10,11 @@ entry points to ``dwconv_fwd.py`` / ``dwconv_bwdk.py``.
 (this container is CPU-only, so tests/benches run the kernel bodies in
 interpret mode — the validation regime prescribed for this build).
 
+The *fused backward* entry point ``dwconv_bwd_fused_op`` computes dx and dk
+in one staged pass (``dwconv_bwd_fused.py``): every padded buffer here uses
+the ``unified_wpad`` width, so the forward's ``xp`` doubles as the fused
+VJP residual with no re-pad in backward.
+
 ``variant="auto"`` (or ``opts=None`` with it) consults the persistent tuning
 cache written by ``repro.tuning`` (keyed on execution path + static shape +
 padding + dtype + backend) and dispatches the cached winner — implementation variant
@@ -27,7 +32,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dwconv_bwdk, dwconv_fwd, ref
+from repro.kernels import dwconv_bwd_fused, dwconv_bwdk, dwconv_fwd, ref
 from repro.kernels.common import (
     LANE,
     DWConvDims,
@@ -40,9 +45,15 @@ from repro.kernels.common import (
 
 FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
 BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
+# Fused backward family ("split" = run the two independent backward ops —
+# the escape hatch preserving the paper's controlled per-path study).
+BWD_FUSED_VARIANTS = ("fused", "fused_partials", "split")
 
 # Pre-autotuner hard-coded choices, kept as the no-cache-entry fallback.
-AUTO_FALLBACK = {"fwd": "row", "bwd_in": "row", "bwd_k": "accum"}
+# The backward stays "split" until a tuning run selects the fused kernel,
+# so untuned shapes keep the historical per-path behaviour.
+AUTO_FALLBACK = {"fwd": "row", "bwd_in": "row", "bwd_k": "accum",
+                 "bwd_fused": "split"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,18 +119,44 @@ def resolve_variant(
     return AUTO_FALLBACK[path], opts
 
 
-def _pad_channels(a: jnp.ndarray, H: int, Hb: int, axis: int) -> jnp.ndarray:
-    Hp = round_up(H, Hb)
-    if Hp == H:
+def _pad_to(a: jnp.ndarray, n: int, axis: int) -> jnp.ndarray:
+    """Zero-pad one axis up to an exact length (no-op when already there)."""
+    if a.shape[axis] == n:
         return a
     widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, Hp - H)
+    widths[axis] = (0, n - a.shape[axis])
     return jnp.pad(a, widths)
+
+
+def _pad_channels(a: jnp.ndarray, H: int, Hb: int, axis: int) -> jnp.ndarray:
+    return _pad_to(a, round_up(H, Hb), axis)
 
 
 def _pad_kernel_lanes(k: jnp.ndarray, K: int) -> jnp.ndarray:
     Kp = round_up(K, LANE)
     return jnp.pad(k, ((0, 0), (0, Kp - K))) if Kp > K else k
+
+
+def bwd_fused_wpad(L: int, K: int) -> int:
+    """Staged-window width the fused backward kernels read: one padded
+    layout covering both the dx taps and the dk reduction."""
+    return round_up(round_up(L, LANE) + K - 1, LANE)
+
+
+def unified_wpad(L: int, K: int, block_t: int) -> int:
+    """One padded-buffer width serving every forward variant's window reads
+    *and* the fused backward's staged window (``bwd_fused_wpad`` is its
+    first max term), so the forward's ``xp`` is reusable as the fused VJP
+    residual verbatim — no re-pad in backward."""
+    Lout = round_up(L, LANE)
+    Lt = min(block_t, Lout)
+    nT = cdiv(Lout, Lt)
+    Wpad = max(
+        bwd_fused_wpad(L, K),                # row + fused-backward window
+        (nT + 1) * Lt,                       # block: neighbour halo tile
+        nT * Lt + K - 1 + LANE,              # lane: widened aligned windows
+    )
+    return round_up(Wpad, LANE)
 
 
 def _fwd_impl(
@@ -128,21 +165,15 @@ def _fwd_impl(
     p_left: int,
     variant: str,
     opts: KernelOptions,
-) -> jnp.ndarray:
+    return_padded: bool = False,
+):
     B, H, L = x.shape
     _, K = k.shape
     interpret = opts.resolved_interpret()
     Hb = min(opts.block_h, H)
     Lout = round_up(L, LANE)
     Lt = min(opts.block_t, Lout)
-    nT = cdiv(Lout, Lt)
-    # One padded buffer wide enough for every variant's window reads.
-    Wpad = max(
-        round_up(Lout + K - 1, LANE),
-        (nT + 1) * Lt,                       # block: neighbour halo tile
-        nT * Lt + K - 1 + LANE,              # lane: widened aligned windows
-    )
-    Wpad = round_up(Wpad, LANE)
+    Wpad = unified_wpad(L, K, opts.block_t)
     xp = jnp.pad(x, ((0, 0), (0, 0), (p_left, Wpad - L - p_left)))
     xp = _pad_channels(xp, H, Hb, axis=1)
     kp = _pad_channels(_pad_kernel_lanes(k, K), H, Hb, axis=0)
@@ -158,7 +189,8 @@ def _fwd_impl(
         y = dwconv_fwd.dwconv_fwd_lane(xp, kp, block_t=Lt, **kw)
     else:
         raise ValueError(f"unknown fwd variant {variant!r}")
-    return y[:, :H, :L]
+    y = y[:, :H, :L]
+    return (y, xp) if return_padded else y
 
 
 def dwconv_fwd_op(
@@ -178,6 +210,26 @@ def dwconv_fwd_op(
         return ref.dwconv_fwd_ref(x, k, padding)
     p_left, _ = pad_widths(K, padding)
     return _fwd_impl(x, k, p_left, variant, opts)
+
+
+def dwconv_fwd_op_res(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    padding: Padding = "same",
+    variant: str = "row",
+    opts: Optional[KernelOptions] = None,
+):
+    """Forward pass that also returns the unified-``Wpad`` padded input as
+    the fused-backward VJP residual (``None`` when the reference path runs —
+    there is no materialized padded buffer to reuse)."""
+    B, H, L = x.shape
+    K = k.shape[-1]
+    variant, opts = resolve_variant("fwd", variant, opts, B=B, H=H, L=L, K=K,
+                                    dtype=x.dtype, padding=padding)
+    if variant == "xla":
+        return ref.dwconv_fwd_ref(x, k, padding), None
+    p_left, _ = pad_widths(K, padding)
+    return _fwd_impl(x, k, p_left, variant, opts, return_padded=True)
 
 
 def dwconv_bwd_input_op(
@@ -248,6 +300,87 @@ def dwconv_bwd_kernel_op(
     if variant == "xla":
         return ref.dwconv_bwd_kernel_ref(x, dy, K, padding)
     return _bwdk_impl(x, dy, K, padding, variant, opts)
+
+
+def _bwd_fused_impl(
+    x: Optional[jnp.ndarray],
+    dy: jnp.ndarray,
+    k: jnp.ndarray,
+    padding: Padding,
+    variant: str,
+    opts: KernelOptions,
+    xp: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, H, L = dy.shape
+    K = k.shape[-1]
+    interpret = opts.resolved_interpret()
+    Hb = min(opts.block_h, H)
+    Bc = min(opts.batch_chunk, B)
+    p_left, p_right = pad_widths(K, padding)
+    Lout = round_up(L, LANE)
+    Wk = bwd_fused_wpad(L, K)
+    Bp = round_up(B, Bc)
+    if xp is None:
+        xp = jnp.pad(x, ((0, Bp - B), (0, 0), (p_left, Wk - L - p_left)))
+    else:
+        # The forward's unified-Wpad residual: same left padding, width a
+        # superset of Wk — the kernel BlockSpecs slice the Wk window out of
+        # it, so reuse costs nothing.
+        if xp.shape[-1] < Wk:
+            raise ValueError(f"residual width {xp.shape[-1]} < fused window {Wk}")
+        if Bp > B:
+            xp = jnp.pad(xp, ((0, Bp - B), (0, 0), (0, 0)))
+    # One dy layout serves both gradients: adjoint left padding p_right for
+    # the dx taps; the dk reduction reads at static offset off_dk=p_right.
+    dyp = jnp.pad(dy, ((0, Bp - B), (0, 0), (p_right, Wk - L - p_right)))
+    Hp = round_up(xp.shape[1], Hb)
+    xp = _pad_to(xp, Hp, axis=1)
+    dyp = _pad_to(dyp, Hp, axis=1)
+    kp = _pad_to(_pad_kernel_lanes(k, K), Hp, axis=0)
+
+    kw = dict(K=K, Lout=Lout, off_dk=p_right, block_w=Wk,
+              block_h=Hb, batch_chunk=Bc, interpret=interpret)
+    if variant == "fused":
+        dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_accum(xp, dyp, kp, **kw)
+    elif variant == "fused_partials":
+        dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_partials(xp, dyp, kp, **kw)
+    else:
+        raise ValueError(f"unknown bwd_fused variant {variant!r}")
+    return dx[:B, :H, :L], dk[:H, :K]
+
+
+def dwconv_bwd_fused_op(
+    x: Optional[jnp.ndarray],
+    dy: jnp.ndarray,
+    k: jnp.ndarray,
+    padding: Padding = "same",
+    variant: str = "fused",
+    opts: Optional[KernelOptions] = None,
+    *,
+    xp: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One staged pass -> (dx, dk): both operands cross HBM once, one padded
+    layout each (vs two dy reads and three layouts on the split path).
+
+    ``xp`` (the forward's unified-``Wpad`` padded residual) is reused
+    verbatim when given; otherwise the raw ``x`` is padded here — still a
+    single layout.  ``variant="auto"`` consults the ``bwd_fused`` tuning
+    path; ``"split"`` (also the untuned fallback) delegates to the two
+    independent backward ops, preserving the controlled per-path study.
+    dk returns f32 (H, K); callers cast to the parameter dtype.
+    """
+    B, H, L = dy.shape
+    K = k.shape[-1]
+    caller_opts = opts
+    variant, opts = resolve_variant("bwd_fused", variant, opts, B=B, H=H, L=L,
+                                    K=K, dtype=dy.dtype, padding=padding)
+    if variant == "split":
+        if x is None:
+            raise ValueError("bwd_fused variant 'split' needs the unpadded input x")
+        dx = dwconv_bwd_input_op(dy, k, padding, "auto", caller_opts)
+        dk = dwconv_bwd_kernel_op(x, dy, K, padding, "auto", caller_opts)
+        return dx, dk
+    return _bwd_fused_impl(x, dy, k, padding, variant, opts, xp=xp)
 
 
 @functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))

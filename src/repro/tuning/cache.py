@@ -7,7 +7,8 @@ selected it.  Design points:
 
   * **versioned**: the file carries ``CACHE_VERSION``; entries written by an
     incompatible tuner are ignored (never mis-applied) and overwritten on
-    the next save;
+    the next save, while ``MIGRATABLE_VERSIONS`` whose entries remain valid
+    (e.g. v2, which merely predates the ``bwd_fused`` path) migrate verbatim;
   * **memoized**: one in-process :class:`TuningCache` per resolved file path
     — ``variant="auto"`` dispatch in ``kernels/ops.py`` costs a dict lookup
     after the first miss, not file I/O per call;
@@ -32,7 +33,13 @@ from typing import Dict, Optional
 
 from repro.kernels.ops import KernelOptions
 
-CACHE_VERSION = 2  # v2: padding joined the shape key ('same' vs 'causal')
+CACHE_VERSION = 3  # v3: the 'bwd_fused' execution path joined the key space
+# Older schemas whose entries are still valid per-path decisions and are
+# carried forward on load (and re-written as CACHE_VERSION on next save).
+# v2 == v3 minus the bwd_fused path: its keys can never collide with or
+# mis-apply to the new path, so entries migrate verbatim.  v1 lacked the
+# padding key component and is never migrated.
+MIGRATABLE_VERSIONS = (2,)
 CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
 # Anchored to the source tree (src/repro/tuning/ -> repo root), not the CWD:
 # a tuner run from the repo root and a training job launched from a scratch
@@ -125,7 +132,8 @@ class TuningCache:
             raw = json.loads(self.path.read_text())
         except (OSError, json.JSONDecodeError):
             return {}  # unreadable/corrupt: treat as empty, next save rewrites
-        if raw.get("version") != CACHE_VERSION:
+        version = raw.get("version")
+        if version != CACHE_VERSION and version not in MIGRATABLE_VERSIONS:
             return {}  # incompatible schema: never mis-apply stale decisions
         out: Dict[str, TuneEntry] = {}
         for key, ed in raw.get("entries", {}).items():

@@ -41,6 +41,12 @@ def _traffic_for(c: Candidate, d: DWConvDims, itemsize: int) -> traffic.TrafficE
     if c.path in ("fwd", "bwd_in"):
         return traffic.fwd_traffic(d, c.variant, itemsize,
                                    block_h=c.block_h, block_t=c.block_t)
+    if c.path == "bwd_fused":
+        # Whole-backward accounting (pad materialization charged): fused
+        # candidates against the "split" two-op baseline, like for like.
+        return traffic.bwd_fused_traffic(d, c.variant, itemsize,
+                                         block_h=c.block_h,
+                                         batch_chunk=c.batch_chunk)
     return traffic.bwdk_traffic(d, c.variant, itemsize,
                                 block_h=c.block_h, batch_chunk=c.batch_chunk)
 
@@ -127,6 +133,16 @@ def build_measurable(
             fn = jax.jit(
                 lambda x, dy: ops.dwconv_bwd_kernel_op(x, dy, d.K, d.padding, c.variant, opts))
         return fn, (x, dy)
+    if c.path == "bwd_fused":
+        # Whole backward in one measurable: the fused kernels, or — for the
+        # "split" baseline — the two independent ops resolved through their
+        # own tuned (or fallback) configurations.
+        dy = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), dt)
+        fn = jax.jit(
+            lambda x, dy, k: ops.dwconv_bwd_fused_op(
+                x, dy, k, d.padding, c.variant,
+                None if c.variant == "split" else opts))
+        return fn, (x, dy, k)
     raise ValueError(f"unknown path {c.path!r}")
 
 

@@ -21,6 +21,11 @@ understands.  The legality predicates mirror the asserts inside
 
 The same structure generalizes the paper's four-variant study axis: the
 tuner explores exactly the implementations the controlled study compares.
+The ``bwd_fused`` path extends the axis to the backward-pass *structure*:
+its candidates are the fused single-pass kernels (staging both operand
+slabs — double the bwd_k working set, checked against VMEM) plus ``split``,
+which delegates to the independently tuned bwd_in + bwd_k ops, so
+fused-vs-split is itself a counter-free tuning decision.
 """
 from __future__ import annotations
 
@@ -33,12 +38,27 @@ from repro.analysis.hw import TPU_V5E, HardwareModel
 from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
 from repro.kernels.ops import KernelOptions
 
-PATHS = ("fwd", "bwd_in", "bwd_k")
+PATHS = ("fwd", "bwd_in", "bwd_k", "bwd_fused")
 
 # Kernel implementations selectable per path ("xla" = the jnp reference,
 # which is also the SPMD production path — a legitimate tuning outcome).
 FWD_SPACE_VARIANTS = ("row", "block", "lane", "naive", "xla")
 BWDK_SPACE_VARIANTS = ("accum", "twostage", "naive", "xla")
+# The whole-backward path: fused single-pass kernels vs "split" (run the
+# independently tuned bwd_in + bwd_k ops) — fused-vs-split dispatch is a
+# tuning decision like any other.
+BWD_FUSED_SPACE_VARIANTS = ("fused", "fused_partials", "split")
+
+# Variants with no tiling knobs of their own (reference / delegating paths).
+_KNOBLESS = ("xla", "split")
+
+
+def _space_variants(path: str) -> Tuple[str, ...]:
+    if path in ("fwd", "bwd_in"):
+        return FWD_SPACE_VARIANTS
+    if path == "bwd_k":
+        return BWDK_SPACE_VARIANTS
+    return BWD_FUSED_SPACE_VARIANTS
 
 # Tiling lattices (clamped to the problem dims during normalization).
 BLOCK_H_CHOICES = (1, 2, 4, 8, 16, 32)
@@ -90,13 +110,14 @@ def normalize(c: Candidate, d: DWConvDims) -> Candidate:
     to the same normalized value, which keeps the measured set minimal.
     """
     Hb, Lt, Bc, _ = _effective_tiles(c, d)
-    if c.variant == "xla":  # reference path has no tiling knobs
+    if c.variant in _KNOBLESS:  # reference/delegating paths: no tiling knobs
         return Candidate(c.path, c.variant, _DEFAULT.block_h,
                          _DEFAULT.block_t, _DEFAULT.batch_chunk)
     if c.path in ("fwd", "bwd_in"):
         if c.variant == "row":  # row stages the whole temporal row: no Lt
             Lt = _DEFAULT.block_t
         return Candidate(c.path, c.variant, Hb, Lt, _DEFAULT.batch_chunk)
+    # bwd_k and bwd_fused: (h-block x batch-chunk) grids, no temporal tile
     return Candidate(c.path, c.variant, Hb, _DEFAULT.block_t, Bc)
 
 
@@ -110,6 +131,11 @@ def _vmem_working_set_bytes(c: Candidate, d: DWConvDims, itemsize: int) -> int:
         if c.variant == "block":
             return Hb * 3 * Lt * itemsize          # cur + halo + out tile
         return Hb * (Lt + LANE + Lt) * itemsize    # naive/lane scratch + out
+    if c.path == "bwd_fused":
+        # Both operand slabs (width Wpad each) + the dx output block + the
+        # dk accumulator staged per (h-block, batch-chunk) cell.
+        return (Bc * Hb * (2 * Wpad + Lout) * itemsize
+                + Hb * round_up(d.K, LANE) * 4)
     # bwd_k: both operand slabs staged per (h-block, batch-chunk) cell.
     return Bc * Hb * (Wpad + d.L) * itemsize
 
@@ -128,12 +154,12 @@ def is_legal(
     """
     if c.path not in PATHS:
         return False, f"unknown path {c.path!r}"
-    variants = FWD_SPACE_VARIANTS if c.path in ("fwd", "bwd_in") else BWDK_SPACE_VARIANTS
+    variants = _space_variants(c.path)
     if c.variant not in variants:
         return False, f"variant {c.variant!r} not applicable to path {c.path!r}"
     if min(c.block_h, c.block_t, c.batch_chunk) < 1:
         return False, "tiling knobs must be positive"
-    if c.variant == "xla":
+    if c.variant in _KNOBLESS:
         return True, "ok"
 
     Hb, Lt, Bc, Lout = _effective_tiles(c, d)
@@ -165,7 +191,7 @@ def search_space(
     if path not in PATHS:
         raise ValueError(f"unknown path {path!r}; known: {PATHS}")
     if variants is None:
-        variants = FWD_SPACE_VARIANTS if path in ("fwd", "bwd_in") else BWDK_SPACE_VARIANTS
+        variants = _space_variants(path)
     if not include_xla:
         variants = tuple(v for v in variants if v != "xla")
 
@@ -208,8 +234,7 @@ def neighbors(c: Candidate, d: DWConvDims, *, itemsize: int = 4,
         for nv in (below, above):
             if nv is not None and nv != cur:
                 moves.append(dataclasses.replace(c, **{field: nv}))
-    variants = FWD_SPACE_VARIANTS if c.path in ("fwd", "bwd_in") else BWDK_SPACE_VARIANTS
-    for v in variants:
+    for v in _space_variants(c.path):
         if v != c.variant:
             moves.append(dataclasses.replace(c, variant=v))
     uniq, seen = [], {c}

@@ -5,11 +5,16 @@
   1. enumerate the legal candidate space (``space.search_space``);
   2. rank every candidate with the analytical traffic/roofline model
      (``cost.rank_candidates``) — no execution;
-  3. spend the measurement *budget* only on the analytical front-runners:
-       * ``grid``      — measure the top ``budget`` candidates outright;
-       * ``hillclimb`` — measure the analytical best, then walk single-knob
-         neighbour moves (``space.neighbors``), accepting improvements,
-         until the budget is exhausted or a local optimum is reached;
+  3. spend the measurement *budget* only on the analytical front-runners —
+     with one slot always reserved for the *fallback baseline* (the
+     ``AUTO_FALLBACK`` configuration ``variant="auto"`` uses on a cache
+     miss), so the persisted winner is never slower than what an untuned
+     dispatch would have run:
+       * ``grid``      — measure the baseline + top candidates up to budget;
+       * ``hillclimb`` — measure the baseline and the analytical best, then
+         walk single-knob neighbour moves (``space.neighbors``), accepting
+         improvements, until the budget is exhausted or a local optimum is
+         reached;
   4. write the winner into the persistent tuning cache, where
      ``variant="auto"`` dispatch (``kernels/ops.py``) picks it up.
 
@@ -50,6 +55,17 @@ class TuneResult:
             block_t=self.best.block_t,
             batch_chunk=self.best.batch_chunk,
         )
+
+
+def fallback_candidate(d: DWConvDims, path: str) -> Candidate:
+    """The configuration ``variant="auto"`` runs on a cache miss — always
+    metered so tuning can only ever improve on untuned dispatch."""
+    from repro.kernels.ops import AUTO_FALLBACK, DEFAULT_OPTS
+
+    return space.normalize(
+        Candidate(path=path, variant=AUTO_FALLBACK[path],
+                  block_h=DEFAULT_OPTS.block_h, block_t=DEFAULT_OPTS.block_t,
+                  batch_chunk=DEFAULT_OPTS.batch_chunk), d)
 
 
 def _make_key(d: DWConvDims, path: str, dtype: str, backend: Optional[str]) -> ShapeKey:
@@ -102,12 +118,21 @@ def tune_path(
                       flush=True)
         return measured[c]
 
+    # The baseline is metered first (within budget): the persisted winner
+    # can then never regress what an untuned variant="auto" would run.
+    meter(fallback_candidate(d, path))
+
     if search == "grid":
-        for c, _ in ranked[:budget]:
+        for c, _ in ranked:
+            if len(measured) >= budget:
+                break
             meter(c)
     elif search == "hillclimb":
         cur = ranked[0][0]
-        meter(cur)
+        if len(measured) < budget:
+            meter(cur)
+        if cur not in measured:  # budget=1: the baseline is the answer
+            cur = next(iter(measured))
         improved = True
         while improved and len(measured) < budget:
             improved = False

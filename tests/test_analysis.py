@@ -7,6 +7,8 @@ import pytest
 from repro.analysis import (
     TPU_V5E,
     analyze_hlo,
+    bwd_fused_traffic,
+    bwd_split_traffic,
     bwdk_traffic,
     effective_bandwidth,
     fwd_traffic,
@@ -148,6 +150,42 @@ def test_traffic_ordering_bwdk():
     acc = bwdk_traffic(d, "accum")
     assert naive.bytes_moved > two.bytes_moved > acc.bytes_moved
     assert not naive.reliable  # paper Table III: naive is N/A
+
+
+def test_fwd_traffic_charges_filter_reads_uniformly():
+    """Every variant charges one logical pass over the (H, K) filter bank —
+    the naive/lane branches must not disagree on kernel-operand accounting."""
+    from repro.kernels.common import LANE, cdiv, round_up
+
+    d = DWConvDims(B=4, H=16, L=256, K=9)
+    itemsize, Hb, bt = 4, 8, 128
+    kb = d.H * d.K * itemsize
+    Lout = round_up(d.L, LANE)
+    Lt = min(bt, Lout)
+    n_tiles = d.B * cdiv(d.H, Hb) * cdiv(Lout, Lt)
+    naive = fwd_traffic(d, "naive", itemsize, block_h=Hb, block_t=bt)
+    lane = fwd_traffic(d, "lane", itemsize, block_h=Hb, block_t=bt)
+    assert naive.bytes_read == n_tiles * d.K * Hb * Lt * itemsize + kb
+    assert lane.bytes_read == n_tiles * d.K * Hb * (Lt + LANE) * itemsize + kb
+    # lane differs from naive only by the alignment overfetch
+    assert lane.bytes_read - naive.bytes_read == n_tiles * d.K * Hb * LANE * itemsize
+    for v in ("block", "row", "xla"):
+        assert fwd_traffic(d, v, itemsize, block_h=Hb, block_t=bt).bytes_read >= kb
+
+
+def test_bwd_fused_traffic_model():
+    """Whole-backward accounting: fused < fused_partials < split, and the
+    paper-shape gate the fused-backward benchmark enforces."""
+    d = PAPER_DIMS
+    fused = bwd_fused_traffic(d, "fused")
+    partials = bwd_fused_traffic(d, "fused_partials")
+    split = bwd_fused_traffic(d, "split")
+    assert split.bytes_moved == bwd_split_traffic(d).bytes_moved
+    assert fused.bytes_moved < partials.bytes_moved < split.bytes_moved
+    assert fused.bytes_moved <= 0.6 * split.bytes_moved
+    # both gradients' multiply-adds are counted once each
+    assert fused.flops == 2 * path_flops(d) == split.flops
+    assert fused.reliable and fused.aligned
 
 
 def test_effective_bandwidth_na_for_naive():

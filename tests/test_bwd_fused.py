@@ -1,0 +1,269 @@
+"""Fused-backward validation: exactness vs ``jax.vjp`` of the XLA reference
+across K parity / padding / dtype / non-divisible shapes, bit-for-bit dk
+agreement with the split ``accum`` variant, residual reuse through the
+custom VJP, tuning-cache dispatch of the fused path, and the cache schema
+bump (v2 databases migrate cleanly).
+
+``hypothesis`` is optional, as in ``test_kernels_dwconv.py``: the property
+test skips when it is absent; the deterministic sweeps always run.
+"""
+import json
+
+try:  # optional dev dependency (see README "Optional dependencies")
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
+    st = None
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dwconv as dw
+from repro.core.variant import get_variant
+from repro.kernels import ops, ref
+from repro.tuning import cache as tcache
+from repro.tuning.cache import DEFAULT_CACHE_PATH, ShapeKey, TuneEntry, TuningCache
+
+# (B, H, L, K, padding): odd/even K, same/causal, non-divisible B and H
+# (forcing batch-chunk and channel padding), L both below and above LANE.
+SHAPES = [
+    (2, 8, 48, 48, "same"),      # the paper's L=K geometry (even K)
+    (3, 16, 100, 7, "same"),     # odd K, B not divisible by batch_chunk
+    (2, 4, 200, 4, "causal"),    # causal even K
+    (1, 8, 130, 48, "same"),     # L > LANE
+    (2, 3, 48, 5, "same"),       # H not divisible by block_h
+    (1, 1, 7, 3, "same"),        # degenerate tiny dims
+    (3, 5, 96, 48, "causal"),    # causal long filter, ragged B and H
+]
+FUSED_VARIANTS = ["fused", "fused_partials"]
+SMALL_OPTS = ops.KernelOptions(batch_chunk=2, block_h=3, interpret=True)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _vjp_ref(x, k, dy, pad):
+    _, vjp = jax.vjp(lambda x, k: ref.dwconv_fwd_ref(x, k, pad), x, k)
+    return vjp(dy)
+
+
+# ---------------------------------------------------------------------------
+# exactness vs jax.vjp of the reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", FUSED_VARIANTS)
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES)
+def test_fused_op_matches_vjp(variant, B, H, L, K, pad):
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    dx_want, dk_want = _vjp_ref(x, k, dy, pad)
+    dx, dk = ops.dwconv_bwd_fused_op(x, dy, k, pad, variant, SMALL_OPTS)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+def test_fused_dtype_sweep(dtype, atol):
+    B, H, L, K, pad = 2, 8, 96, 9, "same"
+    x = _rand((B, H, L), dtype, 0)
+    k = _rand((H, K), dtype, 1)
+    dy = _rand((B, H, L), dtype, 2)
+    dx_want, dk_want = _vjp_ref(x, k, dy, pad)
+    dx, dk = ops.dwconv_bwd_fused_op(x, dy, k, pad, "fused", SMALL_OPTS)
+    np.testing.assert_allclose(np.asarray(dx, np.float32),
+                               np.asarray(dx_want, np.float32),
+                               atol=atol, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(dk, np.float32),
+                               np.asarray(dk_want, np.float32),
+                               atol=atol * 10, rtol=1e-2)
+
+
+@pytest.mark.parametrize("variant", ["fused", "xla", "auto"])
+@pytest.mark.parametrize("pad", ["same", "causal"])
+@pytest.mark.parametrize("K", [5, 48])
+def test_custom_vjp_fused_matches_autodiff(variant, pad, K):
+    """The differentiable operator under the fused spec (and its residual
+    reuse: the forward's padded xp feeds the backward) matches XLA grads."""
+    x = _rand((2, 8, 64), jnp.float32, 0)
+    k = _rand((8, K), jnp.float32, 1)
+    spec = "fused" if variant == "fused" else variant
+
+    def loss_custom(x, k):
+        return jnp.sum(jnp.sin(dw.dwconv(x, k, padding=pad, variant=spec)))
+
+    def loss_ref(x, k):
+        return jnp.sum(jnp.sin(ref.dwconv_fwd_ref(x, k, pad)))
+
+    gx, gk = jax.grad(loss_custom, argnums=(0, 1))(x, k)
+    rx, rk = jax.grad(loss_ref, argnums=(0, 1))(x, k)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(rk), atol=1e-3)
+
+
+def test_fwd_op_res_residual_layout():
+    """The saved residual is the forward's own unified-Wpad padded buffer:
+    left pad p_left of zeros, then x verbatim, wide enough for the fused
+    backward's staged window."""
+    from repro.kernels.common import pad_widths
+
+    B, H, L, K = 2, 8, 48, 48
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    y, xp = ops.dwconv_fwd_op_res(x, k, "same", "row",
+                                  ops.KernelOptions(interpret=True))
+    p_left, _ = pad_widths(K, "same")
+    assert xp is not None and xp.shape[-1] >= ops.bwd_fused_wpad(L, K)
+    np.testing.assert_array_equal(np.asarray(xp[:, :H, p_left:p_left + L]),
+                                  np.asarray(x))
+    assert not np.asarray(xp[:, :H, :p_left]).any()
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.dwconv_fwd_ref(x, k, "same")),
+                               atol=1e-4)
+    # the reference forward materializes no padded buffer
+    _, none_xp = ops.dwconv_fwd_op_res(x, k, "same", "xla")
+    assert none_xp is None
+
+
+def test_fused_split_escape_hatch():
+    """variant='split' delegates to the two independent ops — the
+    controlled per-path study survives the fused redesign."""
+    B, H, L, K, pad = 2, 4, 48, 5, "same"
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    dx, dk = ops.dwconv_bwd_fused_op(x, dy, k, pad, "split", SMALL_OPTS)
+    np.testing.assert_allclose(
+        np.asarray(dx), np.asarray(ref.dwconv_bwd_input_ref(dy, k, pad)), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(dk), np.asarray(ref.dwconv_bwd_kernel_ref(x, dy, K, pad)), atol=2e-3)
+    with pytest.raises(ValueError):
+        ops.dwconv_bwd_fused_op(None, dy, k, pad, "split", SMALL_OPTS)
+
+
+def test_variant_registry_has_fused_spec():
+    spec = get_variant("fused")
+    assert spec.bwd == "fused" and spec.bwd_fused in ops.BWD_FUSED_VARIANTS
+    assert get_variant("row").bwd == "split"   # default: study preserved
+    assert get_variant("auto").bwd == "auto"
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit dk agreement with the split accum variant (f32 accumulation)
+# ---------------------------------------------------------------------------
+
+
+def _assert_dk_bitwise(B, H, L, K, pad, seed, opts):
+    x = _rand((B, H, L), jnp.float32, seed)
+    k = _rand((H, K), jnp.float32, seed + 1)
+    dy = _rand((B, H, L), jnp.float32, seed + 2)
+    _, dk_fused = ops.dwconv_bwd_fused_op(x, dy, k, pad, "fused", opts)
+    dk_accum = ops.dwconv_bwd_kernel_op(x, dy, K, pad, "accum", opts)
+    np.testing.assert_array_equal(np.asarray(dk_fused), np.asarray(dk_accum))
+
+
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES[:5])
+def test_fused_dk_bitwise_equals_accum(B, H, L, K, pad):
+    """Identical slab shapes + identical sequential-chunk accumulation order
+    => identical f32 bit patterns (not just allclose)."""
+    _assert_dk_bitwise(B, H, L, K, pad, 0, SMALL_OPTS)
+
+
+if hypothesis is not None:
+
+    @hypothesis.given(
+        st.integers(1, 4), st.integers(1, 10), st.integers(4, 96),
+        st.integers(1, 12), st.sampled_from(["same", "causal"]),
+        st.integers(0, 2**31 - 4),
+    )
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_property_fused_dk_bitwise_equals_accum(B, H, L, K, pad, seed):
+        _assert_dk_bitwise(B, H, L, K, pad, seed, SMALL_OPTS)
+
+else:
+
+    def test_property_fused_dk_bitwise_requires_hypothesis():
+        pytest.skip("hypothesis not installed — property test skipped")
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache dispatch + schema bump
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    p = tmp_path / "cache.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    yield p
+    tcache.reset_default_cache()
+
+
+def test_auto_selects_fused_through_cache(tmp_cache):
+    """variant='auto' + a 'bwd_fused' cache entry => the fused backward runs
+    inside the custom VJP (and still matches XLA autodiff)."""
+    B, H, L, K = 2, 4, 48, 5
+    tcache.default_cache().put(
+        ShapeKey(path="bwd_fused", B=B, H=H, L=L, K=K, dtype="float32",
+                 backend=jax.default_backend()),
+        TuneEntry(variant="fused", block_h=2, block_t=512, batch_chunk=2))
+    v, o = ops.resolve_variant("bwd_fused", "auto", None, B=B, H=H, L=L, K=K,
+                               dtype=jnp.float32)
+    assert v == "fused" and (o.block_h, o.batch_chunk) == (2, 2)
+
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    ga = jax.grad(lambda x, k: jnp.sum(dw.dwconv(x, k, variant="auto") ** 2),
+                  argnums=(0, 1))(x, k)
+    gx = jax.grad(lambda x, k: jnp.sum(dw.dwconv(x, k, variant="xla") ** 2),
+                  argnums=(0, 1))(x, k)
+    for a, b in zip(ga, gx):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_auto_without_entry_stays_split(tmp_cache):
+    v, _ = ops.resolve_variant("bwd_fused", "auto", None, B=2, H=4, L=48, K=5,
+                               dtype=jnp.float32)
+    assert v == "split", "untuned shapes must keep the historical split backward"
+
+
+def test_cache_v2_database_migrates_cleanly(tmp_path):
+    """The schema bump (v3: bwd_fused path) must not discard a pre-existing
+    v2 database: v2 entries are path-compatible and migrate verbatim; a v1
+    (or unknown) version is still ignored."""
+    key = ShapeKey(path="fwd", B=64, H=128, L=48, K=48, dtype="float32",
+                   backend="cpu")
+    entry = TuneEntry(variant="row", block_h=8, block_t=512, batch_chunk=128)
+    p = tmp_path / "db.json"
+    p.write_text(json.dumps({
+        "version": 2,
+        "entries": {key.encode(): entry.to_dict()},
+    }))
+    c = TuningCache(p)
+    assert c.get(key) == entry, "v2 entry was not migrated"
+    # a save rewrites the file at the current version, entries intact
+    c.save()
+    raw = json.loads(p.read_text())
+    assert raw["version"] == tcache.CACHE_VERSION
+    assert TuningCache(p).get(key) == entry
+
+    p.write_text(json.dumps({"version": 1, "entries": {"bogus": {}}}))
+    assert TuningCache(p).get(key) is None
+
+
+def test_checked_in_cache_loads_without_crash():
+    """The repository's persistent database must survive the schema bump."""
+    if not DEFAULT_CACHE_PATH.exists():
+        pytest.skip("no checked-in tuning database")
+    cache = TuningCache(DEFAULT_CACHE_PATH)
+    assert len(cache) >= 0  # loading must not raise
+    for k in cache.items():
+        assert k.path in ("fwd", "bwd_in", "bwd_k", "bwd_fused")

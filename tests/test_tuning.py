@@ -59,10 +59,14 @@ def test_search_space_nonempty_normalized_legal(d, path):
         assert space.normalize(c, d) == c, "emitted candidate not normalized"
         assert c not in seen, "duplicate candidate emitted"
         seen.add(c)
-    # the hard-coded defaults and the xla escape hatch are always in-space
+    # the hard-coded defaults and the reference/split escape hatches are
+    # always in-space
     variants = {c.variant for c in cands}
-    assert "xla" in variants
-    assert ("row" if path != "bwd_k" else "accum") in variants
+    if path == "bwd_fused":
+        assert "split" in variants and "fused" in variants
+    else:
+        assert "xla" in variants
+        assert ("row" if path != "bwd_k" else "accum") in variants
 
 
 @pytest.mark.parametrize("path", space.PATHS)
@@ -76,6 +80,9 @@ def test_every_emitted_candidate_executes_and_matches_oracle(path):
         want = ref.dwconv_fwd_ref(x, k, d.padding)
     elif path == "bwd_in":
         want = ref.dwconv_bwd_input_ref(dy, k, d.padding)
+    elif path == "bwd_fused":
+        want = (ref.dwconv_bwd_input_ref(dy, k, d.padding),
+                ref.dwconv_bwd_kernel_ref(x, dy, d.K, d.padding))
     else:
         want = ref.dwconv_bwd_kernel_ref(x, dy, d.K, d.padding)
     for c in space.search_space(d, path):
@@ -86,6 +93,15 @@ def test_every_emitted_candidate_executes_and_matches_oracle(path):
         elif path == "bwd_in":
             got = (ref.dwconv_bwd_input_ref(dy, k, d.padding) if c.variant == "xla"
                    else ops.dwconv_bwd_input_op(dy, k, d.padding, c.variant, opts))
+        elif path == "bwd_fused":
+            dx, dk = ops.dwconv_bwd_fused_op(x, dy, k, d.padding, c.variant, opts)
+            np.testing.assert_allclose(np.asarray(dx), np.asarray(want[0]),
+                                       atol=1e-4,
+                                       err_msg=f"candidate {c} dx diverges")
+            np.testing.assert_allclose(np.asarray(dk), np.asarray(want[1]),
+                                       atol=2e-3,
+                                       err_msg=f"candidate {c} dk diverges")
+            continue
         else:
             got = (ref.dwconv_bwd_kernel_ref(x, dy, d.K, d.padding) if c.variant == "xla"
                    else ops.dwconv_bwd_kernel_op(x, dy, d.K, d.padding, c.variant, opts))
@@ -362,11 +378,13 @@ def test_auto_equivalent_to_row_through_differentiable_dwconv(tmp_cache):
 
     d = SMALL_DIMS
     backend = jax.default_backend()
+    tuned = {"fwd": "row", "bwd_in": "row", "bwd_k": "accum",
+             "bwd_fused": "split"}
     for path in space.PATHS:
         tcache.default_cache().put(
             ShapeKey(path=path, B=d.B, H=d.H, L=d.L, K=d.K,
                      dtype="float32", backend=backend),
-            TuneEntry(variant="row" if path != "bwd_k" else "accum",
+            TuneEntry(variant=tuned[path],
                       block_h=8, block_t=512, batch_chunk=128),
         )
     x, k = _rand((d.B, d.H, d.L), 0), _rand((d.H, d.K), 1)
