@@ -1,0 +1,193 @@
+"""Long-sequence weight-gradient gate (the time-tiling PR's tentpole bench).
+
+The paper's named bottleneck — the reduction-dominated weight-gradient path
+— matters most exactly where sequences are long (the S4 regime), yet the
+untiled staged kernels grow their per-cell VMEM working set with L.  This
+benchmark demonstrates the ``block_t`` time-tiled kernels opening that
+regime on ``B=8, H=64, L=16384, K=4``:
+
+  *legality*  — every staged Pallas bwdk / fused-backward variant has a
+                time-tiled configuration whose per-cell VMEM working set is
+                bounded by ``block_t`` (checked via the tuner's own
+                legality predicates, and shown to be independent of L).
+                **Gate**: tiled working set fits VMEM and does not grow
+                when L doubles.
+
+  *modeled*   — tiled-accum traffic vs the untiled model: the only extra
+                bytes are the K-1 halo columns per tile seam.
+                **Gate**: tiled bytes <= 1.10x untiled bytes.
+
+  *runs*      — every Pallas bwdk variant (accum, twostage, naive) and
+                fused-backward variant (fused, fused_partials) executes the
+                long-sequence shape in interpret mode and matches
+                ``jax.vjp`` of the reference.
+
+  *tunes*     — ``tune_path`` runs on the long shape for both ``bwd_k`` and
+                ``bwd_fused`` (a search space that the VMEM predicates used
+                to prune to nothing) and persists a winner.
+
+``--fast`` (CI smoke) shrinks the shape to ``B=2, H=16, L=2048, K=4`` so
+the interpret-mode sweep stays cheap; the structure is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import traffic
+from repro.analysis.hw import TPU_V5E
+from repro.kernels import ops, ref
+from repro.kernels.common import DWConvDims, round_up
+from repro.tuning import space
+from repro.tuning.cache import TuningCache
+from repro.tuning.space import Candidate, _vmem_working_set_bytes, is_legal
+from repro.tuning.tuner import tune_path
+
+# The long-sequence study shape: small batch, long time axis — the regime
+# where the untiled staged slabs are the binding constraint.
+LONGSEQ_DIMS = DWConvDims(B=8, H=64, L=16384, K=4)
+LONGSEQ_DIMS_FAST = DWConvDims(B=2, H=16, L=2048, K=4)
+
+BWDK_PALLAS = ("accum", "twostage", "naive")
+FUSED_PALLAS = ("fused", "fused_partials")
+
+# Modeled-traffic gate: tiling may only add the per-seam halo re-read.
+TRAFFIC_GATE = 1.10
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def _tiled_candidate(d: DWConvDims, path: str, variant: str, block_t: int) -> Candidate:
+    return space.normalize(
+        Candidate(path=path, variant=variant, block_h=8, block_t=block_t,
+                  batch_chunk=8), d)
+
+
+def legality_rows(d: DWConvDims, block_t: int) -> List[Row]:
+    """Tiled candidates are VMEM-legal and their footprint is L-independent."""
+    rows: List[Row] = []
+    d2 = dataclasses.replace(d, L=2 * d.L)
+    for path, variants in (("bwd_k", ("accum", "twostage")),
+                           ("bwd_fused", FUSED_PALLAS)):
+        for v in variants:
+            c = _tiled_candidate(d, path, v, block_t)
+            ok, reason = is_legal(c, d, hw=TPU_V5E)
+            need = _vmem_working_set_bytes(c, d, itemsize=4)
+            need2 = _vmem_working_set_bytes(_tiled_candidate(d2, path, v, block_t),
+                                            d2, itemsize=4)
+            bounded = ok and need2 == need
+            verdict = "GATE_OK" if bounded else "GATE_FAILED"
+            rows.append(Row(
+                f"paper_longseq/legality/{path}/{v}", 0.0,
+                f"block_t={c.block_t} vmem={need}B vmem@2L={need2}B "
+                f"legal={ok}({reason}) {verdict}"))
+    return rows
+
+
+def modeled_rows(d: DWConvDims, block_t: int) -> List[Row]:
+    """Tiled-accum traffic within TRAFFIC_GATE of the untiled model."""
+    tiled = traffic.bwdk_traffic(d, "accum", block_t=block_t)
+    untiled = traffic.bwdk_traffic(d, "accum", block_t=d.L)
+    ratio = tiled.bytes_moved / untiled.bytes_moved
+    verdict = "GATE_OK" if ratio <= TRAFFIC_GATE else "GATE_FAILED"
+    return [
+        Row("paper_longseq/modeled/accum_tiled", 0.0,
+            f"bytes={tiled.bytes_moved / 1e9:.4f}GB block_t={block_t}"),
+        Row("paper_longseq/modeled/accum_untiled", 0.0,
+            f"bytes={untiled.bytes_moved / 1e9:.4f}GB"),
+        Row("paper_longseq/modeled/ratio", 0.0,
+            f"tiled_vs_untiled_bytes={ratio:.4f} (gate <= {TRAFFIC_GATE}) {verdict}"),
+    ]
+
+
+def run_rows(d: DWConvDims, block_t: int) -> List[Row]:
+    """Every Pallas bwdk/fused variant executes the shape and matches vjp."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(d.H, d.K)), jnp.float32)
+    _, vjp = jax.vjp(lambda x, k: ref.dwconv_fwd_ref(x, k, d.padding), x, k)
+    dx_want, dk_want = vjp(dy)
+    opts = ops.KernelOptions(block_h=8, block_t=block_t, batch_chunk=8)
+
+    rows: List[Row] = []
+    for v in BWDK_PALLAS:
+        dk = ops.dwconv_bwd_kernel_op(x, dy, d.K, d.padding, v, opts)
+        err = float(jnp.max(jnp.abs(dk - dk_want)) / jnp.max(jnp.abs(dk_want)))
+        verdict = "GATE_OK" if err < 1e-5 else "GATE_FAILED"
+        rows.append(Row(f"paper_longseq/runs/bwd_k/{v}", 0.0,
+                        f"rel_err={err:.2e} {verdict}"))
+    for v in FUSED_PALLAS:
+        dx, dk = ops.dwconv_bwd_fused_op(x, dy, k, d.padding, v, opts)
+        err_k = float(jnp.max(jnp.abs(dk - dk_want)) / jnp.max(jnp.abs(dk_want)))
+        err_x = float(jnp.max(jnp.abs(dx - dx_want)) / jnp.max(jnp.abs(dx_want)))
+        verdict = "GATE_OK" if max(err_k, err_x) < 1e-5 else "GATE_FAILED"
+        rows.append(Row(f"paper_longseq/runs/bwd_fused/{v}", 0.0,
+                        f"rel_err_dk={err_k:.2e} rel_err_dx={err_x:.2e} {verdict}"))
+    return rows
+
+
+def tune_rows(d: DWConvDims, tmp_cache_path: str, budget: int) -> List[Row]:
+    """The long shape tunes end-to-end through both backward paths.
+
+    The gate is that the tuner's *legal candidate space* contains time-tiled
+    staged configurations (the exact regression this benchmark exists to
+    catch is those being VMEM-mispruned back to the xla/naive escape
+    hatches) and that tuning persists a winner.  Which candidates get
+    metered within the budget — and who wins under interpret-mode timing —
+    is reported but not gated.
+    """
+    cache = TuningCache(tmp_cache_path)
+    staged = {"accum", "twostage", "fused", "fused_partials"}
+    Lout = round_up(d.L, 128)
+    rows: List[Row] = []
+    for path in ("bwd_k", "bwd_fused"):
+        tiled_in_space = any(
+            c.variant in staged and c.block_t < Lout
+            for c in space.search_space(d, path))
+        res = tune_path(d, path, budget=budget, iters=1, warmup=0,
+                        cache=cache, persist=True)
+        e = res.best
+        tiled_metered = any(
+            c.variant in staged and c.block_t < Lout for c, _, _ in res.history)
+        ok = tiled_in_space and len(TuningCache(tmp_cache_path)) > 0
+        verdict = "GATE_OK" if ok else "GATE_FAILED"
+        rows.append(Row(
+            f"paper_longseq/tunes/{path}", e.time_us,
+            f"winner={e.variant} bh={e.block_h} bt={e.block_t} bc={e.batch_chunk} "
+            f"measured {res.candidates_measured}/{res.candidates_considered} "
+            f"tiled_in_space={tiled_in_space} tiled_metered={tiled_metered} "
+            f"{verdict}"))
+    return rows
+
+
+def run(fast: bool = False) -> List[Row]:
+    import tempfile
+
+    d = LONGSEQ_DIMS_FAST if fast else LONGSEQ_DIMS
+    block_t = 512
+    rows = legality_rows(d, block_t)
+    rows += modeled_rows(d, block_t)
+    rows += run_rows(d, block_t)
+    with tempfile.TemporaryDirectory() as td:
+        rows += tune_rows(d, f"{td}/longseq-cache.json", budget=3 if fast else 4)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run(fast="--fast" in sys.argv)
+    for r in rows:
+        print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
+    if any("FAILED" in r.derived for r in rows):
+        sys.exit(1)

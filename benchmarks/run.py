@@ -30,7 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import paper_table2, paper_table3, paper_roofline, paper_validation
-    from benchmarks import paper_autotune, paper_fused_bwd, roofline_table, s4convd_e2e
+    from benchmarks import paper_autotune, paper_fused_bwd, paper_longseq
+    from benchmarks import roofline_table, s4convd_e2e
 
     modules = [
         ("paper_table2", paper_table2),
@@ -39,6 +40,7 @@ def main() -> None:
         ("paper_validation", paper_validation),
         ("paper_autotune", paper_autotune),
         ("paper_fused_bwd", paper_fused_bwd),
+        ("paper_longseq", paper_longseq),
         ("s4convd_e2e", s4convd_e2e),
         ("roofline_table", roofline_table),
     ]

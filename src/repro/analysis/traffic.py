@@ -97,11 +97,41 @@ def fwd_traffic(
     raise ValueError(variant)
 
 
+def _bwd_tiles(d: DWConvDims, variant: str, block_t: int):
+    """(nT, halo_elems_per_operand) for a staged bwd kernel.
+
+    ``nT`` is the time-tile count the kernel actually runs (1 = untiled, the
+    pre-``block_t`` behaviour); the halo term charges the K-1 columns every
+    interior tile seam re-reads — the redundancy the tuner trades against
+    per-cell footprint when it shrinks ``block_t``.
+
+    This models the *design's* haloed ``(Bc, Hb, Lt + K - 1)`` slab (the
+    traffic a manual halo DMA would move).  The current BlockSpec
+    realization binds a full neighbour tile instead — an implementation
+    ceiling that re-reads ~Lt columns per seam, like the fwd ``block``
+    variant's 2x-tile charge — but on the tuner's axis the *ordering* of
+    block_t candidates is set by the seam count either way, and the logical
+    model is what the paper's counter-free methodology prescribes for
+    redundancy a better realization (or a cache) absorbs.  The transaction
+    term does count the physical per-cell block binds, so the DMA-issue
+    cost of small tiles is not hidden.
+    """
+    from repro.kernels.ops import bwdk_time_tile
+
+    Lt = bwdk_time_tile(d.L, d.K, block_t, variant)
+    if Lt is None:
+        return 1, 0
+    nT = cdiv(round_up(d.L, LANE), Lt)
+    halo = d.B * d.H * (nT - 1) * (d.K - 1)
+    return nT, halo
+
+
 def bwdk_traffic(
     d: DWConvDims,
     variant: str,
     itemsize: int = 4,
     block_h: int = 8,
+    block_t: int = 512,
     batch_chunk: int = 128,
 ) -> TrafficEstimate:
     """Weight-gradient path: reduction over the (B x L) domain."""
@@ -113,6 +143,9 @@ def bwdk_traffic(
     Kp = round_up(d.K, LANE)
     slab = d.B * d.H * d.L * itemsize  # one full pass over x (or dy)
     dk_bytes = d.H * d.K * itemsize
+    nT, halo = _bwd_tiles(d, variant, block_t)
+    halo_bytes = halo * itemsize  # x halo re-read at every interior tile seam
+    in_blocks = 3 if nT > 1 else 2  # tiled cells bind (x_cur, x_next, dy)
 
     if variant == "naive":
         # Both operands re-read per tap; no reuse across the K taps.
@@ -120,15 +153,16 @@ def bwdk_traffic(
         tx = nH * nC * d.K * 2
         return TrafficEstimate(flops, read, dk_bytes, tx, aligned=False, reliable=False)
     if variant == "twostage":
-        # One staged pass over both operands; partials round-trip HBM.
-        partials = nC * d.H * Kp * 4  # f32 partials
-        read = 2 * slab + partials
-        tx = nH * nC * 2 + nH * nC
+        # One staged pass over both operands; partials round-trip HBM
+        # (one partial block per (chunk, time-tile) in the tiled regime).
+        partials = nC * nT * d.H * Kp * 4  # f32 partials
+        read = 2 * slab + halo_bytes + partials
+        tx = nH * nC * nT * in_blocks + nH * nC * nT
         return TrafficEstimate(flops, read, dk_bytes + partials, tx, aligned=True, reliable=True)
     if variant == "accum":
         # One staged pass; accumulator lives in VMEM across the sequential grid.
-        read = 2 * slab
-        tx = nH * nC * 2
+        read = 2 * slab + halo_bytes
+        tx = nH * nC * nT * in_blocks
         return TrafficEstimate(flops, read, dk_bytes, tx, aligned=True, reliable=True)
     if variant == "xla":
         read = 2 * slab
@@ -163,7 +197,8 @@ def bwd_split_traffic(
     est_in = fwd_traffic(d, bwd_in_variant, itemsize,
                          block_h=block_h, block_t=block_t)
     est_k = bwdk_traffic(d, bwd_k_variant, itemsize,
-                         block_h=block_h, batch_chunk=batch_chunk)
+                         block_h=block_h, block_t=block_t,
+                         batch_chunk=batch_chunk)
     slab = d.B * d.H * d.L * itemsize
     pslab = d.B * d.H * (d.L + d.K - 1) * itemsize  # one padded layout
     # Three pad materializations: dy -> adjoint layout, x -> x_pad,
@@ -185,13 +220,14 @@ def bwd_fused_traffic(
     variant: str = "fused",
     itemsize: int = 4,
     block_h: int = 8,
+    block_t: int = 512,
     batch_chunk: int = 128,
 ) -> TrafficEstimate:
     """Backward traffic for the fused single-pass kernels (``"split"`` maps
     to :func:`bwd_split_traffic` so the tuner compares like with like)."""
     if variant == "split":
         return bwd_split_traffic(d, itemsize, block_h=block_h,
-                                 batch_chunk=batch_chunk)
+                                 block_t=block_t, batch_chunk=batch_chunk)
     flops = 2.0 * path_flops(d)  # dx taps + dk reduction
     Hb = min(block_h, d.H)
     Bc = min(batch_chunk, d.B)
@@ -201,16 +237,21 @@ def bwd_fused_traffic(
     pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
     k_bytes = d.H * d.K * itemsize
     dk_bytes = d.H * d.K * itemsize
+    # Time tiling re-reads the K-1 halo columns of BOTH staged operands at
+    # every interior tile seam (the fused slabs are haloed x *and* dy).
+    nT, halo = _bwd_tiles(d, variant, block_t)
+    halo_bytes = 2 * halo * itemsize
+    in_blocks = 5 if nT > 1 else 3  # tiled: (x_cur, x_next, dy_cur, dy_next, k)
     # One pad materialization (dy, single unified layout); the forward's
     # x_pad residual is reused verbatim — zero backward pad cost for x.
-    read = slab + 2 * pslab + k_bytes   # pad source + x_pad + dy_pad + k
+    read = slab + 2 * pslab + k_bytes + halo_bytes  # pad src + x_pad + dy_pad + k
     written = pslab + slab + dk_bytes   # dy_pad + dx + dk
-    tx = nH * nC * 3 + 1
+    tx = nH * nC * nT * in_blocks + 1
     if variant == "fused_partials":
-        partials = nC * d.H * round_up(d.K, LANE) * 4  # f32 HBM round-trip
+        partials = nC * nT * d.H * round_up(d.K, LANE) * 4  # f32 HBM round-trip
         read += partials
         written += partials
-        tx += nH * nC
+        tx += nH * nC * nT
     elif variant != "fused":
         raise ValueError(variant)
     return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
@@ -284,10 +325,10 @@ def variant_traffic_table(
             continue
         fwd = fwd_traffic(d, spec.fwd, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t")})
         bwd_in = fwd_traffic(d, spec.bwd_in, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t")})
-        bwd_k = bwdk_traffic(d, spec.bwd_k, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "batch_chunk")})
+        bwd_k = bwdk_traffic(d, spec.bwd_k, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t", "batch_chunk")})
         out[name] = {"fwd": fwd, "bwd_in": bwd_in, "bwd_k": bwd_k}
         if spec.bwd == "fused":
             out[name]["bwd_fused"] = bwd_fused_traffic(
                 d, spec.bwd_fused, itemsize,
-                **{k: v for k, v in tiling.items() if k in ("block_h", "batch_chunk")})
+                **{k: v for k, v in tiling.items() if k in ("block_h", "block_t", "batch_chunk")})
     return out

@@ -24,28 +24,47 @@ the dk reduction reads the un-shifted window at static offset
   fused_partials : per-chunk dk partials round-trip HBM and a second jnp
                    reduction combines them (the ``twostage`` structure).
 
+Both members support *time tiling* (``block_t``), mirroring
+``dwconv_bwdk``: a third, sequential grid dimension walks sequence tiles,
+and each cell stages haloed ``(Bc, Hb, Lt + K - 1)`` slabs of **both**
+operands (bound as current tile + right neighbour).  At every tile seam the
+halo covers both consumers: the flipped-filter dx taps read
+``dy[t*Lt + u + j]`` (max offset ``Lt + K - 2`` into the slab) and the dk
+reduction reads ``dy`` at the static offset ``off_dk <= K - 1`` (max offset
+``off_dk + Lt - 1 <= Lt + K - 2``), so one ``Lt + K - 1`` window serves
+both gradients and the per-cell VMEM footprint is bounded by ``block_t``
+regardless of L.  dx tiles are written per cell; dk accumulates across the
+sequential (chunk x tile) axes exactly as in the untiled kernels.
+
 Inputs arrive pre-padded from ``ops.py``:
-  xp  (B, H, >=Wk) with ``p_left`` forward padding — the *forward's own*
-      padded residual is accepted verbatim (its unified Wpad is a superset
-      of the ``Wk = round_up(round_up(L,LANE) + K - 1, LANE)`` window the
-      BlockSpecs slice);
-  dyp (B, H, Wk)   with ``p_right`` adjoint padding;
+  xp  (B, H, W) with ``p_left`` forward padding — the *forward's own*
+      padded residual is accepted verbatim (untiled: its unified Wpad is a
+      superset of the ``Wk = round_up(round_up(L,LANE) + K - 1, LANE)``
+      window the BlockSpecs slice; tiled: ops.py grows/trims it to the
+      ``(nT + 1) * Lt`` tile layout);
+  dyp (B, H, W)    with ``p_right`` adjoint padding (width Wk untiled,
+      ``(nT + 1) * Lt`` tiled);
   kp  (H, Kp)      lane-padded filters.
-Outputs: dx (B, H, Lout) in dy's dtype and dk (H, Kp) in f32; ``ops.py``
-slices both back to logical shapes.  Accumulation is f32; the dk partials
-are computed with the *same* slab shapes as ``dwconv_bwdk``'s staged
-variants, so fused dk matches the ``accum`` variant bit-for-bit.
+Outputs: dx (B, H, Lout or nT*Lt) in dy's dtype and dk (H, Kp) in f32;
+``ops.py`` slices both back to logical shapes.  Accumulation is f32; the dk
+partials are computed with the *same* slab shapes as ``dwconv_bwdk``'s
+staged variants, so fused dk matches the ``accum`` variant bit-for-bit in
+both the untiled and the tiled regime.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.dwconv_bwdk import _taps_from_slabs
+from repro.kernels.dwconv_bwdk import (
+    _check_chunking,
+    _check_tiled_layout,
+    _taps_from_slabs,
+)
 
 
 def _dx_from_slab(dy32: jnp.ndarray, kv: jnp.ndarray, K: int, Lout: int) -> jnp.ndarray:
@@ -54,6 +73,31 @@ def _dx_from_slab(dy32: jnp.ndarray, kv: jnp.ndarray, K: int, Lout: int) -> jnp.
     for j in range(K):  # static unroll: flipped-filter multiply-adds from VMEM
         acc = acc + dy32[:, :, j : j + Lout] * kv[:, K - 1 - j][None, :, None]
     return acc
+
+
+def _check_untiled_window(
+    Wx: int, Wdy: int, block_w: int, Lout: int, K: int, off_dk: int
+) -> None:
+    if Wx < block_w or Wdy < block_w:
+        raise ValueError(
+            f"operand widths (x={Wx}, dy={Wdy}) are narrower than the staged "
+            f"window block_w={block_w}; ops.py must pad both to the unified "
+            f"fused-backward width")
+    if not (block_w >= Lout + K - 1 >= off_dk + Lout):
+        raise ValueError(
+            f"staged window block_w={block_w} cannot hold Lout+K-1="
+            f"{Lout + K - 1} (or off_dk={off_dk} exceeds K-1={K - 1}); the "
+            f"fused window math in ops.py is inconsistent")
+
+
+def _tiled_geometry(xp: jnp.ndarray, dyp: jnp.ndarray, Lt: int, K: int) -> int:
+    """Validate the tiled operand layout; returns the tile count nT."""
+    Wx, Wdy = xp.shape[-1], dyp.shape[-1]
+    if Wx != Wdy:
+        raise ValueError(
+            f"tiled fused backward needs equal operand widths, got x={Wx} "
+            f"dy={Wdy}; ops.py must pad both to (nT+1)*block_t columns")
+    return _check_tiled_layout(Wx, Wx - Lt, Lt, K)
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +123,27 @@ def _fused_accum_kernel(
     dk_ref[...] += _taps_from_slabs(x32, dy_win, K, Kp).astype(dk_ref.dtype)
 
 
+def _fused_accum_tiled_kernel(
+    xc_ref, xn_ref, dyc_ref, dyn_ref, k_ref, dx_ref, dk_ref,
+    *, K: int, Kp: int, Lt: int, off_dk: int,
+):
+    c = pl.program_id(1)  # batch-chunk index — sequential
+    t = pl.program_id(2)  # time-tile index — innermost, sequential
+
+    @pl.when(jnp.logical_and(c == 0, t == 0))
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+
+    # Haloed slabs (current + right-neighbour tile) of BOTH operands: the
+    # 2*Lt width covers every read below because Lt >= K-1 >= off_dk.
+    x32 = jnp.concatenate([xc_ref[...], xn_ref[...]], axis=-1).astype(jnp.float32)
+    dy32 = jnp.concatenate([dyc_ref[...], dyn_ref[...]], axis=-1).astype(jnp.float32)
+    kv = k_ref[...].astype(jnp.float32)
+    dx_ref[...] = _dx_from_slab(dy32, kv, K, Lt).astype(dx_ref.dtype)
+    dy_win = dy32[:, :, off_dk : off_dk + Lt]  # forward-aligned window
+    dk_ref[...] += _taps_from_slabs(x32, dy_win, K, Kp).astype(dk_ref.dtype)
+
+
 def dwconv_bwd_fused_accum(
     xp: jnp.ndarray,
     dyp: jnp.ndarray,
@@ -90,16 +155,41 @@ def dwconv_bwd_fused_accum(
     block_w: int,
     block_h: int = 8,
     batch_chunk: int = 128,
+    block_t: Optional[int] = None,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One staged pass -> (dx (B, H, Lout), dk (H, Kp) f32)."""
+    """One staged pass -> (dx (B, H, Lout or nT*Lt), dk (H, Kp) f32)."""
     B, H, Wx = xp.shape
     _, Kp = kp.shape
     Hb = min(block_h, H)
     Bc = min(batch_chunk, B)
-    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
-    assert Wx >= block_w and dyp.shape[-1] >= block_w, (Wx, dyp.shape, block_w)
-    assert block_w >= Lout + K - 1 >= off_dk + Lout, (block_w, Lout, K, off_dk)
+    _check_chunking(B, Bc, H, Hb)
+    if block_t is not None and block_t < Lout:
+        Lt = block_t
+        nT = _tiled_geometry(xp, dyp, Lt, K)
+        grid = (H // Hb, B // Bc, nT)
+        return pl.pallas_call(
+            functools.partial(
+                _fused_accum_tiled_kernel, K=K, Kp=Kp, Lt=Lt, off_dk=off_dk),
+            out_shape=[
+                jax.ShapeDtypeStruct((B, H, nT * Lt), dyp.dtype),
+                jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+            ],
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+                pl.BlockSpec((Hb, Kp), lambda h, c, t: (h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Hb, Kp), lambda h, c, t: (h, 0)),
+            ],
+            interpret=interpret,
+        )(xp, xp, dyp, dyp, kp)
+    _check_untiled_window(Wx, dyp.shape[-1], block_w, Lout, K, off_dk)
     grid = (H // Hb, B // Bc)
     return pl.pallas_call(
         functools.partial(_fused_accum_kernel, K=K, Kp=Kp, Lout=Lout, off_dk=off_dk),
@@ -139,6 +229,18 @@ def _fused_partials_kernel(
     part_ref[0] = _taps_from_slabs(x32, dy_win, K, Kp)
 
 
+def _fused_partials_tiled_kernel(
+    xc_ref, xn_ref, dyc_ref, dyn_ref, k_ref, dx_ref, part_ref,
+    *, K: int, Kp: int, Lt: int, off_dk: int,
+):
+    x32 = jnp.concatenate([xc_ref[...], xn_ref[...]], axis=-1).astype(jnp.float32)
+    dy32 = jnp.concatenate([dyc_ref[...], dyn_ref[...]], axis=-1).astype(jnp.float32)
+    kv = k_ref[...].astype(jnp.float32)
+    dx_ref[...] = _dx_from_slab(dy32, kv, K, Lt).astype(dx_ref.dtype)
+    dy_win = dy32[:, :, off_dk : off_dk + Lt]
+    part_ref[0, 0] = _taps_from_slabs(x32, dy_win, K, Kp)
+
+
 def dwconv_bwd_fused_partials(
     xp: jnp.ndarray,
     dyp: jnp.ndarray,
@@ -150,6 +252,7 @@ def dwconv_bwd_fused_partials(
     block_w: int,
     block_h: int = 8,
     batch_chunk: int = 128,
+    block_t: Optional[int] = None,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Staged pass with explicit per-chunk dk partials -> (dx, dk)."""
@@ -157,10 +260,35 @@ def dwconv_bwd_fused_partials(
     _, Kp = kp.shape
     Hb = min(block_h, H)
     Bc = min(batch_chunk, B)
-    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
-    assert Wx >= block_w and dyp.shape[-1] >= block_w, (Wx, dyp.shape, block_w)
-    assert block_w >= Lout + K - 1 >= off_dk + Lout, (block_w, Lout, K, off_dk)
+    _check_chunking(B, Bc, H, Hb)
     nC = B // Bc
+    if block_t is not None and block_t < Lout:
+        Lt = block_t
+        nT = _tiled_geometry(xp, dyp, Lt, K)
+        grid = (H // Hb, nC, nT)
+        dx, partials = pl.pallas_call(
+            functools.partial(
+                _fused_partials_tiled_kernel, K=K, Kp=Kp, Lt=Lt, off_dk=off_dk),
+            out_shape=[
+                jax.ShapeDtypeStruct((B, H, nT * Lt), dyp.dtype),
+                jax.ShapeDtypeStruct((nC, nT, H, Kp), jnp.float32),
+            ],
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+                pl.BlockSpec((Hb, Kp), lambda h, c, t: (h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((1, 1, Hb, Kp), lambda h, c, t: (c, t, h, 0)),
+            ],
+            interpret=interpret,
+        )(xp, xp, dyp, dyp, kp)
+        return dx, jnp.sum(partials, axis=(0, 1))  # second reduction stage
+    _check_untiled_window(Wx, dyp.shape[-1], block_w, Lout, K, off_dk)
     grid = (H // Hb, nC)
     dx, partials = pl.pallas_call(
         functools.partial(_fused_partials_kernel, K=K, Kp=Kp, Lout=Lout, off_dk=off_dk),

@@ -18,7 +18,21 @@ idiomatic structures:
              output block across the sequential grid — the TPU-native fusion
              of both stages (no partials round-trip through HBM).
 
-Inputs arrive pre-padded from ops.py: xp (B, H, Wpad), dy (B, H, L).
+``accum`` and ``twostage`` additionally support *time tiling*
+(``block_t``): instead of staging the full padded sequence per cell —
+which makes the VMEM working set grow with L and walls off long-sequence
+workloads — the grid gains a third, sequential dimension over sequence
+tiles.  Each cell stages a ``(Bc, Hb, Lt + K - 1)`` haloed slab (bound as
+the current tile plus its right neighbour, the same halo idiom as the
+``block`` forward kernel), computes all K tap partials from it, and
+accumulates across the tile axis (accum: the revisited output block;
+twostage: a ``(nC, nT, H, Kp)`` partials buffer plus the second-stage
+reduction).  The per-cell footprint is then bounded by ``block_t``
+regardless of L, at the cost of re-reading the K-1 halo columns once per
+tile seam.
+
+Inputs arrive pre-padded from ops.py: xp (B, H, Wpad), dy (B, H, Ldy)
+with ``Ldy = nT * Lt`` and ``Wpad = (nT + 1) * Lt`` in the tiled regime.
 Output: (H, Kp) with Kp = round_up(K, LANE); ops.py slices to (H, K).
 Accumulation is f32.
 
@@ -30,6 +44,7 @@ weight-gradient study the paper's per-path tables are built from.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,13 +55,51 @@ from repro.kernels.common import LANE, cdiv
 
 
 def _taps_from_slabs(x32: jnp.ndarray, dy32: jnp.ndarray, K: int, Kp: int) -> jnp.ndarray:
-    """(Bc, Hb, Wpad) x (Bc, Hb, L) -> per-tap partials (Hb, Kp), f32."""
+    """(Bc, Hb, >=L+K-1) x (Bc, Hb, L) -> per-tap partials (Hb, Kp), f32."""
     L = dy32.shape[-1]
     taps = [jnp.sum(dy32 * x32[:, :, j : j + L], axis=(0, 2)) for j in range(K)]
     part = jnp.stack(taps, axis=-1)  # (Hb, K)
     if Kp > K:
         part = jnp.pad(part, ((0, 0), (0, Kp - K)))
     return part
+
+
+def _check_chunking(B: int, Bc: int, H: int, Hb: int) -> None:
+    if B % Bc != 0:
+        raise ValueError(
+            f"batch B={B} is not divisible by batch_chunk={Bc}; lower "
+            f"KernelOptions.batch_chunk or let ops.py pad the batch")
+    if H % Hb != 0:
+        raise ValueError(
+            f"channels H={H} are not divisible by block_h={Hb}; lower "
+            f"KernelOptions.block_h or let ops.py pad the channel axis")
+
+
+def _check_tiled_layout(Wpad: int, Ldy: int, Lt: int, K: int) -> int:
+    """Validate the tiled (xp, dy) layout; returns the tile count nT."""
+    if Lt < K - 1:
+        raise ValueError(
+            f"time tile block_t={Lt} cannot hold the K-1={K - 1} halo; "
+            f"raise KernelOptions.block_t to at least K-1")
+    if Ldy % Lt != 0:
+        raise ValueError(
+            f"dy width {Ldy} is not a whole number of block_t={Lt} tiles; "
+            f"ops.py must pad dy to a tile multiple")
+    nT = Ldy // Lt
+    if Wpad < (nT + 1) * Lt:
+        raise ValueError(
+            f"padded input width {Wpad} < (nT+1)*Lt={(nT + 1) * Lt}: the "
+            f"neighbour-tile halo read runs out of bounds; ops.py must pad "
+            f"x to (nT+1)*block_t columns")
+    return nT
+
+
+def _check_untiled_layout(Wpad: int, Ldy: int, K: int) -> None:
+    if Wpad < Ldy + K - 1:
+        raise ValueError(
+            f"padded input width {Wpad} < L+K-1={Ldy + K - 1}: the tap "
+            f"windows run out of bounds; ops.py must pad x to the full "
+            f"convolution window")
 
 
 # ---------------------------------------------------------------------------
@@ -66,6 +119,20 @@ def _accum_kernel(x_ref, dy_ref, dk_ref, *, K: int, Kp: int):
     dk_ref[...] += _taps_from_slabs(x32, dy32, K, Kp).astype(dk_ref.dtype)
 
 
+def _accum_tiled_kernel(xc_ref, xn_ref, dy_ref, dk_ref, *, K: int, Kp: int):
+    c = pl.program_id(1)  # batch-chunk index — sequential
+    t = pl.program_id(2)  # time-tile index — innermost, sequential
+
+    @pl.when(jnp.logical_and(c == 0, t == 0))
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+
+    # Haloed slab: current tile + right neighbour covers (Bc, Hb, Lt + K - 1).
+    x32 = jnp.concatenate([xc_ref[...], xn_ref[...]], axis=-1).astype(jnp.float32)
+    dy32 = dy_ref[...].astype(jnp.float32)
+    dk_ref[...] += _taps_from_slabs(x32, dy32, K, Kp).astype(dk_ref.dtype)
+
+
 def dwconv_bwdk_accum(
     xp: jnp.ndarray,
     dy: jnp.ndarray,
@@ -73,14 +140,33 @@ def dwconv_bwdk_accum(
     K: int,
     block_h: int = 8,
     batch_chunk: int = 128,
+    block_t: Optional[int] = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     B, H, Wpad = xp.shape
     L = dy.shape[-1]
     Hb = min(block_h, H)
     Bc = min(batch_chunk, B)
-    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    _check_chunking(B, Bc, H, Hb)
     Kp = cdiv(K, LANE) * LANE
+    if block_t is not None and block_t < L:
+        Lt = block_t
+        nT = _check_tiled_layout(Wpad, L, Lt, K)
+        grid = (H // Hb, B // Bc, nT)
+        out = pl.pallas_call(
+            functools.partial(_accum_tiled_kernel, K=K, Kp=Kp),
+            out_shape=jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+            ],
+            out_specs=pl.BlockSpec((Hb, Kp), lambda h, c, t: (h, 0)),
+            interpret=interpret,
+        )(xp, xp, dy)
+        return out[:, :K]
+    _check_untiled_layout(Wpad, L, K)
     grid = (H // Hb, B // Bc)
     out = pl.pallas_call(
         functools.partial(_accum_kernel, K=K, Kp=Kp),
@@ -107,6 +193,12 @@ def _partials_kernel(x_ref, dy_ref, part_ref, *, K: int, Kp: int):
     part_ref[0] = _taps_from_slabs(x32, dy32, K, Kp)
 
 
+def _partials_tiled_kernel(xc_ref, xn_ref, dy_ref, part_ref, *, K: int, Kp: int):
+    x32 = jnp.concatenate([xc_ref[...], xn_ref[...]], axis=-1).astype(jnp.float32)
+    dy32 = dy_ref[...].astype(jnp.float32)
+    part_ref[0, 0] = _taps_from_slabs(x32, dy32, K, Kp)
+
+
 def dwconv_bwdk_twostage(
     xp: jnp.ndarray,
     dy: jnp.ndarray,
@@ -114,15 +206,34 @@ def dwconv_bwdk_twostage(
     K: int,
     block_h: int = 8,
     batch_chunk: int = 128,
+    block_t: Optional[int] = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     B, H, Wpad = xp.shape
     L = dy.shape[-1]
     Hb = min(block_h, H)
     Bc = min(batch_chunk, B)
-    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    _check_chunking(B, Bc, H, Hb)
     Kp = cdiv(K, LANE) * LANE
     nC = B // Bc
+    if block_t is not None and block_t < L:
+        Lt = block_t
+        nT = _check_tiled_layout(Wpad, L, Lt, K)
+        grid = (H // Hb, nC, nT)
+        partials = pl.pallas_call(
+            functools.partial(_partials_tiled_kernel, K=K, Kp=Kp),
+            out_shape=jax.ShapeDtypeStruct((nC, nT, H, Kp), jnp.float32),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Hb, Kp), lambda h, c, t: (c, t, h, 0)),
+            interpret=interpret,
+        )(xp, xp, dy)
+        return jnp.sum(partials, axis=(0, 1))[:, :K]  # second reduction stage
+    _check_untiled_layout(Wpad, L, K)
     grid = (H // Hb, nC)
     partials = pl.pallas_call(
         functools.partial(_partials_kernel, K=K, Kp=Kp),
@@ -185,7 +296,8 @@ def dwconv_bwdk_naive(
     L = dy.shape[-1]
     Hb = min(block_h, H)
     Bc = min(batch_chunk, B)
-    assert B % Bc == 0 and H % Hb == 0, (B, Bc, H, Hb)
+    _check_chunking(B, Bc, H, Hb)
+    _check_untiled_layout(Wpad, L, K)
     Kp = cdiv(K, LANE) * LANE
     grid = (H // Hb, B // Bc)
     out = pl.pallas_call(

@@ -68,7 +68,10 @@ def dwconv_fwd_row(
     B, H, Wpad = xp.shape
     _, Kp = kp.shape
     Hb = min(block_h, H)
-    assert H % Hb == 0, (H, Hb)
+    if H % Hb != 0:
+        raise ValueError(
+            f"channels H={H} are not divisible by block_h={Hb}; lower "
+            f"KernelOptions.block_h or let ops.py pad the channel axis")
     grid = (B, H // Hb)
     return pl.pallas_call(
         functools.partial(_row_kernel, K=K, Lout=Lout),
@@ -113,10 +116,21 @@ def dwconv_fwd_block(
     B, H, Wpad = xp.shape
     _, Kp = kp.shape
     Hb = min(block_h, H)
+    if H % Hb != 0:
+        raise ValueError(
+            f"channels H={H} are not divisible by block_h={Hb}; lower "
+            f"KernelOptions.block_h or let ops.py pad the channel axis")
     Lt = min(block_t, Lout)
-    assert Lt >= K - 1, f"halo {K - 1} must fit a single neighbour tile {Lt}"
+    if Lt < K - 1:
+        raise ValueError(
+            f"halo K-1={K - 1} does not fit a single neighbour tile Lt={Lt}; "
+            f"raise KernelOptions.block_t to at least K-1")
     nT = cdiv(Lout, Lt)
-    assert Wpad >= (nT + 1) * Lt, (Wpad, nT, Lt)
+    if Wpad < (nT + 1) * Lt:
+        raise ValueError(
+            f"padded input width {Wpad} < (nT+1)*Lt={(nT + 1) * Lt}: the "
+            f"neighbour-tile halo read runs out of bounds; ops.py must pad "
+            f"x to (nT+1)*block_t columns")
     grid = (B, H // Hb, nT)
     return pl.pallas_call(
         functools.partial(_block_kernel, K=K, Lt=Lt),
@@ -196,11 +210,23 @@ def _dwconv_fwd_tapdma(
     B, H, Wpad = xp.shape
     _, Kp = kp.shape
     Hb = min(block_h, H)
+    if H % Hb != 0:
+        raise ValueError(
+            f"channels H={H} are not divisible by block_h={Hb}; lower "
+            f"KernelOptions.block_h or let ops.py pad the channel axis")
     Lt = min(block_t, Lout)
-    assert Lt % LANE == 0, (Lt, LANE)
+    if Lt % LANE != 0:
+        raise ValueError(
+            f"temporal tile Lt={Lt} is not lane-aligned (Lt % {LANE} != 0); "
+            f"choose KernelOptions.block_t as a multiple of {LANE}")
     nT = cdiv(Lout, Lt)
     scratch_w = Lt + LANE if aligned else Lt
-    assert Wpad >= nT * Lt + K - 1 + (LANE if aligned else 0), (Wpad, nT, Lt, K)
+    need_w = nT * Lt + K - 1 + (LANE if aligned else 0)
+    if Wpad < need_w:
+        raise ValueError(
+            f"padded input width {Wpad} < {need_w} needed by the per-tap DMA "
+            f"windows (nT={nT}, Lt={Lt}, K={K}, aligned={aligned}); ops.py "
+            f"must pad x to the widened window")
     grid = (B, H // Hb, nT)
     return pl.pallas_call(
         functools.partial(_tapdma_kernel, K=K, Lt=Lt, Hb=Hb, aligned=aligned),

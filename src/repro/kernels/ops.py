@@ -251,6 +251,24 @@ def dwconv_bwd_input_op(
     return _fwd_impl(dy, k[:, ::-1], p_left, variant, opts)
 
 
+def bwdk_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
+    """Effective time tile ``Lt`` for a staged weight-gradient kernel, or
+    ``None`` when it executes untiled (single staged slab).
+
+    Tiling requires more than one tile to be worth a third grid dimension
+    and ``Lt >= K - 1`` so the halo fits one neighbour tile; shapes failing
+    that quietly run the untiled path (tiling is a perf knob, not
+    semantics).  ``naive`` has no staged slab to tile.
+    """
+    if variant not in ("accum", "twostage", "fused", "fused_partials"):
+        return None
+    Lout = round_up(L, LANE)
+    Lt = min(block_t, Lout)
+    if Lt >= Lout or Lt < K - 1:
+        return None
+    return Lt
+
+
 def _bwdk_impl(
     x: jnp.ndarray,
     dy: jnp.ndarray,
@@ -265,18 +283,28 @@ def _bwdk_impl(
     Bc = min(opts.batch_chunk, B)
     p_left, _ = pad_widths(K, padding)
     Lout = round_up(L, LANE)
-    Wpad = round_up(Lout + K - 1, LANE)
+    Lt = bwdk_time_tile(L, K, opts.block_t, variant)
+    if Lt is not None:
+        # Time-tiled layout: dy a whole number of tiles, x one extra tile so
+        # the (current + right-neighbour) halo binding never reads past the
+        # end.  Both extensions are zeros and contribute nothing to dk.
+        nT = cdiv(Lout, Lt)
+        Ldy = nT * Lt
+        Wpad = (nT + 1) * Lt
+    else:
+        Ldy = Lout
+        Wpad = round_up(Lout + K - 1, LANE)
     Bp = round_up(B, Bc)
     xp = jnp.pad(x, ((0, Bp - B), (0, 0), (p_left, Wpad - L - p_left)))
-    dyp = jnp.pad(dy, ((0, Bp - B), (0, 0), (0, Lout - L)))
+    dyp = jnp.pad(dy, ((0, Bp - B), (0, 0), (0, Ldy - L)))
     xp = _pad_channels(xp, H, Hb, axis=1)
     dyp = _pad_channels(dyp, H, Hb, axis=1)
 
     kw = dict(K=K, block_h=Hb, batch_chunk=Bc, interpret=interpret)
     if variant == "accum":
-        dk = dwconv_bwdk.dwconv_bwdk_accum(xp, dyp, **kw)
+        dk = dwconv_bwdk.dwconv_bwdk_accum(xp, dyp, block_t=Lt, **kw)
     elif variant == "twostage":
-        dk = dwconv_bwdk.dwconv_bwdk_twostage(xp, dyp, **kw)
+        dk = dwconv_bwdk.dwconv_bwdk_twostage(xp, dyp, block_t=Lt, **kw)
     elif variant == "naive":
         dk = dwconv_bwdk.dwconv_bwdk_naive(xp, dyp, **kw)
     else:
@@ -293,7 +321,9 @@ def dwconv_bwd_kernel_op(
     opts: Optional[KernelOptions] = None,
 ) -> jnp.ndarray:
     """dk[h,j] = sum_{b,t} dy[b,h,t] x_pad[b,h,t+j].  Returns f32 (H, K)
-    (the ``"xla"`` reference returns x.dtype; callers cast to the param dtype)."""
+    from *every* variant including the ``"xla"`` reference, so an ``auto``
+    cache winner flipping variants never changes gradient dtype under bf16
+    training; callers cast to the param dtype."""
     B, H, L = x.shape
     variant, opts = resolve_variant("bwd_k", variant, opts, B=B, H=H, L=L, K=K,
                                     dtype=x.dtype, padding=padding)
@@ -318,27 +348,38 @@ def _bwd_fused_impl(
     Bc = min(opts.batch_chunk, B)
     p_left, p_right = pad_widths(K, padding)
     Lout = round_up(L, LANE)
+    Lt = bwdk_time_tile(L, K, opts.block_t, variant)
     Wk = bwd_fused_wpad(L, K)
+    # Tiled regime: both operands live in the (nT + 1) * Lt tile layout (one
+    # trailing all-zero tile feeds the right-neighbour halo binding).
+    W = (cdiv(Lout, Lt) + 1) * Lt if Lt is not None else Wk
     Bp = round_up(B, Bc)
     if xp is None:
-        xp = jnp.pad(x, ((0, Bp - B), (0, 0), (p_left, Wk - L - p_left)))
+        xp = jnp.pad(x, ((0, Bp - B), (0, 0), (p_left, W - L - p_left)))
     else:
-        # The forward's unified-Wpad residual: same left padding, width a
-        # superset of Wk — the kernel BlockSpecs slice the Wk window out of
-        # it, so reuse costs nothing.
+        # The forward's unified-Wpad residual: same left padding.  Untiled,
+        # its width is a superset of Wk and the kernel BlockSpecs slice the
+        # Wk window out of it, so reuse costs nothing.  Tiled, the residual
+        # is grown (with zeros) or trimmed (of zeros) to the exact tile
+        # layout — still no re-pad of the *content*.
         if xp.shape[-1] < Wk:
             raise ValueError(f"residual width {xp.shape[-1]} < fused window {Wk}")
         if Bp > B:
             xp = jnp.pad(xp, ((0, Bp - B), (0, 0), (0, 0)))
+        if Lt is not None:
+            if xp.shape[-1] < W:
+                xp = jnp.pad(xp, ((0, 0), (0, 0), (0, W - xp.shape[-1])))
+            elif xp.shape[-1] > W:
+                xp = xp[:, :, :W]
     # One dy layout serves both gradients: adjoint left padding p_right for
     # the dx taps; the dk reduction reads at static offset off_dk=p_right.
-    dyp = jnp.pad(dy, ((0, Bp - B), (0, 0), (p_right, Wk - L - p_right)))
+    dyp = jnp.pad(dy, ((0, Bp - B), (0, 0), (p_right, W - L - p_right)))
     Hp = round_up(xp.shape[1], Hb)
     xp = _pad_to(xp, Hp, axis=1)
     dyp = _pad_to(dyp, Hp, axis=1)
     kp = _pad_to(_pad_kernel_lanes(k, K), Hp, axis=0)
 
-    kw = dict(K=K, Lout=Lout, off_dk=p_right, block_w=Wk,
+    kw = dict(K=K, Lout=Lout, off_dk=p_right, block_w=Wk, block_t=Lt,
               block_h=Hb, batch_chunk=Bc, interpret=interpret)
     if variant == "fused":
         dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_accum(xp, dyp, kp, **kw)

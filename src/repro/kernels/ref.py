@@ -54,14 +54,20 @@ def dwconv_bwd_input_ref(dy: jnp.ndarray, k: jnp.ndarray, padding: Padding = "sa
 def dwconv_bwd_kernel_ref(
     x: jnp.ndarray, dy: jnp.ndarray, K: int, padding: Padding = "same"
 ) -> jnp.ndarray:
-    """dk[h,j] = sum_{b,t} dy[b,h,t] * x_pad[b,h,t+j]  (paper eq. (10))."""
+    """dk[h,j] = sum_{b,t} dy[b,h,t] * x_pad[b,h,t+j]  (paper eq. (10)).
+
+    Accumulates *and returns* f32 like the Pallas bwdk kernels, so a
+    ``variant="auto"`` cache winner flipping between ``"xla"`` and a Pallas
+    variant never silently changes the gradient dtype under bf16 training
+    (callers cast to the parameter dtype, as ``core/dwconv.py`` does).
+    """
     B, H, L = x.shape
     xp = _padded(x, K, padding)
     dy32 = dy.astype(jnp.float32)
     taps = [
         jnp.sum(dy32 * xp[:, :, j : j + L].astype(jnp.float32), axis=(0, 2)) for j in range(K)
     ]
-    return jnp.stack(taps, axis=-1).astype(x.dtype)
+    return jnp.stack(taps, axis=-1)
 
 
 def dwconv_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:

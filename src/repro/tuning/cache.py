@@ -24,6 +24,7 @@ reads the configuration fields.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -31,15 +32,25 @@ import threading
 from pathlib import Path
 from typing import Dict, Optional
 
-from repro.kernels.ops import KernelOptions
+try:  # POSIX-only; on platforms without it saves fall back to best-effort
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
 
-CACHE_VERSION = 3  # v3: the 'bwd_fused' execution path joined the key space
+from repro.kernels.ops import KernelOptions, bwdk_time_tile
+
+# v3: the 'bwd_fused' execution path joined the key space.
+# v4: block_t became a *live execution knob* for the staged bwd_k/bwd_fused
+#     kernels (time tiling) — the schema is unchanged, but an older entry
+#     whose block_t now activates the tiled kernels was measured under
+#     untiled semantics, so its timing no longer describes what runs.
+CACHE_VERSION = 4
 # Older schemas whose entries are still valid per-path decisions and are
 # carried forward on load (and re-written as CACHE_VERSION on next save).
-# v2 == v3 minus the bwd_fused path: its keys can never collide with or
-# mis-apply to the new path, so entries migrate verbatim.  v1 lacked the
+# v2/v3 entries migrate verbatim *except* bwd decisions that the time-tiling
+# semantics change invalidates (see ``_migration_drops``).  v1 lacked the
 # padding key component and is never migrated.
-MIGRATABLE_VERSIONS = (2,)
+MIGRATABLE_VERSIONS = (2, 3)
 CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
 # Anchored to the source tree (src/repro/tuning/ -> repo root), not the CWD:
 # a tuner run from the repo root and a training job launched from a scratch
@@ -114,6 +125,27 @@ class TuneEntry:
         return cls(**{k: v for k, v in d.items() if k in fields})
 
 
+def _migration_drops(key_str: str, entry: TuneEntry) -> bool:
+    """True when a pre-v4 entry must not migrate: time tiling changed the
+    whole bwd_k/bwd_fused *candidate space* for every shape that admits a
+    tile — the staged kernels changed semantics, and tiled candidates
+    joined a space where long-L staged variants used to be VMEM-pruned — so
+    any such decision is stale, including an 'xla'/'naive'/'split' winner
+    whose runners-up changed under it.  Drop it and let the shape re-tune;
+    shapes that cannot tile (and all fwd/bwd_in entries) migrate verbatim.
+    """
+    try:
+        k = ShapeKey.decode(key_str)
+    except (KeyError, ValueError):
+        return True  # unparseable key: never mis-apply
+    if k.path not in ("bwd_k", "bwd_fused"):
+        return False
+    from repro.tuning.space import BLOCK_T_CHOICES  # deferred: space is a heavier import
+
+    return any(bwdk_time_tile(k.L, k.K, bt, "accum") is not None
+               for bt in BLOCK_T_CHOICES)
+
+
 class TuningCache:
     """One JSON tuning database (thread-safe; load-once, save-on-put)."""
 
@@ -138,9 +170,12 @@ class TuningCache:
         out: Dict[str, TuneEntry] = {}
         for key, ed in raw.get("entries", {}).items():
             try:
-                out[key] = TuneEntry.from_dict(ed)
+                entry = TuneEntry.from_dict(ed)
             except TypeError:
                 continue
+            if version != CACHE_VERSION and _migration_drops(key, entry):
+                continue
+            out[key] = entry
         return out
 
     def _load_locked(self) -> None:
@@ -149,23 +184,48 @@ class TuningCache:
         self._loaded = True
         self._entries.update(self._read_disk())
 
+    @contextlib.contextmanager
+    def _file_lock(self):
+        """Exclusive *inter-process* lock around read-merge-replace.
+
+        The in-process ``threading.Lock`` cannot serialize two tuner
+        processes (e.g. CI shards sharing ``REPRO_TUNE_CACHE``): both could
+        re-read the file, then replace it in turn — last writer wins and
+        the other's entries are dropped.  An ``flock`` on a sidecar
+        ``.lock`` file (the database itself is swapped by ``os.replace``,
+        so it cannot carry the lock) makes read-merge-replace atomic across
+        processes as well.
+        """
+        if fcntl is None:  # pragma: no cover - non-POSIX best-effort
+            yield
+            return
+        lock_path = self.path.with_suffix(self.path.suffix + ".lock")
+        with open(lock_path, "w") as fh:
+            fcntl.flock(fh, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(fh, fcntl.LOCK_UN)
+
     def save(self) -> None:
         with self._lock:
             self._load_locked()
-            # Re-read and overlay so concurrent tuners sharing one file only
-            # lose on *colliding* keys (last decision wins), never on
-            # disjoint shapes tuned in parallel.
-            merged = self._read_disk()
-            merged.update(self._entries)
-            self._entries = merged
-            payload = {
-                "version": CACHE_VERSION,
-                "entries": {k: e.to_dict() for k, e in sorted(merged.items())},
-            }
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            tmp = self.path.with_suffix(self.path.suffix + ".tmp")
-            tmp.write_text(json.dumps(payload, indent=1))
-            os.replace(tmp, self.path)
+            with self._file_lock():
+                # Re-read and overlay *inside* the inter-process lock, so a
+                # concurrent tuner sharing this file can only lose on
+                # *colliding* keys (last decision wins), never on disjoint
+                # shapes tuned in parallel.
+                merged = self._read_disk()
+                merged.update(self._entries)
+                self._entries = merged
+                payload = {
+                    "version": CACHE_VERSION,
+                    "entries": {k: e.to_dict() for k, e in sorted(merged.items())},
+                }
+                tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+                tmp.write_text(json.dumps(payload, indent=1))
+                os.replace(tmp, self.path)
 
     # ------------------------------------------------------------- accessors
     def get(self, key: ShapeKey) -> Optional[TuneEntry]:

@@ -45,10 +45,11 @@ def _traffic_for(c: Candidate, d: DWConvDims, itemsize: int) -> traffic.TrafficE
         # Whole-backward accounting (pad materialization charged): fused
         # candidates against the "split" two-op baseline, like for like.
         return traffic.bwd_fused_traffic(d, c.variant, itemsize,
-                                         block_h=c.block_h,
+                                         block_h=c.block_h, block_t=c.block_t,
                                          batch_chunk=c.batch_chunk)
     return traffic.bwdk_traffic(d, c.variant, itemsize,
-                                block_h=c.block_h, batch_chunk=c.batch_chunk)
+                                block_h=c.block_h, block_t=c.block_t,
+                                batch_chunk=c.batch_chunk)
 
 
 def analytical_time_s(

@@ -17,7 +17,12 @@ understands.  The legality predicates mirror the asserts inside
     so candidates are *normalized* (clamped + irrelevant knobs pinned to
     defaults) and deduplicated to keep the space minimal;
   * staged slabs must fit on-chip memory: the VMEM working-set estimate per
-    grid cell is checked against the hardware model's ``vmem_bytes``.
+    grid cell is checked against the hardware model's ``vmem_bytes``.  The
+    staged bwd_k / bwd_fused variants honour ``block_t`` *time tiling*
+    (``kernels/dwconv_bwdk.py``): their tiled working set is bounded by
+    ``block_t`` instead of growing with L, which is what makes long-sequence
+    shapes legal to tune at all — the tuner then trades tile count against
+    the per-seam K-1 halo re-read via the tiled traffic models.
 
 The same structure generalizes the paper's four-variant study axis: the
 tuner explores exactly the implementations the controlled study compares.
@@ -61,8 +66,14 @@ def _space_variants(path: str) -> Tuple[str, ...]:
     return BWD_FUSED_SPACE_VARIANTS
 
 # Tiling lattices (clamped to the problem dims during normalization).
+# UNTILED_BLOCK_T is a sentinel that always clamps to the full Lout: it keeps
+# the *untiled* staged execution reachable for shapes with Lout above the
+# largest finite tile (normalize() collapses it with every other block_t
+# that executes untiled, so short shapes gain no duplicate candidates), and
+# the VMEM predicate then decides whether that single-slab config is legal.
+UNTILED_BLOCK_T = 1 << 30
 BLOCK_H_CHOICES = (1, 2, 4, 8, 16, 32)
-BLOCK_T_CHOICES = (128, 256, 512, 1024, 2048)
+BLOCK_T_CHOICES = (128, 256, 512, 1024, 2048, UNTILED_BLOCK_T)
 BATCH_CHUNK_CHOICES = (8, 16, 32, 64, 128, 256)
 
 # The paper's study shape (B, H, L, K) = (16384, 128, 48, 48) and the
@@ -103,13 +114,21 @@ def _effective_tiles(c: Candidate, d: DWConvDims) -> Tuple[int, int, int, int]:
     return Hb, Lt, Bc, Lout
 
 
+def _bwd_time_tile(c: Candidate, d: DWConvDims) -> Optional[int]:
+    """Effective time tile for a staged bwd candidate, or None when the
+    kernel executes untiled — mirrors ``ops.bwdk_time_tile`` exactly."""
+    from repro.kernels.ops import bwdk_time_tile
+
+    return bwdk_time_tile(d.L, d.K, c.block_t, c.variant)
+
+
 def normalize(c: Candidate, d: DWConvDims) -> Candidate:
     """Clamp knobs to the problem dims and pin knobs the variant ignores.
 
     Two candidates that resolve to the same executed configuration collapse
     to the same normalized value, which keeps the measured set minimal.
     """
-    Hb, Lt, Bc, _ = _effective_tiles(c, d)
+    Hb, Lt, Bc, Lout = _effective_tiles(c, d)
     if c.variant in _KNOBLESS:  # reference/delegating paths: no tiling knobs
         return Candidate(c.path, c.variant, _DEFAULT.block_h,
                          _DEFAULT.block_t, _DEFAULT.batch_chunk)
@@ -117,26 +136,39 @@ def normalize(c: Candidate, d: DWConvDims) -> Candidate:
         if c.variant == "row":  # row stages the whole temporal row: no Lt
             Lt = _DEFAULT.block_t
         return Candidate(c.path, c.variant, Hb, Lt, _DEFAULT.batch_chunk)
-    # bwd_k and bwd_fused: (h-block x batch-chunk) grids, no temporal tile
-    return Candidate(c.path, c.variant, Hb, _DEFAULT.block_t, Bc)
+    # bwd_k and bwd_fused: (h-block x batch-chunk [x time-tile]) grids.  The
+    # staged variants honour block_t (time-tiled reduction); every block_t
+    # that executes untiled (naive, single tile, or a halo-starved tile that
+    # ops.py falls back from) collapses to the canonical Lt=Lout form.
+    tiled_lt = _bwd_time_tile(c, d)
+    Lt = tiled_lt if tiled_lt is not None else Lout
+    return Candidate(c.path, c.variant, Hb, Lt, Bc)
 
 
 def _vmem_working_set_bytes(c: Candidate, d: DWConvDims, itemsize: int) -> int:
     """Per-grid-cell VMEM staging estimate for the candidate's kernel."""
     Hb, Lt, Bc, Lout = _effective_tiles(c, d)
     Wpad = round_up(Lout + d.K - 1, LANE)
+    Kp4 = Hb * round_up(d.K, LANE) * 4  # f32 dk accumulator / partials block
     if c.path in ("fwd", "bwd_in"):
         if c.variant == "row":
             return Hb * (Wpad + Lout) * itemsize
         if c.variant == "block":
             return Hb * 3 * Lt * itemsize          # cur + halo + out tile
         return Hb * (Lt + LANE + Lt) * itemsize    # naive/lane scratch + out
+    tiled_lt = _bwd_time_tile(c, d)
     if c.path == "bwd_fused":
+        if tiled_lt is not None:
+            # Time-tiled: haloed (cur + neighbour) slabs of both operands
+            # plus the dx tile — bounded by block_t, independent of L.
+            return Bc * Hb * 5 * tiled_lt * itemsize + Kp4
         # Both operand slabs (width Wpad each) + the dx output block + the
         # dk accumulator staged per (h-block, batch-chunk) cell.
-        return (Bc * Hb * (2 * Wpad + Lout) * itemsize
-                + Hb * round_up(d.K, LANE) * 4)
-    # bwd_k: both operand slabs staged per (h-block, batch-chunk) cell.
+        return Bc * Hb * (2 * Wpad + Lout) * itemsize + Kp4
+    # bwd_k: both operand slabs staged per (h-block, batch-chunk) cell;
+    # time-tiled accum/twostage bound the slabs by block_t instead of L.
+    if tiled_lt is not None:
+        return Bc * Hb * 3 * tiled_lt * itemsize + Kp4
     return Bc * Hb * (Wpad + d.L) * itemsize
 
 

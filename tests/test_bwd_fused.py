@@ -259,6 +259,39 @@ def test_cache_v2_database_migrates_cleanly(tmp_path):
     assert TuningCache(p).get(key) is None
 
 
+def test_cache_v3_migration_drops_stale_tiled_bwd_decisions(tmp_path):
+    """v3 predates block_t time tiling, which changed the bwd candidate
+    space for every shape that admits a tile: staged winners were measured
+    under untiled semantics, and even an 'xla' winner beat runners-up that
+    no longer exist as such.  All bwd_k/bwd_fused entries on tileable
+    shapes must be dropped on migration; short shapes (whose space is
+    unchanged) and all fwd/bwd_in entries migrate verbatim."""
+    stale = ShapeKey(path="bwd_k", B=8, H=64, L=4096, K=4, dtype="float32",
+                     backend="cpu")          # tileable: staged winner stale
+    stale_xla = ShapeKey(path="bwd_k", B=8, H=64, L=16384, K=4,
+                         dtype="float32", backend="cpu")  # tileable: xla
+    fresh = ShapeKey(path="bwd_k", B=64, H=128, L=48, K=48, dtype="float32",
+                     backend="cpu")          # Lout <= min tile: unchanged
+    fwd = ShapeKey(path="fwd", B=8, H=64, L=4096, K=4, dtype="float32",
+                   backend="cpu")
+    entry = TuneEntry(variant="accum", block_h=8, block_t=512, batch_chunk=8)
+    xla_entry = TuneEntry(variant="xla", block_h=8, block_t=512, batch_chunk=128)
+    fwd_entry = TuneEntry(variant="row", block_h=8, block_t=512, batch_chunk=128)
+    p = tmp_path / "db.json"
+    p.write_text(json.dumps({
+        "version": 3,
+        "entries": {stale.encode(): entry.to_dict(),
+                    stale_xla.encode(): xla_entry.to_dict(),
+                    fresh.encode(): entry.to_dict(),
+                    fwd.encode(): fwd_entry.to_dict()},
+    }))
+    c = TuningCache(p)
+    assert c.get(stale) is None, "stale tiled-semantics decision migrated"
+    assert c.get(stale_xla) is None, "xla winner pins a tileable shape"
+    assert c.get(fresh) == entry
+    assert c.get(fwd) == fwd_entry
+
+
 def test_checked_in_cache_loads_without_crash():
     """The repository's persistent database must survive the schema bump."""
     if not DEFAULT_CACHE_PATH.exists():

@@ -121,6 +121,53 @@ def test_custom_vjp_matches_autodiff(variant):
     np.testing.assert_allclose(gk, rk, atol=1e-3)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", BWDK_VARIANTS + ["xla"])
+def test_bwdk_dtype_consistent_across_variants(variant, dtype):
+    """Every bwdk variant — including the ``"xla"`` reference — accumulates
+    and returns f32, so an ``auto`` cache winner flipping variants can never
+    silently change the gradient dtype under bf16 training."""
+    B, H, L, K = 2, 4, 96, 5
+    x = _rand((B, H, L), dtype, 0)
+    dy = _rand((B, H, L), dtype, 2)
+    dk = ops.dwconv_bwd_kernel_op(x, dy, K, "same", variant, SMALL_OPTS)
+    assert dk.dtype == jnp.float32, (variant, dtype, dk.dtype)
+    want = np.asarray(ref.dwconv_bwd_kernel_ref(x, dy, K, "same"), np.float32)
+    atol = 1e-3 if dtype == jnp.float32 else 5e-1
+    np.testing.assert_allclose(np.asarray(dk, np.float32), want, atol=atol, rtol=1e-2)
+
+
+def test_shape_legality_errors_name_dims_and_knob():
+    """Illegal geometries raise ValueError (not a bare assert stripped under
+    ``python -O``) naming the offending dims and the knob to change."""
+    from repro.kernels import dwconv_bwd_fused, dwconv_bwdk, dwconv_fwd
+
+    xp = jnp.zeros((3, 4, 256), jnp.float32)
+    dyp = jnp.zeros((3, 4, 256), jnp.float32)
+    with pytest.raises(ValueError, match="batch_chunk"):
+        dwconv_bwdk.dwconv_bwdk_accum(xp, dyp, K=3, batch_chunk=2)
+    with pytest.raises(ValueError, match="block_t"):
+        dwconv_bwdk.dwconv_bwdk_twostage(
+            jnp.zeros((2, 4, 512)), jnp.zeros((2, 4, 384)), K=5,
+            batch_chunk=2, block_t=2)
+    with pytest.raises(ValueError, match="block_h"):
+        dwconv_fwd.dwconv_fwd_row(
+            jnp.zeros((2, 5, 256)), jnp.zeros((5, 128)), K=3, Lout=128,
+            block_h=3)
+    with pytest.raises(ValueError, match="block_t"):
+        dwconv_fwd.dwconv_fwd_block(
+            jnp.zeros((2, 4, 512)), jnp.zeros((4, 128)), K=48, Lout=128,
+            block_t=16)
+    with pytest.raises(ValueError, match="block_t"):
+        dwconv_fwd.dwconv_fwd_lane(
+            jnp.zeros((2, 4, 512)), jnp.zeros((4, 128)), K=3, Lout=256,
+            block_t=100)
+    with pytest.raises(ValueError, match="block_w"):
+        dwconv_bwd_fused.dwconv_bwd_fused_accum(
+            xp, dyp, jnp.zeros((4, 128)), K=3, Lout=256, off_dk=1,
+            block_w=512, batch_chunk=3)
+
+
 def test_block_tiling_configs():
     """Sweep tile shapes: results must be tiling-invariant."""
     x = _rand((2, 16, 300, ), jnp.float32, 0)

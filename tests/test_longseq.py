@@ -1,0 +1,204 @@
+"""Time-tiled weight-gradient validation (the long-sequence regime).
+
+The ``block_t`` time tiling in ``kernels/dwconv_bwdk.py`` /
+``dwconv_bwd_fused.py`` bounds the per-cell VMEM working set for long
+sequences.  These tests pin down:
+
+  * correctness of every tiled bwdk / fused variant against ``jax.vjp`` of
+    the reference on ragged L spanning multiple tiles with non-divisible
+    tails (Lout not a multiple of block_t);
+  * bitwise agreement of the tiled ``accum`` variant with the untiled one
+    on integer-valued data (every partial sum is exact in f32, so any
+    seam/halo indexing slip shows up as a hard mismatch, not a tolerance);
+  * bitwise agreement of tiled fused dk with tiled accum dk (the fused
+    kernels compute dk from identically shaped slabs);
+  * tiled VMEM working sets that are bounded by block_t (independent of L)
+    and legal where the untiled estimate grows with L;
+  * the tiled traffic model charging exactly the per-seam halo re-read.
+
+Shapes are kept small — the tiling logic is exercised by the tile *count*,
+not the absolute length; ``benchmarks/paper_longseq.py`` runs the real
+``L=16384`` shape.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import traffic
+from repro.core import dwconv as dw
+from repro.kernels import ops, ref
+from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
+from repro.tuning import space
+from repro.tuning.space import Candidate
+
+# (B, H, L, K, padding, block_t): every case spans >= 2 tiles; most have a
+# non-divisible tail (Lout % block_t != 0) so the zero-padded tile and the
+# trailing halo tile are both exercised.
+TILED_SHAPES = [
+    (2, 4, 300, 5, "same", 128),     # Lout=384, 3 tiles, exact
+    (1, 3, 520, 4, "causal", 256),   # Lout=640, 3 tiles, tail 128
+    (2, 2, 700, 9, "same", 128),     # Lout=768, 6 tiles, tail 68 inside L
+    (3, 5, 130, 48, "same", 128),    # K-1=47 close to the tile, Lout=256
+    (2, 4, 300, 6, "causal", 128),   # even K causal: off_dk=0 edge
+]
+BWDK_TILED = ["accum", "twostage"]
+FUSED_TILED = ["fused", "fused_partials"]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _randint(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-4, 5, size=shape), jnp.float32)
+
+
+def _vjp_ref(x, k, dy, pad):
+    _, vjp = jax.vjp(lambda x, k: ref.dwconv_fwd_ref(x, k, pad), x, k)
+    return vjp(dy)
+
+
+def _opts(block_t):
+    return ops.KernelOptions(block_h=3, block_t=block_t, batch_chunk=2)
+
+
+# ---------------------------------------------------------------------------
+# tiled correctness vs jax.vjp
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", BWDK_TILED)
+@pytest.mark.parametrize("B,H,L,K,pad,bt", TILED_SHAPES)
+def test_tiled_bwdk_matches_vjp(variant, B, H, L, K, pad, bt):
+    assert ops.bwdk_time_tile(L, K, bt, variant) is not None, "case must tile"
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    _, dk_want = _vjp_ref(x, k, dy, pad)
+    dk = ops.dwconv_bwd_kernel_op(x, dy, K, pad, variant, _opts(bt))
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_want),
+                               atol=2e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("variant", FUSED_TILED)
+@pytest.mark.parametrize("B,H,L,K,pad,bt", TILED_SHAPES)
+def test_tiled_fused_matches_vjp(variant, B, H, L, K, pad, bt):
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    dx_want, dk_want = _vjp_ref(x, k, dy, pad)
+    dx, dk = ops.dwconv_bwd_fused_op(x, dy, k, pad, variant, _opts(bt))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_want),
+                               atol=2e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,L,K,pad,bt", TILED_SHAPES[:2])
+def test_tiled_custom_vjp_matches_autodiff(B, H, L, K, pad, bt):
+    """The differentiable operator with a tiled fused backward."""
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+
+    def loss_custom(x, k):
+        return jnp.sum(jnp.sin(dw.dwconv(x, k, padding=pad, variant="fused",
+                                         opts=_opts(bt))))
+
+    def loss_ref(x, k):
+        return jnp.sum(jnp.sin(ref.dwconv_fwd_ref(x, k, pad)))
+
+    gx, gk = jax.grad(loss_custom, argnums=(0, 1))(x, k)
+    rx, rk = jax.grad(loss_ref, argnums=(0, 1))(x, k)
+    np.testing.assert_allclose(gx, rx, atol=1e-4)
+    np.testing.assert_allclose(gk, rk, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# bitwise pins: seam/halo indexing errors must be hard failures
+# ---------------------------------------------------------------------------
+
+
+def test_tiled_accum_bitwise_matches_untiled_on_integers():
+    """Integer-valued data keeps every f32 partial sum exact, so the tiled
+    accumulation must reproduce the untiled dk bit for bit — any halo or
+    seam slip changes the integers."""
+    B, H, L, K = 2, 4, 300, 5
+    x = _randint((B, H, L), 0)
+    dy = _randint((B, H, L), 1)
+    tiled = ops.dwconv_bwd_kernel_op(x, dy, K, "same", "accum", _opts(128))
+    untiled = ops.dwconv_bwd_kernel_op(x, dy, K, "same", "accum", _opts(4096))
+    assert ops.bwdk_time_tile(L, K, 128, "accum") is not None
+    assert ops.bwdk_time_tile(L, K, 4096, "accum") is None
+    assert np.array_equal(np.asarray(tiled), np.asarray(untiled))
+
+
+@pytest.mark.parametrize("B,H,L,K,pad,bt", TILED_SHAPES[:3])
+def test_tiled_fused_dk_bitwise_matches_tiled_accum(B, H, L, K, pad, bt):
+    """Tiled fused dk is computed from identically shaped slabs as the tiled
+    accum variant — bit-for-bit, like the untiled pair."""
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    dy = _rand((B, H, L), jnp.float32, 2)
+    _, dk_fused = ops.dwconv_bwd_fused_op(x, dy, k, pad, "fused", _opts(bt))
+    dk_accum = ops.dwconv_bwd_kernel_op(x, dy, K, pad, "accum", _opts(bt))
+    assert np.asarray(dk_fused).tobytes() == np.asarray(dk_accum).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# legality: the tiled working set is bounded by block_t, not L
+# ---------------------------------------------------------------------------
+
+
+LONG_DIMS = DWConvDims(B=8, H=64, L=16384, K=4)
+
+
+@pytest.mark.parametrize("path,variant", [("bwd_k", "accum"),
+                                          ("bwd_k", "twostage"),
+                                          ("bwd_fused", "fused"),
+                                          ("bwd_fused", "fused_partials")])
+def test_tiled_vmem_working_set_is_L_independent(path, variant):
+    d, d2 = LONG_DIMS, dataclasses.replace(LONG_DIMS, L=4 * LONG_DIMS.L)
+    c = space.normalize(Candidate(path=path, variant=variant, block_h=8,
+                                  block_t=512, batch_chunk=8), d)
+    need = space._vmem_working_set_bytes(c, d, itemsize=4)
+    c2 = space.normalize(dataclasses.replace(c), d2)
+    need2 = space._vmem_working_set_bytes(c2, d2, itemsize=4)
+    assert need == need2, "tiled footprint must not grow with L"
+    ok, reason = space.is_legal(c, d)
+    assert ok, reason
+
+
+def test_long_L_search_space_contains_tiled_candidates():
+    """The predicates must pass tiled candidates for long L — the space is
+    not pruned to the reference/naive escape hatches."""
+    for path in ("bwd_k", "bwd_fused"):
+        cands = space.search_space(LONG_DIMS, path, include_xla=False)
+        Lout = round_up(LONG_DIMS.L, LANE)
+        tiled = [c for c in cands if c.variant not in ("naive", "split")
+                 and c.block_t < Lout]
+        assert tiled, f"no tiled candidates survived for {path}"
+
+
+# ---------------------------------------------------------------------------
+# tiled traffic model: exactly the per-seam halo re-read is charged
+# ---------------------------------------------------------------------------
+
+
+def test_tiled_traffic_charges_halo_only():
+    d = LONG_DIMS
+    bt = 512
+    nT = cdiv(round_up(d.L, LANE), bt)
+    tiled = traffic.bwdk_traffic(d, "accum", block_t=bt)
+    untiled = traffic.bwdk_traffic(d, "accum", block_t=d.L)
+    halo = d.B * d.H * (nT - 1) * (d.K - 1) * 4
+    assert tiled.bytes_moved - untiled.bytes_moved == halo
+    assert tiled.bytes_moved <= 1.10 * untiled.bytes_moved
+
+    f_tiled = traffic.bwd_fused_traffic(d, "fused", block_t=bt)
+    f_untiled = traffic.bwd_fused_traffic(d, "fused", block_t=d.L)
+    assert f_tiled.bytes_moved - f_untiled.bytes_moved == 2 * halo

@@ -371,6 +371,42 @@ def test_concurrent_cache_writers_merge_disjoint_keys(tmp_path):
     assert fresh.get(key_b) is not None
 
 
+def test_interleaved_concurrent_saves_drop_no_entries(tmp_path):
+    """Simulated cross-process interleaving: many writers, each with its own
+    cache instance (distinct in-process locks, exactly like separate tuner
+    processes sharing ``REPRO_TUNE_CACHE``), save disjoint keys
+    concurrently.  The inter-process file lock makes read-merge-replace
+    atomic, so no last-writer-wins lost update may drop an entry."""
+    import threading
+
+    p = tmp_path / "shared.json"
+    n_threads, per_thread = 6, 4
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def writer(tid):
+        try:
+            cache = TuningCache(p)  # own instance: no shared threading.Lock
+            barrier.wait()
+            for i in range(per_thread):
+                key = ShapeKey(path="bwd_k", B=2 ** tid, H=4, L=48 + i,
+                               K=5, dtype="float32", backend="cpu")
+                cache.put(key, TuneEntry(variant="accum", block_h=2,
+                                         block_t=128, batch_chunk=8))
+        except Exception as e:  # pragma: no cover - surfaced via assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    fresh = TuningCache(p)
+    assert len(fresh) == n_threads * per_thread, (
+        "interleaved saves dropped entries (lost update)")
+
+
 def test_auto_equivalent_to_row_through_differentiable_dwconv(tmp_cache):
     """End-to-end: core.dwconv with variant='auto' (tuned to 'row') matches
     both the explicit 'row' path and XLA autodiff, grads included."""
