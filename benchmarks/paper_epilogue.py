@@ -1,0 +1,199 @@
+"""Fused-epilogue gate (the epilogue PR's tentpole benchmark).
+
+The model-level call sites compose the depthwise conv with a per-channel
+bias add and/or a pointwise activation (GELU in S4ConvD, bias+SiLU in the
+Mamba-2 block).  This benchmark gates the fused-epilogue kernel family
+against the unfused composition in three regimes:
+
+  *modeled*   — whole-block (fwd + bwd) HBM bytes at the paper geometry
+                (B=32, H=128, L=48, K=48) for the in-register epilogue +
+                activation-recompute backward vs the unfused chain under
+                ordinary autodiff (standalone elementwise passes + saved
+                pre-activation residual).  **Gate**: fused bytes <= 0.75x
+                unfused bytes, for both call-site epilogues.
+
+  *exactness* — dx/dk/dbias from the fused epilogue backward vs ``jax.vjp``
+                of the unfused reference composition, and the ``act=none``
+                path bitwise-identical to the pre-epilogue kernels (the
+                controlled per-variant study is untouched).  Violations are
+                FAILED rows (nonzero harness exit), not exceptions.
+
+  *measured*  — interpret-mode wall-clock of the fused fwd+bwd vs the
+                unfused composition at reduced batch (structure on the CPU
+                validation regime, not TPU prediction); medians, exported
+                as the ``epilogue_fused_speedup`` top-level metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import traffic
+from repro.analysis.hw import TPU_V5E
+from repro.analysis.timer import time_fn
+from repro.core import dwconv as dw
+from repro.kernels import ops, ref
+from repro.kernels.common import DWConvDims
+
+# Acceptance gate: the fused-epilogue whole block must move at most this
+# fraction of the unfused composition's modeled HBM bytes on the paper shape.
+GATE_RATIO = 0.75
+EPI_DIMS = DWConvDims(B=32, H=128, L=48, K=48)
+# The two call-site epilogues: S4ConvD (GELU, no bias), Mamba-2 (bias+SiLU).
+CALL_SITE_EPILOGUES = ("gelu", "bias+silu")
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def modeled_rows() -> List[Row]:
+    hw = TPU_V5E
+    rows: List[Row] = []
+    worst = 0.0
+    for epi in CALL_SITE_EPILOGUES:
+        ests = {
+            "fused": traffic.epilogue_block_traffic(EPI_DIMS, epilogue=epi, fused=True),
+            "unfused": traffic.epilogue_block_traffic(EPI_DIMS, epilogue=epi, fused=False),
+        }
+        for name, est in ests.items():
+            compute_s = est.flops / hw.peak_flops_f32
+            memory_s = est.bytes_moved / hw.hbm_bw
+            rows.append(Row(
+                f"paper_epilogue/modeled/{epi}/{name}",
+                max(compute_s, memory_s) * 1e6,
+                f"bytes={est.bytes_moved / 1e6:.3f}MB "
+                f"AI={est.arithmetic_intensity:.2f} "
+                f"roofline={'memory' if memory_s >= compute_s else 'compute'}-bound",
+            ))
+        ratio = ests["fused"].bytes_moved / ests["unfused"].bytes_moved
+        worst = max(worst, ratio)
+        rows.append(Row(
+            f"paper_epilogue/modeled/{epi}/ratio", 0.0,
+            f"fused_vs_unfused_bytes={ratio:.3f}"))
+    verdict = "GATE_OK" if worst <= GATE_RATIO else "GATE_FAILED"
+    rows.append(Row(
+        "paper_epilogue/modeled/gate", 0.0,
+        f"worst_ratio={worst:.3f} (gate <= {GATE_RATIO}) {verdict}"))
+    return rows
+
+
+def _unfused_ref(x, k, b, act, pad):
+    """The unfused composition the call sites used to run (and the autodiff
+    oracle the fused gradients must match)."""
+    y = ref.dwconv_fwd_ref(x, k, pad)
+    if b is not None:
+        y = y + b[None, :, None]
+    return jax.nn.gelu(y) if act == "gelu" else jax.nn.silu(y)
+
+
+def exactness_rows() -> List[Row]:
+    rows: List[Row] = []
+    B, H, L, K = 4, 8, 96, 9
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, H, L)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, H, L)), jnp.float32)
+    opts = ops.KernelOptions(batch_chunk=2, interpret=True)
+
+    for epi, bias, act, pad in (("gelu", None, "gelu", "same"),
+                                ("bias+silu", b, "silu", "causal")):
+        db_want = None
+        if bias is None:
+            _, vjp = jax.vjp(lambda x, k: _unfused_ref(x, k, None, act, pad), x, k)
+            dx_want, dk_want = vjp(dy)
+        else:
+            _, vjp3 = jax.vjp(lambda x, k, b: _unfused_ref(x, k, b, act, pad), x, k, b)
+            dx_want, dk_want, db_want = vjp3(dy)
+        dx, dk, db = ops.dwconv_bwd_fused_act_op(
+            x, dy, k, bias, pad, "fused", opts, act=act)
+        errs = [float(jnp.max(jnp.abs(dx - dx_want))),
+                float(jnp.max(jnp.abs(dk - dk_want)))]
+        if db_want is not None:
+            errs.append(float(jnp.max(jnp.abs(db - db_want))))
+        ok = max(errs) < 1e-3
+        rows.append(Row(
+            f"paper_epilogue/grads/{epi}", 0.0,
+            f"max_err={max(errs):.2e} vs jax.vjp(unfused) "
+            + ("GRADS_OK" if ok else "GRADS_FAILED")))
+
+    # act=none must be bitwise-identical to the pre-epilogue kernels.
+    plain = ops.dwconv_fwd_op(x, k, "same", "row", opts)
+    via_epi = dw.dwconv_act(x, k, act="none", padding="same", variant="row", opts=opts)
+    bitwise = bool(jnp.all(plain == via_epi))
+    rows.append(Row(
+        "paper_epilogue/act_none_bitwise", 0.0,
+        "act=none bit-identical to pre-epilogue kernels: "
+        + ("BITWISE_OK" if bitwise else "BITWISE_FAILED")))
+    return rows
+
+
+def measured_rows(iters: int = 3) -> List[Row]:
+    """Interpret-mode fwd+bwd wall-clock: fused epilogue vs unfused chain."""
+    B, H, L, K = 16, 64, 48, 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, H, L)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    opts = ops.KernelOptions(batch_chunk=8, interpret=True)
+
+    def fused_loss(x, k, b):
+        return jnp.sum(dw.dwconv_act(x, k, b, act="silu", padding="causal",
+                                     variant="fused", opts=opts))
+
+    def unfused_loss(x, k, b):
+        y = dw.dwconv(x, k, padding="causal", variant="fused", opts=opts)
+        return jnp.sum(jax.nn.silu(y + b[None, :, None]))
+
+    f_fused = jax.jit(jax.grad(fused_loss, argnums=(0, 1, 2)))
+    f_unfused = jax.jit(jax.grad(unfused_loss, argnums=(0, 1, 2)))
+    t_fused = time_fn(f_fused, x, k, b, warmup=1, iters=iters)
+    t_unfused = time_fn(f_unfused, x, k, b, warmup=1, iters=iters)
+    speedup = t_unfused.median_s / max(t_fused.median_s, 1e-12)
+    return [
+        Row("paper_epilogue/measured/fused", t_fused.median_us,
+            "fwd+bwd, bias+silu in-kernel, interpret mode"),
+        Row("paper_epilogue/measured/unfused", t_unfused.median_us,
+            "fwd+bwd, conv then standalone bias/silu, interpret mode"),
+        Row("paper_epilogue/measured/speedup", 0.0,
+            f"epilogue_fused={speedup:.2f}x (interpret-mode wall-clock)"),
+    ]
+
+
+_SPEEDUP_RE = re.compile(r"epilogue_fused=([0-9.]+)x")
+
+
+def top_level_metrics(rows: List[Row]) -> Dict[str, float]:
+    """``benchmarks/run.py`` hook: promote the measured epilogue-fusion
+    speedup to a top-level ``--json`` key (``BENCH_kernels.json``)."""
+    for r in rows:
+        m = _SPEEDUP_RE.search(r.derived)
+        if m:
+            return {"epilogue_fused_speedup": float(m.group(1))}
+    return {}
+
+
+def run(fast: bool = False) -> List[Row]:
+    rows = modeled_rows()
+    rows += exactness_rows()
+    rows += measured_rows(iters=2 if fast else 3)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run()
+    for r in rows:
+        print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
+    if any("FAILED" in r.derived for r in rows):
+        sys.exit(1)

@@ -3,8 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--fast`` trims iteration
 counts (used by CI); ``--only <prefix>`` filters benchmarks; ``--json
 <path>`` additionally writes machine-readable results (conventionally
-``BENCH_kernels.json``) so the perf trajectory is recorded per run — the
-fused-vs-split backward speedup is promoted to a top-level metric.
+``BENCH_kernels.json``) so the perf trajectory is recorded per run.
+
+Modules are imported *lazily, per module*: an ``--only paper_epilogue``
+run never pays for (or dies on) importing unrelated benchmark modules —
+an import failure is charged to the module that failed, not the harness.
+
+A module may export ``top_level_metrics(rows) -> dict`` to promote derived
+quantities (e.g. the fused-vs-split backward speedup, the epilogue fusion
+speedup) to top-level keys of the ``--json`` payload; the harness itself
+no longer hard-codes any row-parsing regex.
 
 A module may signal a soft failure by emitting a row whose ``derived``
 contains ``FAILED`` (e.g. the e2e convergence check): the remaining rows
@@ -13,12 +21,32 @@ still print, but the harness exits nonzero.
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
-import re
 import sys
 import traceback
 
-_SPEEDUP_RE = re.compile(r"fused_vs_split=([0-9.]+)x")
+# Declaration order is execution order; names only — nothing imports until
+# the module is actually selected.
+MODULE_NAMES = [
+    "paper_table2",
+    "paper_table3",
+    "paper_roofline",
+    "paper_validation",
+    "paper_autotune",
+    "paper_fused_bwd",
+    "paper_longseq",
+    "paper_epilogue",
+    "s4convd_e2e",
+    "roofline_table",
+]
+
+# --json keys that must exist (as null) even when their module didn't run,
+# so downstream dashboards never key-error on an --only subset.
+_STABLE_METRIC_KEYS = (
+    "fused_vs_split_backward_speedup",
+    "epilogue_fused_speedup",
+)
 
 
 def main() -> None:
@@ -29,49 +57,33 @@ def main() -> None:
                     help="write machine-readable results (BENCH_kernels.json)")
     args = ap.parse_args()
 
-    from benchmarks import paper_table2, paper_table3, paper_roofline, paper_validation
-    from benchmarks import paper_autotune, paper_fused_bwd, paper_longseq
-    from benchmarks import roofline_table, s4convd_e2e
-
-    modules = [
-        ("paper_table2", paper_table2),
-        ("paper_table3", paper_table3),
-        ("paper_roofline", paper_roofline),
-        ("paper_validation", paper_validation),
-        ("paper_autotune", paper_autotune),
-        ("paper_fused_bwd", paper_fused_bwd),
-        ("paper_longseq", paper_longseq),
-        ("s4convd_e2e", s4convd_e2e),
-        ("roofline_table", roofline_table),
-    ]
     print("name,us_per_call,derived")
     failures = 0
     results = []
-    fused_vs_split = None
-    for name, mod in modules:
+    metrics = {k: None for k in _STABLE_METRIC_KEYS}
+    for name in MODULE_NAMES:
         if args.only and not name.startswith(args.only):
             continue
         try:
-            for row in mod.run(fast=args.fast):
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = list(mod.run(fast=args.fast))
+            for row in rows:
                 print(f"{row.name},{row.us_per_call:.1f},{row.derived}")
                 results.append({"name": row.name, "us_per_call": row.us_per_call,
                                 "derived": row.derived})
                 if "FAILED" in row.derived:
                     failures += 1
-                m = _SPEEDUP_RE.search(row.derived)
-                if m and row.name.startswith("paper_fused_bwd/measured"):
-                    fused_vs_split = float(m.group(1))
+            hook = getattr(mod, "top_level_metrics", None)
+            if hook is not None:
+                metrics.update(hook(rows))
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", file=sys.stdout)
             results.append({"name": name, "us_per_call": 0.0, "derived": "ERROR"})
             traceback.print_exc()
     if args.json:
-        payload = {
-            "fused_vs_split_backward_speedup": fused_vs_split,
-            "failures": failures,
-            "results": results,
-        }
+        payload = dict(metrics)
+        payload.update({"failures": failures, "results": results})
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)

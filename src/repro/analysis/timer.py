@@ -30,13 +30,38 @@ class Timing:
     def ms(self) -> float:
         return self.mean_s * 1e3
 
+    @property
+    def median_us(self) -> float:
+        """Preferred single-number summary on shared cloud runners: the
+        median is insensitive to the occasional descheduled iteration that
+        would drag the mean (the counter-free protocol has no hardware
+        counters to cross-check an outlier against)."""
+        return self.median_s * 1e6
+
+    @property
+    def median_ms(self) -> float:
+        return self.median_s * 1e3
+
 
 def _sync(x):
     return jax.block_until_ready(x)
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10, **kwargs) -> Timing:
-    """Steady-state timing of ``fn(*args, **kwargs)`` with explicit sync."""
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+            trim: float = 0.0, **kwargs) -> Timing:
+    """Steady-state timing of ``fn(*args, **kwargs)`` with explicit sync.
+
+    ``trim`` (fraction in [0, 0.5)) drops that share of samples from *each*
+    tail before computing ``mean_s``/``std_s`` — an outlier-robust mean for
+    jittery shared-tenancy runners.  ``median_s`` / ``min_s`` / ``samples``
+    always describe the full untrimmed sample set.
+    """
+    if iters < 1:
+        raise ValueError(
+            f"time_fn needs iters >= 1 to produce a sample, got iters={iters}")
+    if not 0.0 <= trim < 0.5:
+        raise ValueError(
+            f"trim must be a per-tail fraction in [0, 0.5), got {trim}")
     for _ in range(warmup):
         _sync(fn(*args, **kwargs))
     samples = []
@@ -44,10 +69,12 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10, **kwargs) -> 
         t0 = time.perf_counter()
         _sync(fn(*args, **kwargs))
         samples.append(time.perf_counter() - t0)
+    cut = int(len(samples) * trim)
+    kept = sorted(samples)[cut : len(samples) - cut] if cut else samples
     return Timing(
-        mean_s=statistics.fmean(samples),
+        mean_s=statistics.fmean(kept),
         median_s=statistics.median(samples),
         min_s=min(samples),
-        std_s=statistics.pstdev(samples) if len(samples) > 1 else 0.0,
+        std_s=statistics.pstdev(kept) if len(kept) > 1 else 0.0,
         samples=tuple(samples),
     )

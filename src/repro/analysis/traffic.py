@@ -258,6 +258,216 @@ def bwd_fused_traffic(
 
 
 # ---------------------------------------------------------------------------
+# Epilogue accounting: fused bias/activation vs standalone elementwise ops.
+#
+# Every model-level call site composes the conv with a per-channel bias add
+# and/or a pointwise activation.  Run standalone, each op is one full-tensor
+# HBM read + write in the forward, and the activation backward costs a
+# further read of dy, a read of the saved pre-activation residual, and a
+# write of the effective gradient.  The fused epilogue moves *none* of
+# those bytes: the forward applies the ops in-register before the single
+# write, and the backward recomputes the pre-activation from the staged
+# slab (K extra MACs per element — flops, not bytes) — so the modeled
+# difference between the fused and unfused compositions is exactly the
+# standalone elementwise traffic.
+# ---------------------------------------------------------------------------
+
+from repro.kernels.epilogue import parse_epilogue
+
+# Pointwise-activation cost proxy (tanh/sigmoid polynomial, value or
+# derivative) — a flop ordering term, not a calibrated count.
+ACT_FLOPS_PER_ELEM = 10.0
+
+
+def _epilogue_n_ops(bias: bool, act: str) -> int:
+    """Standalone elementwise passes the unfused composition runs forward."""
+    return (1 if bias else 0) + (1 if act != "none" else 0)
+
+
+def _epilogue_flops(d: DWConvDims, bias: bool, act: str) -> float:
+    elems = d.B * d.H * d.L
+    return (elems if bias else 0.0) + (ACT_FLOPS_PER_ELEM * elems if act != "none" else 0.0)
+
+
+def epilogue_fwd_traffic(
+    d: DWConvDims,
+    variant: str = "row",
+    itemsize: int = 4,
+    *,
+    epilogue: str = "none",
+    fused: bool = True,
+    block_h: int = 8,
+    block_t: int = 512,
+) -> TrafficEstimate:
+    """Forward traffic for ``act(conv(x, k) + bias)``.
+
+    ``fused=True`` models the in-register epilogue (the conv variant's own
+    traffic plus the bias-vector read); ``fused=False`` charges the unfused
+    composition one extra full-tensor read + write per standalone op, so
+    ``unfused - fused == n_ops * 2 * B*H*L * itemsize`` exactly.
+    """
+    bias, act = parse_epilogue(epilogue)
+    base = fwd_traffic(d, variant, itemsize, block_h=block_h, block_t=block_t)
+    bias_bytes = d.H * itemsize if bias else 0
+    flops = base.flops + _epilogue_flops(d, bias, act)
+    if fused:
+        return dataclasses.replace(
+            base, flops=flops, bytes_read=base.bytes_read + bias_bytes)
+    n_ops = _epilogue_n_ops(bias, act)
+    slab = d.B * d.H * d.L * itemsize
+    return dataclasses.replace(
+        base, flops=flops,
+        bytes_read=base.bytes_read + bias_bytes + n_ops * slab,
+        bytes_written=base.bytes_written + n_ops * slab)
+
+
+def epilogue_bwd_traffic(
+    d: DWConvDims,
+    variant: str = "fused",
+    itemsize: int = 4,
+    *,
+    epilogue: str = "none",
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+) -> TrafficEstimate:
+    """Whole-backward traffic for the epilogue-aware *fused* kernels.
+
+    Mirrors :func:`bwd_fused_traffic` (pad materialization charged, the
+    forward's x_pad residual reused verbatim) with the epilogue deltas: the
+    pre-activation recompute adds one ``path_flops`` of MACs and — in the
+    tiled regime — the extended x window binds a *third* (prev) tile, so
+    three haloed operand reads cross every interior seam instead of two.
+    No pre-activation residual is read and no standalone pass runs; the
+    only new bytes are the bias vector in and the dbias vector out.
+
+    ``variant="split"`` maps to the activation-*recompute* split
+    composition that ``ops.dwconv_bwd_fused_act_op`` actually runs on that
+    path (one standalone pre-activation pass + effective-gradient pass +
+    the split two-op backward), so fused-vs-split stays like for like on
+    the tuner's epilogue-aware ``bwd_fused`` axis.
+    """
+    bias, act = parse_epilogue(epilogue)
+    if epilogue == "none":
+        return bwd_fused_traffic(d, variant, itemsize, block_h=block_h,
+                                 block_t=block_t, batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L * itemsize
+    if variant == "split":
+        base = bwd_split_traffic(d, itemsize, block_h=block_h,
+                                 block_t=block_t, batch_chunk=batch_chunk)
+        # pre recompute (conv + bias, one pass) ...
+        pre = fwd_traffic(d, "row", itemsize, block_h=block_h, block_t=block_t)
+        # ... + effective-gradient pass (read dy + pre, write dy_eff) + the
+        # dbias reduction over dy_eff.
+        extra_read = pre.bytes_read + 2 * slab + (slab if bias else 0)
+        extra_written = pre.bytes_written + slab + (d.H * itemsize if bias else 0)
+        return dataclasses.replace(
+            base,
+            flops=base.flops + pre.flops + _epilogue_flops(d, bias, act),
+            bytes_read=base.bytes_read + extra_read,
+            bytes_written=base.bytes_written + extra_written,
+            transactions=base.transactions + pre.transactions + 2)
+    if variant not in ("fused", "fused_partials"):
+        raise ValueError(variant)
+    from repro.kernels.ops import epilogue_time_tile
+
+    flops = 3.0 * path_flops(d) + _epilogue_flops(d, bias, act)  # dx + dk + recompute
+    Hb = min(block_h, d.H)
+    Bc = min(batch_chunk, d.B)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
+    k_bytes = d.H * d.K * itemsize
+    dk_bytes = d.H * d.K * itemsize
+    bias_bytes = d.H * itemsize if bias else 0
+    Lt = epilogue_time_tile(d.L, d.K, block_t, variant)
+    if Lt is None:
+        nT, halo = 1, 0
+    else:
+        nT = cdiv(round_up(d.L, LANE), Lt)
+        halo = d.B * d.H * (nT - 1) * (d.K - 1)
+    # Tiled: x binds prev+cur+next (two haloed seam re-reads) and dy
+    # cur+next (one) — three halo charges vs the trivial kernels' two.
+    halo_bytes = 3 * halo * itemsize
+    in_blocks = (7 if bias else 6) if nT > 1 else (4 if bias else 3)
+    read = slab + 2 * pslab + k_bytes + bias_bytes + halo_bytes
+    written = pslab + slab + dk_bytes + bias_bytes  # dy_pad + dx + dk + dbias
+    tx = nH * nC * nT * in_blocks + 1
+    if variant == "fused_partials":
+        partials = nC * nT * d.H * (round_up(d.K, LANE) + LANE) * 4  # dk + dbias blocks
+        read += partials
+        written += partials
+        tx += nH * nC * nT
+    return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
+
+
+def epilogue_unfused_bwd_traffic(
+    d: DWConvDims,
+    itemsize: int = 4,
+    *,
+    epilogue: str = "none",
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+) -> TrafficEstimate:
+    """Backward traffic of the *unfused composition* under ordinary autodiff
+    (``jax.vjp`` of conv -> bias add -> act): the activation backward reads
+    dy and the saved pre-activation residual and writes the effective
+    gradient, the dbias reduction re-reads it, and the split two-op
+    backward consumes it.  This is the baseline the epilogue gate compares
+    against (the residual's forward-side write is charged by
+    ``epilogue_fwd_traffic(fused=False)``)."""
+    bias, act = parse_epilogue(epilogue)
+    base = bwd_split_traffic(d, itemsize, block_h=block_h, block_t=block_t,
+                             batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L * itemsize
+    # act backward: read dy + read pre residual, write dy_eff (2R + 1W);
+    # dbias reduction (bias only): re-read dy_eff, write the (H,) vector.
+    extra_read = (2 * slab if act != "none" else 0) + (slab if bias else 0)
+    extra_written = (slab if act != "none" else 0) + (d.H * itemsize if bias else 0)
+    return dataclasses.replace(
+        base,
+        flops=base.flops + _epilogue_flops(d, bias, act),
+        bytes_read=base.bytes_read + extra_read,
+        bytes_written=base.bytes_written + extra_written,
+        transactions=base.transactions + _epilogue_n_ops(bias, act))
+
+
+def epilogue_block_traffic(
+    d: DWConvDims,
+    itemsize: int = 4,
+    *,
+    epilogue: str = "bias+silu",
+    fused: bool = True,
+    fwd_variant: str = "row",
+    bwd_variant: str = "fused",
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+) -> TrafficEstimate:
+    """Whole-block (forward + backward) traffic for one conv + epilogue:
+    the quantity the ``paper_epilogue`` gate compares fused vs unfused."""
+    fwd = epilogue_fwd_traffic(d, fwd_variant, itemsize, epilogue=epilogue,
+                               fused=fused, block_h=block_h, block_t=block_t)
+    if fused:
+        bwd = epilogue_bwd_traffic(d, bwd_variant, itemsize, epilogue=epilogue,
+                                   block_h=block_h, block_t=block_t,
+                                   batch_chunk=batch_chunk)
+    else:
+        bwd = epilogue_unfused_bwd_traffic(d, itemsize, epilogue=epilogue,
+                                           block_h=block_h, block_t=block_t,
+                                           batch_chunk=batch_chunk)
+    return TrafficEstimate(
+        flops=fwd.flops + bwd.flops,
+        bytes_read=fwd.bytes_read + bwd.bytes_read,
+        bytes_written=fwd.bytes_written + bwd.bytes_written,
+        transactions=fwd.transactions + bwd.transactions,
+        aligned=fwd.aligned and bwd.aligned,
+        reliable=fwd.reliable and bwd.reliable,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Paper-mode accounting (P100 tables): the paper's §III-G model counts
 # *cache-adjusted* traffic on the GPU — redundant in-flight loads within a
 # warp/block are absorbed by L1/L2 and shared memory, so per-variant traffic

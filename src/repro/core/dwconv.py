@@ -20,6 +20,13 @@ the two independent backward ops (the paper's controlled per-path study),
 cache's ``bwd_fused`` path.  The fwd and bwd VJP rules make this decision
 from identical static arguments, so the saved residual always matches what
 the backward expects.
+
+``dwconv_act(x, k, bias=..., act=...)`` is the fused-epilogue sibling:
+the bias add + activation execute in-register on the forward accumulator,
+and its custom VJP saves only the padded input — the backward *recomputes*
+the pre-activation (K MACs per element) instead of storing it, emitting
+dbias alongside dx/dk.  With the trivial epilogue it IS ``dwconv``,
+bit for bit.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import jax.numpy as jnp
 from repro.core.variant import get_variant
 from repro.kernels import ops, ref
 from repro.kernels.common import Padding
+from repro.kernels.epilogue import ACTS, act_grad, epilogue_key
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -42,7 +50,8 @@ def _dwconv(x, k, padding: Padding, variant: str, opts: ops.KernelOptions):
     return ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts)
 
 
-def _resolve_bwd_fused(spec, opts, *, B, H, L, K, dtype, padding):
+def _resolve_bwd_fused(spec, opts, *, B, H, L, K, dtype, padding,
+                       epilogue: str = "none"):
     """(fused_variant, resolved_opts) or (None, None) for a split backward.
 
     Pure function of static (trace-time) arguments — called identically by
@@ -52,7 +61,8 @@ def _resolve_bwd_fused(spec, opts, *, B, H, L, K, dtype, padding):
         return spec.bwd_fused, (opts if opts is not None else ops.DEFAULT_OPTS)
     if spec.bwd == "auto":
         v, o = ops.resolve_variant("bwd_fused", "auto", opts, B=B, H=H, L=L,
-                                   K=K, dtype=dtype, padding=padding)
+                                   K=K, dtype=dtype, padding=padding,
+                                   epilogue=epilogue)
         # A stale/foreign cache entry naming an unknown fused kernel must
         # degrade to the split backward, never crash the VJP.
         if v in ops.BWD_FUSED_VARIANTS and v != "split":
@@ -121,6 +131,113 @@ def dwconv(
         raise ValueError(f"bad shapes x={x.shape} k={k.shape}")
     # opts=None flows through so variant='auto' can apply cached tiling.
     return _dwconv(x, k, padding, variant, opts)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue operator: y = act(dwconv(x, k) + bias)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _dwconv_act(x, k, bias, padding: Padding, act: str,
+                variant: str, opts: Optional[ops.KernelOptions]):
+    spec = get_variant(variant)
+    if spec.fwd == "xla":
+        return ref.dwconv_act_ref(x, k, bias=bias, act=act, padding=padding)
+    return ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts, bias=bias, act=act)
+
+
+def _dwconv_act_fwd_rule(x, k, bias, padding, act, variant, opts):
+    spec = get_variant(variant)
+    B, H, L = x.shape
+    K = k.shape[-1]
+    epi = epilogue_key(bias is not None, act)
+    fused_v, _ = _resolve_bwd_fused(spec, opts, B=B, H=H, L=L, K=K,
+                                    dtype=x.dtype, padding=padding, epilogue=epi)
+    if fused_v is None:
+        return _dwconv_act(x, k, bias, padding, act, variant, opts), (x, k, bias)
+    # Fused epilogue backward: the residual is the forward's unified-Wpad
+    # padded *input* — never the pre-activation, which the backward kernels
+    # recompute in-register (K MACs vs a full-tensor residual round-trip).
+    y, xp = ops.dwconv_fwd_op_res(x, k, padding, spec.fwd, opts,
+                                  bias=bias, act=act)
+    return y, (xp if xp is not None else x, k, bias)
+
+
+def _dwconv_act_bwd_rule(padding, act, variant, opts, res, dy):
+    xr, k, bias = res
+    spec = get_variant(variant)
+    K = k.shape[-1]
+    B, H, L = dy.shape
+    epi = epilogue_key(bias is not None, act)
+    fused_v, fused_opts = _resolve_bwd_fused(spec, opts, B=B, H=H, L=L, K=K,
+                                             dtype=xr.dtype, padding=padding,
+                                             epilogue=epi)
+    if fused_v is not None:
+        fwd_v, _ = ops.resolve_variant("fwd", spec.fwd, opts, B=B, H=H, L=L,
+                                       K=K, dtype=xr.dtype, padding=padding,
+                                       epilogue=epi)
+        xp_saved = fwd_v != "xla"  # Pallas forwards saved the padded buffer
+        dx, dk, dbias = ops.dwconv_bwd_fused_act_op(
+            None if xp_saved else xr, dy, k, bias, padding, fused_v,
+            fused_opts, act=act, xp=xr if xp_saved else None)
+        return (dx.astype(xr.dtype), dk.astype(k.dtype),
+                None if bias is None else dbias.astype(bias.dtype))
+    # Split / reference backward: recompute the pre-activation (one
+    # standalone conv + bias pass — still no stored residual), form the
+    # effective gradient, and feed the ordinary per-path backward ops.
+    x = xr
+    if spec.fwd == "xla":
+        pre = ref.dwconv_act_ref(x, k, bias=bias, act="none", padding=padding)
+    else:
+        pre = ops.dwconv_fwd_op(x, k, padding, spec.fwd, opts, bias=bias)
+    dy_eff32 = dy.astype(jnp.float32) * act_grad(pre.astype(jnp.float32), act)
+    dy_eff = dy_eff32.astype(dy.dtype)
+    if spec.bwd_in == "xla":
+        dx = ref.dwconv_bwd_input_ref(dy_eff, k, padding)
+    else:
+        dx = ops.dwconv_bwd_input_op(dy_eff, k, padding, spec.bwd_in, opts)
+    if spec.bwd_k == "xla":
+        dk = ref.dwconv_bwd_kernel_ref(x, dy_eff, K, padding)
+    else:
+        dk = ops.dwconv_bwd_kernel_op(x, dy_eff, K, padding, spec.bwd_k, opts)
+    dbias = None if bias is None else jnp.sum(dy_eff32, axis=(0, 2)).astype(bias.dtype)
+    return dx.astype(x.dtype), dk.astype(k.dtype), dbias
+
+
+_dwconv_act.defvjp(_dwconv_act_fwd_rule, _dwconv_act_bwd_rule)
+
+
+def dwconv_act(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    act: str = "none",
+    padding: Padding = "same",
+    variant: str = "xla",
+    opts: Optional[ops.KernelOptions] = None,
+) -> jnp.ndarray:
+    """Depthwise conv with a fused epilogue: ``act(dwconv(x, k) + bias)``.
+
+    x: (B, H, L); k: (H, K); bias: per-channel (H,) or ``None``;
+    ``act`` in ``("none", "gelu", "silu")``.  The epilogue executes on the
+    f32 accumulator inside the forward kernel (one HBM write, one rounding
+    step); the custom VJP saves only the padded input and *recomputes* the
+    pre-activation in the backward, emitting dbias alongside dx/dk.  With
+    the trivial epilogue (no bias, ``act="none"``) this is exactly
+    :func:`dwconv` — bit for bit, preserving the paper's controlled study.
+    """
+    if x.ndim != 3 or k.ndim != 2 or x.shape[1] != k.shape[0]:
+        raise ValueError(f"bad shapes x={x.shape} k={k.shape}")
+    if act not in ACTS:
+        raise ValueError(f"unknown act {act!r}; known: {ACTS}")
+    if bias is not None and bias.shape != (x.shape[1],):
+        raise ValueError(
+            f"bias must be per-channel ({x.shape[1]},), got {bias.shape}")
+    if bias is None and act == "none":
+        return _dwconv(x, k, padding, variant, opts)  # bit-identical fast path
+    return _dwconv_act(x, k, bias, padding, act, variant, opts)
 
 
 # Convenience aliases used by the operator-study benchmarks: run a single

@@ -10,8 +10,9 @@ kernel implementation variant is fixed (paper §III-B):
 
   input (B, L=48, F=4) -> Linear(F -> H=128) -> n x S4ConvDBlock -> head
 
-  S4ConvDBlock(x): u = dwconv(x, k_ssm(theta))    # the studied operator
-                   u = GELU(u)
+  S4ConvDBlock(x): u = dwconv_act(x, k_ssm(theta), act="gelu")
+                   # the studied operator with its GELU fused in-register
+                   # (one HBM write; activation recomputed in backward)
                    u = channelwise Linear(H -> H) + dropout(0.01)
                    x = x + u                      # residual
 
@@ -27,7 +28,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.dwconv import dwconv
+from repro.core.dwconv import dwconv_act
 from repro.kernels.ops import KernelOptions
 
 
@@ -125,11 +126,12 @@ def apply(
     h = jnp.transpose(h, (0, 2, 1))                       # (B, H, L) — operator layout
     for i, bp in enumerate(params["blocks"]):
         k = materialize_kernel(bp, cfg.K)
-        u = dwconv(
-            h, k.astype(h.dtype),
+        # Fused GELU epilogue: applied in-register on the conv accumulator
+        # (one HBM write); the backward recomputes the pre-activation.
+        u = dwconv_act(
+            h, k.astype(h.dtype), act="gelu",
             padding=cfg.padding, variant=cfg.conv_variant, opts=cfg.kernel_opts,
         )
-        u = jax.nn.gelu(u)
         u = jnp.einsum("bhl,hg->bgl", u, bp["w_out"]) + bp["b_out"][None, :, None]
         if train and cfg.dropout > 0 and rng is not None:
             keep = 1.0 - cfg.dropout

@@ -60,11 +60,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import LANE
 from repro.kernels.dwconv_bwdk import (
     _check_chunking,
     _check_tiled_layout,
     _taps_from_slabs,
 )
+from repro.kernels.epilogue import act_grad
 
 
 def _dx_from_slab(dy32: jnp.ndarray, kv: jnp.ndarray, K: int, Lout: int) -> jnp.ndarray:
@@ -309,3 +311,331 @@ def dwconv_bwd_fused_partials(
         interpret=interpret,
     )(xp, dyp, kp)
     return dx, jnp.sum(partials, axis=0)  # second reduction stage
+
+
+# ---------------------------------------------------------------------------
+# Epilogue-aware fused backward: activation-recompute, dbias emission.
+#
+# When the forward fused a bias + activation epilogue (y = act(conv + b)),
+# the backward needs dy_eff = dy * act'(pre) where pre = conv(x_pad, k) + b.
+# These kernels *recompute* pre from the already-staged x slab — K extra
+# MACs per element, from VMEM — instead of reading a saved pre-activation
+# residual (a full-tensor HBM round-trip in each direction).  dy_eff is
+# formed in-register in f32 and fed to the exact same dx/dk reductions as
+# the trivial kernels; dbias = sum_{b,t} dy_eff rides the same revisited-
+# block (accum) / HBM-partials (partials) machinery as dk, as an (H, LANE)
+# column block.
+#
+# Geometry notes vs the trivial kernels:
+#   * untiled: the staged window already covers every recompute read — the
+#     adjoint dy slab positions v map to forward positions v - off_dk, and
+#     wherever that leaves [0, Lout) the dy padding is zero, so the
+#     out-of-range derivative values are multiplied away.
+#   * tiled: pre must be recomputed for the *extended* window
+#     [t*Lt - off_dk, t*Lt + Lt + K - 1 - off_dk), which reaches into the
+#     neighbouring tiles' outputs on both sides.  The x slab therefore
+#     binds THREE consecutive tiles (prev + cur + next; prev clamped to
+#     tile 0 at t=0, where the mis-read region multiplies dy's zero left
+#     padding) and requires ``Lt >= 2 * (K - 1)`` — enforced by
+#     ``ops.epilogue_time_tile``, which otherwise falls back untiled.
+# ---------------------------------------------------------------------------
+
+
+def _pre_from_slab(x32: jnp.ndarray, kv: jnp.ndarray, K: int, n: int) -> jnp.ndarray:
+    """(Bc, Hb, >=n+K-1) x slab -> forward conv recompute over n positions, f32."""
+    acc = jnp.zeros(x32.shape[:2] + (n,), jnp.float32)
+    for j in range(K):  # static unroll: the K recompute MACs, all from VMEM
+        acc = acc + x32[:, :, j : j + n] * kv[:, j][None, :, None]
+    return acc
+
+
+def _bias_partial(dy_win: jnp.ndarray) -> jnp.ndarray:
+    """(Bc, Hb, L) effective gradient window -> (Hb, LANE) dbias partial
+    (value in column 0, zero elsewhere — the dk-partials block layout)."""
+    s = jnp.sum(dy_win, axis=(0, 2))[:, None]
+    return jnp.pad(s, ((0, 0), (0, LANE - 1)))
+
+
+def _epi_grads_untiled(x32, dy32, kv, b_ref, K, Kp, Lout, off_dk, act):
+    """Shared body: recompute pre, form dy_eff, emit (dx, dk_part, db_part)."""
+    pre = _pre_from_slab(x32, kv, K, Lout)
+    if b_ref is not None:
+        pre = pre + b_ref[:, 0].astype(jnp.float32)[None, :, None]
+    dy_win = dy32[:, :, off_dk : off_dk + Lout] * act_grad(pre, act)
+    lead = dy32.shape[:2]
+    W = dy32.shape[-1]
+    # dy_eff in the adjoint slab layout: outside the forward-aligned window
+    # the true dy padding is zero, so dy_eff is exactly zero there too.
+    dy_eff = jnp.concatenate(
+        [jnp.zeros(lead + (off_dk,), jnp.float32), dy_win,
+         jnp.zeros(lead + (W - off_dk - Lout,), jnp.float32)], axis=-1)
+    dx = _dx_from_slab(dy_eff, kv, K, Lout)
+    return dx, _taps_from_slabs(x32, dy_win, K, Kp), _bias_partial(dy_win)
+
+
+def _epi_grads_tiled(x3, dy2, kv, b_ref, K, Kp, Lt, off_dk, act):
+    """Tiled shared body.  x3: (Bc, Hb, 3*Lt) prev+cur+next slab; dy2:
+    (Bc, Hb, 2*Lt) cur+next slab.  Requires Lt >= 2*(K-1)."""
+    n = Lt + K - 1
+    # pre over the extended window [t*Lt - off_dk, t*Lt + Lt + K - 1 - off_dk):
+    # base offset Lt - off_dk into the 3-tile slab (the prev tile serves the
+    # left reach, the next tile the right reach).
+    pre = _pre_from_slab(x3[:, :, Lt - off_dk :], kv, K, n)
+    if b_ref is not None:
+        pre = pre + b_ref[:, 0].astype(jnp.float32)[None, :, None]
+    dy_eff = dy2[:, :, :n] * act_grad(pre, act)
+    dx = _dx_from_slab(dy_eff, kv, K, Lt)
+    dy_win = dy_eff[:, :, off_dk : off_dk + Lt]
+    # dk taps read x at the tile-aligned offset (one tile into the slab).
+    return dx, _taps_from_slabs(x3[:, :, Lt:], dy_win, K, Kp), _bias_partial(dy_win)
+
+
+def _check_epi_tile(Lt: int, K: int) -> None:
+    if Lt < 2 * (K - 1):
+        raise ValueError(
+            f"epilogue time tile block_t={Lt} cannot hold the extended "
+            f"recompute window (needs Lt >= 2*(K-1)={2 * (K - 1)}); "
+            f"ops.epilogue_time_tile must fall back to the untiled kernel")
+
+
+def _fused_accum_epi_kernel(*refs, K, Kp, Lout, off_dk, act, has_bias):
+    if has_bias:
+        x_ref, dy_ref, k_ref, b_ref = refs[:4]
+        dx_ref, dk_ref, db_ref = refs[4:]
+    else:
+        (x_ref, dy_ref, k_ref), b_ref = refs[:3], None
+        dx_ref, dk_ref, db_ref = refs[3:]
+    c = pl.program_id(1)  # batch-chunk index — innermost, sequential
+
+    @pl.when(c == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    dx, dk_part, db_part = _epi_grads_untiled(
+        x_ref[...].astype(jnp.float32), dy_ref[...].astype(jnp.float32),
+        k_ref[...].astype(jnp.float32), b_ref, K, Kp, Lout, off_dk, act)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dk_ref[...] += dk_part.astype(dk_ref.dtype)
+    db_ref[...] += db_part.astype(db_ref.dtype)
+
+
+def _fused_accum_epi_tiled_kernel(*refs, K, Kp, Lt, off_dk, act, has_bias):
+    xp_, xc_, xn_, dyc_, dyn_, k_ref = refs[:6]
+    b_ref = refs[6] if has_bias else None
+    dx_ref, dk_ref, db_ref = refs[6 + (1 if has_bias else 0):]
+    c = pl.program_id(1)  # batch-chunk index — sequential
+    t = pl.program_id(2)  # time-tile index — innermost, sequential
+
+    @pl.when(jnp.logical_and(c == 0, t == 0))
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    x3 = jnp.concatenate([xp_[...], xc_[...], xn_[...]], axis=-1).astype(jnp.float32)
+    dy2 = jnp.concatenate([dyc_[...], dyn_[...]], axis=-1).astype(jnp.float32)
+    dx, dk_part, db_part = _epi_grads_tiled(
+        x3, dy2, k_ref[...].astype(jnp.float32), b_ref, K, Kp, Lt, off_dk, act)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dk_ref[...] += dk_part.astype(dk_ref.dtype)
+    db_ref[...] += db_part.astype(db_ref.dtype)
+
+
+def _fused_partials_epi_kernel(*refs, K, Kp, Lout, off_dk, act, has_bias):
+    if has_bias:
+        x_ref, dy_ref, k_ref, b_ref = refs[:4]
+        dx_ref, part_ref, bpart_ref = refs[4:]
+    else:
+        (x_ref, dy_ref, k_ref), b_ref = refs[:3], None
+        dx_ref, part_ref, bpart_ref = refs[3:]
+    dx, dk_part, db_part = _epi_grads_untiled(
+        x_ref[...].astype(jnp.float32), dy_ref[...].astype(jnp.float32),
+        k_ref[...].astype(jnp.float32), b_ref, K, Kp, Lout, off_dk, act)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    part_ref[0] = dk_part
+    bpart_ref[0] = db_part
+
+
+def _fused_partials_epi_tiled_kernel(*refs, K, Kp, Lt, off_dk, act, has_bias):
+    xp_, xc_, xn_, dyc_, dyn_, k_ref = refs[:6]
+    b_ref = refs[6] if has_bias else None
+    dx_ref, part_ref, bpart_ref = refs[6 + (1 if has_bias else 0):]
+    x3 = jnp.concatenate([xp_[...], xc_[...], xn_[...]], axis=-1).astype(jnp.float32)
+    dy2 = jnp.concatenate([dyc_[...], dyn_[...]], axis=-1).astype(jnp.float32)
+    dx, dk_part, db_part = _epi_grads_tiled(
+        x3, dy2, k_ref[...].astype(jnp.float32), b_ref, K, Kp, Lt, off_dk, act)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    part_ref[0, 0] = dk_part
+    bpart_ref[0, 0] = db_part
+
+
+def _epi_tiled_in_specs(Bc: int, Hb: int, Lt: int, Kp: int, has_bias: bool):
+    """x prev+cur+next (prev clamped at t=0), dy cur+next, filters, bias."""
+    specs = [
+        pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, jnp.maximum(t - 1, 0))),
+        pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+        pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+        pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+        pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t + 1)),
+        pl.BlockSpec((Hb, Kp), lambda h, c, t: (h, 0)),
+    ]
+    if has_bias:
+        specs.append(pl.BlockSpec((Hb, LANE), lambda h, c, t: (h, 0)))
+    return specs
+
+
+def dwconv_bwd_fused_accum_act(
+    xp: jnp.ndarray,
+    dyp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    off_dk: int,
+    block_w: int,
+    bias=None,
+    act: str = "none",
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    block_t: Optional[int] = None,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Epilogue-aware single pass -> (dx, dk (H, Kp) f32, dbias (H, LANE) f32)."""
+    B, H, Wx = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    _check_chunking(B, Bc, H, Hb)
+    has_bias = bias is not None
+    if block_t is not None and block_t < Lout:
+        Lt = block_t
+        _check_epi_tile(Lt, K)
+        nT = _tiled_geometry(xp, dyp, Lt, K)
+        grid = (H // Hb, B // Bc, nT)
+        operands = [xp, xp, xp, dyp, dyp, kp] + ([bias] if has_bias else [])
+        return pl.pallas_call(
+            functools.partial(
+                _fused_accum_epi_tiled_kernel, K=K, Kp=Kp, Lt=Lt,
+                off_dk=off_dk, act=act, has_bias=has_bias),
+            out_shape=[
+                jax.ShapeDtypeStruct((B, H, nT * Lt), dyp.dtype),
+                jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+                jax.ShapeDtypeStruct((H, LANE), jnp.float32),
+            ],
+            grid=grid,
+            in_specs=_epi_tiled_in_specs(Bc, Hb, Lt, Kp, has_bias),
+            out_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((Hb, Kp), lambda h, c, t: (h, 0)),
+                pl.BlockSpec((Hb, LANE), lambda h, c, t: (h, 0)),
+            ],
+            interpret=interpret,
+        )(*operands)
+    _check_untiled_window(Wx, dyp.shape[-1], block_w, Lout, K, off_dk)
+    grid = (H // Hb, B // Bc)
+    in_specs = [
+        pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+        pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+        pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+    ]
+    operands = [xp, dyp, kp]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((Hb, LANE), lambda h, c: (h, 0)))
+        operands.append(bias)
+    return pl.pallas_call(
+        functools.partial(_fused_accum_epi_kernel, K=K, Kp=Kp, Lout=Lout,
+                          off_dk=off_dk, act=act, has_bias=has_bias),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Lout), dyp.dtype),
+            jax.ShapeDtypeStruct((H, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((H, LANE), jnp.float32),
+        ],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((Bc, Hb, Lout), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+            pl.BlockSpec((Hb, LANE), lambda h, c: (h, 0)),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+def dwconv_bwd_fused_partials_act(
+    xp: jnp.ndarray,
+    dyp: jnp.ndarray,
+    kp: jnp.ndarray,
+    *,
+    K: int,
+    Lout: int,
+    off_dk: int,
+    block_w: int,
+    bias=None,
+    act: str = "none",
+    block_h: int = 8,
+    batch_chunk: int = 128,
+    block_t: Optional[int] = None,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Epilogue-aware staged pass with HBM dk *and* dbias partials."""
+    B, H, Wx = xp.shape
+    _, Kp = kp.shape
+    Hb = min(block_h, H)
+    Bc = min(batch_chunk, B)
+    _check_chunking(B, Bc, H, Hb)
+    nC = B // Bc
+    has_bias = bias is not None
+    if block_t is not None and block_t < Lout:
+        Lt = block_t
+        _check_epi_tile(Lt, K)
+        nT = _tiled_geometry(xp, dyp, Lt, K)
+        grid = (H // Hb, nC, nT)
+        operands = [xp, xp, xp, dyp, dyp, kp] + ([bias] if has_bias else [])
+        dx, partials, bpartials = pl.pallas_call(
+            functools.partial(
+                _fused_partials_epi_tiled_kernel, K=K, Kp=Kp, Lt=Lt,
+                off_dk=off_dk, act=act, has_bias=has_bias),
+            out_shape=[
+                jax.ShapeDtypeStruct((B, H, nT * Lt), dyp.dtype),
+                jax.ShapeDtypeStruct((nC, nT, H, Kp), jnp.float32),
+                jax.ShapeDtypeStruct((nC, nT, H, LANE), jnp.float32),
+            ],
+            grid=grid,
+            in_specs=_epi_tiled_in_specs(Bc, Hb, Lt, Kp, has_bias),
+            out_specs=[
+                pl.BlockSpec((Bc, Hb, Lt), lambda h, c, t: (c, h, t)),
+                pl.BlockSpec((1, 1, Hb, Kp), lambda h, c, t: (c, t, h, 0)),
+                pl.BlockSpec((1, 1, Hb, LANE), lambda h, c, t: (c, t, h, 0)),
+            ],
+            interpret=interpret,
+        )(*operands)
+        return dx, jnp.sum(partials, axis=(0, 1)), jnp.sum(bpartials, axis=(0, 1))
+    _check_untiled_window(Wx, dyp.shape[-1], block_w, Lout, K, off_dk)
+    grid = (H // Hb, nC)
+    in_specs = [
+        pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+        pl.BlockSpec((Bc, Hb, block_w), lambda h, c: (c, h, 0)),
+        pl.BlockSpec((Hb, Kp), lambda h, c: (h, 0)),
+    ]
+    operands = [xp, dyp, kp]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((Hb, LANE), lambda h, c: (h, 0)))
+        operands.append(bias)
+    dx, partials, bpartials = pl.pallas_call(
+        functools.partial(_fused_partials_epi_kernel, K=K, Kp=Kp, Lout=Lout,
+                          off_dk=off_dk, act=act, has_bias=has_bias),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Lout), dyp.dtype),
+            jax.ShapeDtypeStruct((nC, H, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((nC, H, LANE), jnp.float32),
+        ],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((Bc, Hb, Lout), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((1, Hb, Kp), lambda h, c: (c, h, 0)),
+            pl.BlockSpec((1, Hb, LANE), lambda h, c: (c, h, 0)),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return dx, jnp.sum(partials, axis=0), jnp.sum(bpartials, axis=0)

@@ -24,6 +24,15 @@ All kernels consume an input that ``ops.py`` has already zero-padded to
 and produce (B, H, Lout); the wrapper slices back to L.  Accumulation is
 always f32 regardless of the input dtype.
 
+Every variant supports a *fused epilogue* (``kernels/epilogue.py``): an
+optional per-channel bias add plus a pointwise activation applied to the
+f32 accumulator **in-register**, before the single cast + HBM write — the
+call-site composition ``act(conv(x, k) + b)`` with zero standalone
+elementwise passes (and one fewer rounding step than the unfused chain in
+low-precision dtypes).  ``bias`` arrives channel-padded as an (Hp, LANE)
+column block from ``ops.py``; ``bias=None, act="none"`` takes the exact
+pre-epilogue code path, bit for bit.
+
 The *input-gradient* path reuses these kernels with a flipped filter and
 adjoint padding (see ``ops.dwconv_bwd_input``) — exactly the paper's
 observation that FWD and BWD_in share structure and optimization behaviour.
@@ -39,6 +48,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import LANE, cdiv, round_up
+from repro.kernels.epilogue import apply_act
+
+
+def _epilogue(acc: jnp.ndarray, b_ref, act: str) -> jnp.ndarray:
+    """In-register epilogue on the f32 accumulator: per-channel bias (column
+    0 of the (Hb, LANE) bias block) then the activation.  For ``b_ref=None,
+    act='none'`` this is the identity — the trivial path stays bit-identical
+    to the pre-epilogue kernels."""
+    if b_ref is not None:
+        acc = acc + b_ref[:, 0].astype(jnp.float32)[:, None]
+    return apply_act(acc, act)
 
 
 # ---------------------------------------------------------------------------
@@ -46,13 +66,14 @@ from repro.kernels.common import LANE, cdiv, round_up
 # ---------------------------------------------------------------------------
 
 
-def _row_kernel(x_ref, k_ref, y_ref, *, K: int, Lout: int):
+def _row_kernel(x_ref, k_ref, *rest, K: int, Lout: int, act: str):
+    b_ref, y_ref = rest if len(rest) == 2 else (None, rest[0])
     full = x_ref[0].astype(jnp.float32)  # (Hb, Wpad) staged once in VMEM
     kv = k_ref[...].astype(jnp.float32)  # (Hb, Kp)
     acc = jnp.zeros(y_ref.shape[1:], jnp.float32)  # (Hb, Lout)
     for j in range(K):  # static unroll: K fused multiply-adds from VMEM
         acc = acc + full[:, j : j + Lout] * kv[:, j][:, None]
-    y_ref[0] = acc.astype(y_ref.dtype)
+    y_ref[0] = _epilogue(acc, b_ref, act).astype(y_ref.dtype)
 
 
 def dwconv_fwd_row(
@@ -63,6 +84,8 @@ def dwconv_fwd_row(
     Lout: int,
     block_h: int = 8,
     interpret: bool = True,
+    bias=None,
+    act: str = "none",
 ) -> jnp.ndarray:
     """Full-row staging.  xp: (B, H, Wpad), kp: (H, Kp) -> (B, H, Lout)."""
     B, H, Wpad = xp.shape
@@ -73,17 +96,22 @@ def dwconv_fwd_row(
             f"channels H={H} are not divisible by block_h={Hb}; lower "
             f"KernelOptions.block_h or let ops.py pad the channel axis")
     grid = (B, H // Hb)
+    in_specs = [
+        pl.BlockSpec((1, Hb, Wpad), lambda b, h: (b, h, 0)),
+        pl.BlockSpec((Hb, Kp), lambda b, h: (h, 0)),
+    ]
+    operands = [xp, kp]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((Hb, LANE), lambda b, h: (h, 0)))
+        operands.append(bias)
     return pl.pallas_call(
-        functools.partial(_row_kernel, K=K, Lout=Lout),
+        functools.partial(_row_kernel, K=K, Lout=Lout, act=act),
         out_shape=jax.ShapeDtypeStruct((B, H, Lout), xp.dtype),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Hb, Wpad), lambda b, h: (b, h, 0)),
-            pl.BlockSpec((Hb, Kp), lambda b, h: (h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hb, Lout), lambda b, h: (b, h, 0)),
         interpret=interpret,
-    )(xp, kp)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +119,8 @@ def dwconv_fwd_row(
 # ---------------------------------------------------------------------------
 
 
-def _block_kernel(xc_ref, xn_ref, k_ref, y_ref, *, K: int, Lt: int):
+def _block_kernel(xc_ref, xn_ref, k_ref, *rest, K: int, Lt: int, act: str):
+    b_ref, y_ref = rest if len(rest) == 2 else (None, rest[0])
     cur = xc_ref[0].astype(jnp.float32)  # (Hb, Lt) current tile
     nxt = xn_ref[0].astype(jnp.float32)  # (Hb, Lt) halo tile
     full = jnp.concatenate([cur, nxt], axis=-1)  # extended tile, TPB + halo
@@ -99,7 +128,7 @@ def _block_kernel(xc_ref, xn_ref, k_ref, y_ref, *, K: int, Lt: int):
     acc = jnp.zeros(y_ref.shape[1:], jnp.float32)
     for j in range(K):
         acc = acc + full[:, j : j + Lt] * kv[:, j][:, None]
-    y_ref[0] = acc.astype(y_ref.dtype)
+    y_ref[0] = _epilogue(acc, b_ref, act).astype(y_ref.dtype)
 
 
 def dwconv_fwd_block(
@@ -111,6 +140,8 @@ def dwconv_fwd_block(
     block_h: int = 8,
     block_t: int = 512,
     interpret: bool = True,
+    bias=None,
+    act: str = "none",
 ) -> jnp.ndarray:
     """Halo-tile staging.  Requires Wpad >= (nT + 1) * Lt (ops.py pads)."""
     B, H, Wpad = xp.shape
@@ -132,18 +163,23 @@ def dwconv_fwd_block(
             f"neighbour-tile halo read runs out of bounds; ops.py must pad "
             f"x to (nT+1)*block_t columns")
     grid = (B, H // Hb, nT)
+    in_specs = [
+        pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
+        pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i + 1)),
+        pl.BlockSpec((Hb, Kp), lambda b, h, i: (h, 0)),
+    ]
+    operands = [xp, xp, kp]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((Hb, LANE), lambda b, h, i: (h, 0)))
+        operands.append(bias)
     return pl.pallas_call(
-        functools.partial(_block_kernel, K=K, Lt=Lt),
+        functools.partial(_block_kernel, K=K, Lt=Lt, act=act),
         out_shape=jax.ShapeDtypeStruct((B, H, nT * Lt), xp.dtype),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
-            pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i + 1)),
-            pl.BlockSpec((Hb, Kp), lambda b, h, i: (h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
         interpret=interpret,
-    )(xp, xp, kp)[:, :, :Lout]
+    )(*operands)[:, :, :Lout]
 
 
 # ---------------------------------------------------------------------------
@@ -154,14 +190,12 @@ def dwconv_fwd_block(
 def _tapdma_kernel(
     x_hbm,
     k_ref,
-    y_ref,
-    scratch,
-    sem,
-    *,
+    *rest,
     K: int,
     Lt: int,
     Hb: int,
     aligned: bool,
+    act: str,
 ):
     """Per-tap DMA kernel.  ``aligned=False`` -> naive (K unaligned copies of
     exactly the tap window); ``aligned=True`` -> lane (K copies widened to a
@@ -172,6 +206,7 @@ def _tapdma_kernel(
     lane-aligned and the aligned variant's in-scratch offset ``j % LANE`` is
     a static Python int.
     """
+    b_ref, y_ref, scratch, sem = rest if len(rest) == 4 else (None,) + rest
     b = pl.program_id(0)
     h = pl.program_id(1)
     i = pl.program_id(2)
@@ -193,7 +228,7 @@ def _tapdma_kernel(
         copy.wait()
         win = scratch[:, off : off + Lt].astype(jnp.float32)
         acc = acc + win * kv[:, j][:, None]
-    y_ref[0] = acc.astype(y_ref.dtype)
+    y_ref[0] = _epilogue(acc, b_ref, act).astype(y_ref.dtype)
 
 
 def _dwconv_fwd_tapdma(
@@ -206,6 +241,8 @@ def _dwconv_fwd_tapdma(
     block_t: int,
     aligned: bool,
     interpret: bool,
+    bias=None,
+    act: str = "none",
 ) -> jnp.ndarray:
     B, H, Wpad = xp.shape
     _, Kp = kp.shape
@@ -228,32 +265,39 @@ def _dwconv_fwd_tapdma(
             f"windows (nT={nT}, Lt={Lt}, K={K}, aligned={aligned}); ops.py "
             f"must pad x to the widened window")
     grid = (B, H // Hb, nT)
+    in_specs = [
+        pl.BlockSpec(memory_space=pl.ANY),  # stays in HBM; DMA'd per tap
+        pl.BlockSpec((Hb, Kp), lambda b, h, i: (h, 0)),
+    ]
+    operands = [xp, kp]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((Hb, LANE), lambda b, h, i: (h, 0)))
+        operands.append(bias)
     return pl.pallas_call(
-        functools.partial(_tapdma_kernel, K=K, Lt=Lt, Hb=Hb, aligned=aligned),
+        functools.partial(_tapdma_kernel, K=K, Lt=Lt, Hb=Hb, aligned=aligned, act=act),
         out_shape=jax.ShapeDtypeStruct((B, H, nT * Lt), xp.dtype),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # stays in HBM; DMA'd per tap
-            pl.BlockSpec((Hb, Kp), lambda b, h, i: (h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hb, Lt), lambda b, h, i: (b, h, i)),
         scratch_shapes=[
             pltpu.VMEM((Hb, scratch_w), xp.dtype),
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,
-    )(xp, kp)[:, :, :Lout]
+    )(*operands)[:, :, :Lout]
 
 
-def dwconv_fwd_naive(xp, kp, *, K, Lout, block_h=8, block_t=512, interpret=True):
+def dwconv_fwd_naive(xp, kp, *, K, Lout, block_h=8, block_t=512, interpret=True,
+                     bias=None, act="none"):
     return _dwconv_fwd_tapdma(
         xp, kp, K=K, Lout=Lout, block_h=block_h, block_t=block_t,
-        aligned=False, interpret=interpret,
+        aligned=False, interpret=interpret, bias=bias, act=act,
     )
 
 
-def dwconv_fwd_lane(xp, kp, *, K, Lout, block_h=8, block_t=512, interpret=True):
+def dwconv_fwd_lane(xp, kp, *, K, Lout, block_h=8, block_t=512, interpret=True,
+                    bias=None, act="none"):
     return _dwconv_fwd_tapdma(
         xp, kp, K=K, Lout=Lout, block_h=block_h, block_t=block_t,
-        aligned=True, interpret=interpret,
+        aligned=True, interpret=interpret, bias=bias, act=act,
     )

@@ -1,0 +1,100 @@
+"""Shared epilogue definitions for the fused-epilogue kernel family.
+
+Every model-level call site of the depthwise conv bolts the same two or
+three elementwise ops onto it: an optional per-channel bias add and a
+pointwise activation (GELU in the S4ConvD block, SiLU in the Mamba-2
+block).  Run standalone, each op is a full-tensor HBM round-trip in both
+the forward and the backward pass — on a memory-bound operator that
+roughly doubles the per-block traffic the conv kernels worked to remove.
+
+This module is the single source of truth for what an *epilogue* is:
+
+  * the activation table (value + analytic derivative, both evaluated in
+    f32 — the fused kernels apply them to the f32 accumulator *before*
+    the single cast to the output dtype);
+  * the canonical epilogue key strings (``"none"``, ``"gelu"``,
+    ``"bias+silu"``, ...) used by the tuning cache's epilogue-aware
+    ``fwd`` / ``bwd_fused`` shape keys.
+
+The GELU is the tanh approximation (``jax.nn.gelu(approximate=True)``,
+the model default) so the fused epilogue is interchangeable with the
+unfused call sites it replaces; SiLU is exact.  ``act="none"`` is the
+identity on both value and derivative, which is what keeps the trivial
+epilogue bit-identical to the pre-epilogue kernels.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACTS = ("none", "gelu", "silu")
+
+_GELU_C = 0.7978845608028654  # sqrt(2 / pi)
+_GELU_A = 0.044715
+
+
+def _check_act(act: str) -> None:
+    if act not in ACTS:
+        raise ValueError(f"unknown epilogue activation {act!r}; known: {ACTS}")
+
+
+def apply_act(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """act(x), evaluated in x's dtype (the kernels pass the f32 accumulator)."""
+    _check_act(act)
+    if act == "none":
+        return x
+    if act == "gelu":
+        inner = _GELU_C * (x + _GELU_A * x * x * x)
+        return 0.5 * x * (1.0 + jnp.tanh(inner))
+    s = jax.nn.sigmoid(x)
+    return x * s
+
+
+def act_grad(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """d act / dx at x — the analytic derivative the backward kernels apply
+    to the *recomputed* pre-activation (no residual is ever saved)."""
+    _check_act(act)
+    if act == "none":
+        return jnp.ones_like(x)
+    if act == "gelu":
+        x2 = x * x
+        inner = _GELU_C * (x + _GELU_A * x * x2)
+        t = jnp.tanh(inner)
+        sech2 = 1.0 - t * t
+        return 0.5 * (1.0 + t) + 0.5 * x * sech2 * _GELU_C * (1.0 + 3.0 * _GELU_A * x2)
+    s = jax.nn.sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+# ---------------------------------------------------------------------------
+# epilogue key strings (tuning-cache identity component)
+# ---------------------------------------------------------------------------
+
+
+def epilogue_key(bias: bool, act: str) -> str:
+    """Canonical key: 'none' | 'bias' | '<act>' | 'bias+<act>'."""
+    _check_act(act)
+    if not bias:
+        return act
+    return "bias" if act == "none" else f"bias+{act}"
+
+
+def parse_epilogue(key: str) -> Tuple[bool, str]:
+    """Inverse of :func:`epilogue_key` -> (has_bias, act)."""
+    bias = key == "bias" or key.startswith("bias+")
+    act = "none" if key == "bias" else (key[len("bias+"):] if bias else key)
+    _check_act(act)
+    return bias, act
+
+
+EPILOGUE_KEYS = tuple(
+    epilogue_key(b, a) for b in (False, True) for a in ACTS
+)
+
+
+def is_trivial(bias, act: str) -> bool:
+    """True when the epilogue is the identity (no bias tensor, act='none')."""
+    _check_act(act)
+    return bias is None and act == "none"

@@ -42,6 +42,7 @@ from repro.kernels.common import (
     pad_widths,
     round_up,
 )
+from repro.kernels.epilogue import act_grad, epilogue_key, is_trivial
 
 FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
 BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
@@ -85,12 +86,16 @@ def resolve_variant(
     K: int,
     dtype,
     padding: Padding = "same",
+    epilogue: str = "none",
 ) -> Tuple[str, KernelOptions]:
     """Resolve ``variant="auto"`` / ``opts=None`` through the tuning cache.
 
     Explicit ``opts`` always wins over cached tiling (the caller asked for
     it); a cached entry decides the variant and, absent explicit opts, the
     tiling; with no cache entry the pre-autotuner defaults apply.
+    ``epilogue`` is part of the cached identity on the ``fwd`` and
+    ``bwd_fused`` paths: a fused bias+activation changes both the kernel
+    body and the candidate ordering, so epilogue problems tune separately.
     """
     if variant != "auto":
         return variant, (opts if opts is not None else DEFAULT_OPTS)
@@ -100,7 +105,7 @@ def resolve_variant(
     entry = _tuning_cache.lookup(
         path=path, B=B, H=H, L=L, K=K,
         dtype=jnp.dtype(dtype).name, backend=jax.default_backend(),
-        padding=padding,
+        padding=padding, epilogue=epilogue,
     )
     if entry is None:
         return AUTO_FALLBACK[path], (opts if opts is not None else DEFAULT_OPTS)
@@ -137,6 +142,16 @@ def _pad_kernel_lanes(k: jnp.ndarray, K: int) -> jnp.ndarray:
     return jnp.pad(k, ((0, 0), (0, Kp - K))) if Kp > K else k
 
 
+def _prep_bias(bias: Optional[jnp.ndarray], Hp: int) -> Optional[jnp.ndarray]:
+    """(H,) per-channel bias -> channel-padded (Hp, LANE) column block (value
+    in column 0) — the layout the epilogue kernels bind per h-block."""
+    if bias is None:
+        return None
+    if bias.ndim != 1:
+        raise ValueError(f"epilogue bias must be per-channel (H,), got {bias.shape}")
+    return jnp.pad(bias[:, None], ((0, Hp - bias.shape[0]), (0, LANE - 1)))
+
+
 def bwd_fused_wpad(L: int, K: int) -> int:
     """Staged-window width the fused backward kernels read: one padded
     layout covering both the dx taps and the dk reduction."""
@@ -166,6 +181,8 @@ def _fwd_impl(
     variant: str,
     opts: KernelOptions,
     return_padded: bool = False,
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
 ):
     B, H, L = x.shape
     _, K = k.shape
@@ -177,8 +194,9 @@ def _fwd_impl(
     xp = jnp.pad(x, ((0, 0), (0, 0), (p_left, Wpad - L - p_left)))
     xp = _pad_channels(xp, H, Hb, axis=1)
     kp = _pad_channels(_pad_kernel_lanes(k, K), H, Hb, axis=0)
+    bp = _prep_bias(bias, kp.shape[0])
 
-    kw = dict(K=K, Lout=Lout, block_h=Hb, interpret=interpret)
+    kw = dict(K=K, Lout=Lout, block_h=Hb, interpret=interpret, bias=bp, act=act)
     if variant == "row":
         y = dwconv_fwd.dwconv_fwd_row(xp, kp, **kw)
     elif variant == "block":
@@ -199,17 +217,25 @@ def dwconv_fwd_op(
     padding: Padding = "same",
     variant: str = "row",
     opts: Optional[KernelOptions] = None,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
 ) -> jnp.ndarray:
-    """y[b,h,t] = sum_j x_pad[b,h,t+j] k[h,j].  ``variant="auto"`` dispatches
-    the tuned (variant, tiling) for this shape; ``"xla"`` runs the reference."""
+    """y[b,h,t] = act(sum_j x_pad[b,h,t+j] k[h,j] + bias[h]).  The epilogue
+    (``bias``/``act``) is applied in-register on the f32 accumulator before
+    the single cast + write; with the default trivial epilogue this is
+    bit-identical to the pre-epilogue kernels.  ``variant="auto"``
+    dispatches the tuned (variant, tiling) for this (shape, epilogue);
+    ``"xla"`` runs the reference."""
     B, H, L = x.shape
     K = k.shape[-1]
-    variant, opts = resolve_variant("fwd", variant, opts, B=B, H=H, L=L, K=K,
-                                    dtype=x.dtype, padding=padding)
+    variant, opts = resolve_variant(
+        "fwd", variant, opts, B=B, H=H, L=L, K=K, dtype=x.dtype,
+        padding=padding, epilogue=epilogue_key(bias is not None, act))
     if variant == "xla":
-        return ref.dwconv_fwd_ref(x, k, padding)
+        return ref.dwconv_act_ref(x, k, bias=bias, act=act, padding=padding)
     p_left, _ = pad_widths(K, padding)
-    return _fwd_impl(x, k, p_left, variant, opts)
+    return _fwd_impl(x, k, p_left, variant, opts, bias=bias, act=act)
 
 
 def dwconv_fwd_op_res(
@@ -218,18 +244,25 @@ def dwconv_fwd_op_res(
     padding: Padding = "same",
     variant: str = "row",
     opts: Optional[KernelOptions] = None,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
 ):
     """Forward pass that also returns the unified-``Wpad`` padded input as
     the fused-backward VJP residual (``None`` when the reference path runs —
-    there is no materialized padded buffer to reuse)."""
+    there is no materialized padded buffer to reuse).  Note the residual is
+    the *padded input*, never the pre-activation: the epilogue backward
+    recomputes the pre-activation from this same buffer in-register."""
     B, H, L = x.shape
     K = k.shape[-1]
-    variant, opts = resolve_variant("fwd", variant, opts, B=B, H=H, L=L, K=K,
-                                    dtype=x.dtype, padding=padding)
+    variant, opts = resolve_variant(
+        "fwd", variant, opts, B=B, H=H, L=L, K=K, dtype=x.dtype,
+        padding=padding, epilogue=epilogue_key(bias is not None, act))
     if variant == "xla":
-        return ref.dwconv_fwd_ref(x, k, padding), None
+        return ref.dwconv_act_ref(x, k, bias=bias, act=act, padding=padding), None
     p_left, _ = pad_widths(K, padding)
-    return _fwd_impl(x, k, p_left, variant, opts, return_padded=True)
+    return _fwd_impl(x, k, p_left, variant, opts, return_padded=True,
+                     bias=bias, act=act)
 
 
 def dwconv_bwd_input_op(
@@ -265,6 +298,19 @@ def bwdk_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
     Lout = round_up(L, LANE)
     Lt = min(block_t, Lout)
     if Lt >= Lout or Lt < K - 1:
+        return None
+    return Lt
+
+
+def epilogue_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
+    """Time tile for the *epilogue* fused backward, or ``None`` (untiled).
+
+    The activation-recompute needs the extended pre-activation window
+    (prev + cur + next x tiles), so the tile must additionally satisfy
+    ``Lt >= 2 * (K - 1)``; shapes failing that quietly run untiled, exactly
+    like ``bwdk_time_tile``'s own fallbacks."""
+    Lt = bwdk_time_tile(L, K, block_t, variant)
+    if Lt is None or Lt < 2 * (K - 1):
         return None
     return Lt
 
@@ -340,15 +386,19 @@ def _bwd_fused_impl(
     variant: str,
     opts: KernelOptions,
     xp: Optional[jnp.ndarray] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
+):
     B, H, L = dy.shape
     K = k.shape[-1]
+    trivial = is_trivial(bias, act)
     interpret = opts.resolved_interpret()
     Hb = min(opts.block_h, H)
     Bc = min(opts.batch_chunk, B)
     p_left, p_right = pad_widths(K, padding)
     Lout = round_up(L, LANE)
-    Lt = bwdk_time_tile(L, K, opts.block_t, variant)
+    tile_fn = bwdk_time_tile if trivial else epilogue_time_tile
+    Lt = tile_fn(L, K, opts.block_t, variant)
     Wk = bwd_fused_wpad(L, K)
     # Tiled regime: both operands live in the (nT + 1) * Lt tile layout (one
     # trailing all-zero tile feeds the right-neighbour halo binding).
@@ -381,13 +431,23 @@ def _bwd_fused_impl(
 
     kw = dict(K=K, Lout=Lout, off_dk=p_right, block_w=Wk, block_t=Lt,
               block_h=Hb, batch_chunk=Bc, interpret=interpret)
+    if trivial:
+        if variant == "fused":
+            dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_accum(xp, dyp, kp, **kw)
+        elif variant == "fused_partials":
+            dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_partials(xp, dyp, kp, **kw)
+        else:
+            raise ValueError(f"unknown bwd_fused variant {variant!r}")
+        return dx[:B, :H, :L], dk[:H, :K]
+    kw.update(bias=_prep_bias(bias, Hp), act=act)
     if variant == "fused":
-        dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_accum(xp, dyp, kp, **kw)
+        dx, dk, db = dwconv_bwd_fused.dwconv_bwd_fused_accum_act(xp, dyp, kp, **kw)
     elif variant == "fused_partials":
-        dx, dk = dwconv_bwd_fused.dwconv_bwd_fused_partials(xp, dyp, kp, **kw)
+        dx, dk, db = dwconv_bwd_fused.dwconv_bwd_fused_partials_act(xp, dyp, kp, **kw)
     else:
         raise ValueError(f"unknown bwd_fused variant {variant!r}")
-    return dx[:B, :H, :L], dk[:H, :K]
+    dbias = db[:H, 0] if bias is not None else None
+    return dx[:B, :H, :L], dk[:H, :K], dbias
 
 
 def dwconv_bwd_fused_op(
@@ -422,6 +482,58 @@ def dwconv_bwd_fused_op(
         dk = dwconv_bwd_kernel_op(x, dy, K, padding, "auto", caller_opts)
         return dx, dk
     return _bwd_fused_impl(x, dy, k, padding, variant, opts, xp=xp)
+
+
+def dwconv_bwd_fused_act_op(
+    x: Optional[jnp.ndarray],
+    dy: jnp.ndarray,
+    k: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    padding: Padding = "same",
+    variant: str = "fused",
+    opts: Optional[KernelOptions] = None,
+    *,
+    act: str = "none",
+    xp: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """Epilogue-aware whole backward -> (dx, dk (H, K) f32, dbias (H,) f32
+    or ``None`` when no bias participates).
+
+    The fused kernels recompute the pre-activation ``conv(x_pad, k) + bias``
+    from the staged slab (K extra in-register MACs per element), form
+    ``dy_eff = dy * act'(pre)`` in f32, and drive the existing dx/dk
+    reductions with it — no activation residual is ever stored and no
+    standalone elementwise pass runs.  ``variant="split"`` (also the
+    untuned-``auto`` fallback) is the escape hatch: it materializes
+    ``dy_eff`` once via a pre-activation *recompute* pass and delegates to
+    the two independent backward ops, so even the unfused structure never
+    saves a residual.
+    """
+    B, H, L = dy.shape
+    K = k.shape[-1]
+    if is_trivial(bias, act):
+        dx, dk = dwconv_bwd_fused_op(x, dy, k, padding, variant, opts, xp=xp)
+        return dx, dk, None
+    caller_opts = opts
+    epi = epilogue_key(bias is not None, act)
+    variant, opts = resolve_variant("bwd_fused", variant, opts, B=B, H=H, L=L,
+                                    K=K, dtype=dy.dtype, padding=padding,
+                                    epilogue=epi)
+    if variant == "split":
+        if x is None:
+            raise ValueError("bwd_fused variant 'split' needs the unpadded input x")
+        # Activation-recompute split path: one standalone pre-activation
+        # pass (conv + bias, no act), then the ordinary split backward on
+        # the effective gradient.
+        pre = dwconv_fwd_op(x, k, padding, "auto", caller_opts, bias=bias)
+        dy_eff32 = dy.astype(jnp.float32) * act_grad(pre.astype(jnp.float32), act)
+        dy_eff = dy_eff32.astype(dy.dtype)
+        dx = dwconv_bwd_input_op(dy_eff, k, padding, "auto", caller_opts)
+        dk = dwconv_bwd_kernel_op(x, dy_eff, K, padding, "auto", caller_opts)
+        dbias = jnp.sum(dy_eff32, axis=(0, 2)) if bias is not None else None
+        return dx, dk, dbias
+    return _bwd_fused_impl(x, dy, k, padding, variant, opts, xp=xp,
+                           bias=bias, act=act)
 
 
 @functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))

@@ -24,8 +24,9 @@ def _padded(x: jnp.ndarray, K: int, padding: Padding) -> jnp.ndarray:
     return jnp.pad(x, ((0, 0), (0, 0), (left, right)))
 
 
-def dwconv_fwd_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
-    """y[b,h,t] = sum_j x_pad[b,h,t+j] * k[h,j]  (paper eq. (8))."""
+def _fwd_acc(x: jnp.ndarray, k: jnp.ndarray, padding: Padding) -> jnp.ndarray:
+    """The forward tap sum in the f32 accumulator, *before* the output cast
+    (shared by the plain reference and the fused-epilogue reference)."""
     B, H, L = x.shape
     Hk, K = k.shape
     assert Hk == H, (Hk, H)
@@ -35,7 +36,32 @@ def dwconv_fwd_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") ->
     acc = jnp.zeros((B, H, L), dtype=jnp.promote_types(x.dtype, jnp.float32))
     for j in range(K):
         acc = acc + xp[:, :, j : j + L].astype(acc.dtype) * k[:, j][None, :, None].astype(acc.dtype)
-    return acc.astype(x.dtype)
+    return acc
+
+
+def dwconv_fwd_ref(x: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
+    """y[b,h,t] = sum_j x_pad[b,h,t+j] * k[h,j]  (paper eq. (8))."""
+    return _fwd_acc(x, k, padding).astype(x.dtype)
+
+
+def dwconv_act_ref(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    bias: jnp.ndarray = None,
+    act: str = "none",
+    padding: Padding = "same",
+) -> jnp.ndarray:
+    """Fused-epilogue reference: ``act(conv(x, k) + bias)`` with the bias add
+    and activation applied to the f32 accumulator *before* the single cast —
+    the same rounding semantics as the Pallas epilogue kernels (one rounding
+    step, vs one per op in the unfused composition).  This is also the SPMD
+    production path: XLA fuses the whole chain into one elementwise loop."""
+    from repro.kernels.epilogue import apply_act
+
+    acc = _fwd_acc(x, k, padding)
+    if bias is not None:
+        acc = acc + bias.astype(acc.dtype)[None, :, None]
+    return apply_act(acc, act).astype(x.dtype)
 
 
 def dwconv_bwd_input_ref(dy: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:

@@ -25,6 +25,7 @@ import time
 from typing import List
 
 from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import EPILOGUE_KEYS
 from repro.tuning.cache import TuningCache
 from repro.tuning.space import PAPER_DIMS_CPU, PAPER_DIMS_FULL, PATHS
 from repro.tuning.tuner import tune_path
@@ -69,6 +70,9 @@ def main(argv=None) -> int:
                     help=f"execution paths to tune (default {','.join(PATHS)})")
     ap.add_argument("--search", default="grid", choices=["grid", "hillclimb"])
     ap.add_argument("--dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--epilogue", default="none", choices=list(EPILOGUE_KEYS),
+                    help="fused bias/activation epilogue to tune the 'fwd' and "
+                         "'bwd_fused' paths under (other paths tune epilogue-less)")
     ap.add_argument("--cache", default="",
                     help="cache file (default: $REPRO_TUNE_CACHE or results/tuning/cache.json)")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per candidate")
@@ -97,6 +101,7 @@ def main(argv=None) -> int:
                 dtype=args.dtype, budget=per_path, search=args.search,
                 warmup=args.warmup, iters=iters, cache=cache,
                 verbose=args.verbose,
+                epilogue=args.epilogue if path in ("fwd", "bwd_fused") else "none",
             )
             e = res.best
             print(

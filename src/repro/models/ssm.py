@@ -18,7 +18,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dwconv import dwconv
+from repro.core.dwconv import dwconv_act
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models.config import ArchConfig
@@ -166,17 +166,19 @@ def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
     Cm = jnp.einsum("bsd,dn->bsn", h, lp["w_C"].astype(h.dtype))
     dt = jnp.einsum("bsd,dh->bsh", h, lp["w_dt"].astype(h.dtype))
 
-    # depthwise causal conv over (x, B, C) — the paper's operator
+    # depthwise causal conv over (x, B, C) — the paper's operator, with the
+    # bias add + SiLU fused into the conv kernel's epilogue (one HBM write;
+    # dbias rides the fused backward alongside dk).
     if s.split_conv:
         # shard-aligned variant: conv each component with its own filter
         # slice; x stays model-sharded end-to-end, B/C stay replicated —
         # no mid-layer resharding of a concat dim (§Perf hillclimb C).
         def _conv(t, lo, hi, axes):
             tt = shard(t.transpose(0, 2, 1), *axes)
-            tt = dwconv(tt, lp["conv_w"][lo:hi].astype(tt.dtype),
-                        padding="causal", variant=s.conv_variant)
-            tt = tt + lp["conv_b"][lo:hi].astype(tt.dtype)[None, :, None]
-            return jax.nn.silu(tt).transpose(0, 2, 1)
+            tt = dwconv_act(tt, lp["conv_w"][lo:hi].astype(tt.dtype),
+                            lp["conv_b"][lo:hi].astype(tt.dtype),
+                            act="silu", padding="causal", variant=s.conv_variant)
+            return tt.transpose(0, 2, 1)
 
         xs = _conv(xs, 0, d_inner, ("act_batch", "act_mlp", None))
         Bm = _conv(Bm, d_inner, d_inner + s.d_state, ("act_batch", None, None))
@@ -184,10 +186,10 @@ def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
     else:
         xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)             # (B,S,conv_dim)
         xbc = shard(xbc.transpose(0, 2, 1), "act_batch", "act_mlp", None)
-        xbc = dwconv(xbc, lp["conv_w"].astype(xbc.dtype), padding="causal",
-                     variant=s.conv_variant)
-        xbc = xbc + lp["conv_b"].astype(xbc.dtype)[None, :, None]
-        xbc = jax.nn.silu(xbc).transpose(0, 2, 1)
+        xbc = dwconv_act(xbc, lp["conv_w"].astype(xbc.dtype),
+                         lp["conv_b"].astype(xbc.dtype),
+                         act="silu", padding="causal", variant=s.conv_variant)
+        xbc = xbc.transpose(0, 2, 1)
         xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))

@@ -44,13 +44,19 @@ from repro.kernels.ops import KernelOptions, bwdk_time_tile
 #     kernels (time tiling) — the schema is unchanged, but an older entry
 #     whose block_t now activates the tiled kernels was measured under
 #     untiled semantics, so its timing no longer describes what runs.
-CACHE_VERSION = 4
+# v5: the 'fwd' and 'bwd_fused' paths gained an *epilogue* key component
+#     (fused bias/activation — 'none', 'gelu', 'bias+silu', ...).  A v4 key
+#     is exactly a v5 key with epilogue='none' and the epilogue-less kernels
+#     are unchanged, so v4 entries migrate verbatim; epilogue problems have
+#     no pre-v5 entries and simply tune fresh.
+CACHE_VERSION = 5
 # Older schemas whose entries are still valid per-path decisions and are
 # carried forward on load (and re-written as CACHE_VERSION on next save).
 # v2/v3 entries migrate verbatim *except* bwd decisions that the time-tiling
-# semantics change invalidates (see ``_migration_drops``).  v1 lacked the
-# padding key component and is never migrated.
-MIGRATABLE_VERSIONS = (2, 3)
+# semantics change invalidates (see ``_migration_drops``); v4 entries
+# migrate verbatim as epilogue='none'.  v1 lacked the padding key component
+# and is never migrated.
+MIGRATABLE_VERSIONS = (2, 3, 4)
 CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
 # Anchored to the source tree (src/repro/tuning/ -> repo root), not the CWD:
 # a tuner run from the repo root and a training job launched from a scratch
@@ -72,10 +78,12 @@ class ShapeKey:
 
     ``padding`` is part of the identity: 'same' and 'causal' problems with
     equal dims are measured under different windows and must not share a
-    tuning decision.
+    tuning decision.  ``epilogue`` likewise ('none' | 'gelu' | 'bias+silu'
+    | ...): a fused bias/activation changes the kernel bodies on the
+    ``fwd``/``bwd_fused`` paths, so epilogue problems tune separately.
     """
 
-    path: str        # "fwd" | "bwd_in" | "bwd_k"
+    path: str        # "fwd" | "bwd_in" | "bwd_k" | "bwd_fused"
     B: int
     H: int
     L: int
@@ -83,17 +91,23 @@ class ShapeKey:
     dtype: str       # e.g. "float32", "bfloat16"
     backend: str     # jax.default_backend(): "cpu" | "tpu" | "gpu"
     padding: str = "same"
+    epilogue: str = "none"  # kernels/epilogue.py key: 'none', 'gelu', ...
 
     def encode(self) -> str:
         return (f"{self.path}/B{self.B}-H{self.H}-L{self.L}-K{self.K}/"
-                f"{self.padding}/{self.dtype}/{self.backend}")
+                f"{self.padding}/{self.dtype}/{self.backend}/{self.epilogue}")
 
     @classmethod
     def decode(cls, s: str) -> "ShapeKey":
-        path, dims, padding, dtype, backend = s.split("/")
+        parts = s.split("/")
+        if len(parts) == 5:  # pre-v5 key: implicitly epilogue-less
+            (path, dims, padding, dtype, backend), epilogue = parts, "none"
+        else:
+            path, dims, padding, dtype, backend, epilogue = parts
         vals = {p[0]: int(p[1:]) for p in dims.split("-")}
         return cls(path=path, B=vals["B"], H=vals["H"], L=vals["L"], K=vals["K"],
-                   dtype=dtype, backend=backend, padding=padding)
+                   dtype=dtype, backend=backend, padding=padding,
+                   epilogue=epilogue)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,19 +139,26 @@ class TuneEntry:
         return cls(**{k: v for k, v in d.items() if k in fields})
 
 
-def _migration_drops(key_str: str, entry: TuneEntry) -> bool:
-    """True when a pre-v4 entry must not migrate: time tiling changed the
-    whole bwd_k/bwd_fused *candidate space* for every shape that admits a
-    tile — the staged kernels changed semantics, and tiled candidates
-    joined a space where long-L staged variants used to be VMEM-pruned — so
-    any such decision is stale, including an 'xla'/'naive'/'split' winner
-    whose runners-up changed under it.  Drop it and let the shape re-tune;
-    shapes that cannot tile (and all fwd/bwd_in entries) migrate verbatim.
+def _migration_drops(key_str: str, entry: TuneEntry, version: int) -> bool:
+    """True when an older-schema entry must not migrate.
+
+    v2/v3 predate block_t time tiling, which changed the whole
+    bwd_k/bwd_fused *candidate space* for every shape that admits a tile —
+    the staged kernels changed semantics, and tiled candidates joined a
+    space where long-L staged variants used to be VMEM-pruned — so any such
+    decision is stale, including an 'xla'/'naive'/'split' winner whose
+    runners-up changed under it.  Drop it and let the shape re-tune; shapes
+    that cannot tile (and all fwd/bwd_in entries) migrate verbatim.
+
+    v4 entries are epilogue-less decisions over kernels the epilogue work
+    did not change ('none' is bit-identical): they migrate verbatim.
     """
     try:
         k = ShapeKey.decode(key_str)
     except (KeyError, ValueError):
         return True  # unparseable key: never mis-apply
+    if version >= 4:
+        return False
     if k.path not in ("bwd_k", "bwd_fused"):
         return False
     from repro.tuning.space import BLOCK_T_CHOICES  # deferred: space is a heavier import
@@ -173,8 +194,13 @@ class TuningCache:
                 entry = TuneEntry.from_dict(ed)
             except TypeError:
                 continue
-            if version != CACHE_VERSION and _migration_drops(key, entry):
-                continue
+            if version != CACHE_VERSION:
+                if _migration_drops(key, entry, version):
+                    continue
+                try:  # normalize pre-v5 keys to the epilogue-aware encoding
+                    key = ShapeKey.decode(key).encode()
+                except (KeyError, ValueError):
+                    continue
             out[key] = entry
         return out
 
@@ -281,8 +307,9 @@ def reset_default_cache() -> None:
 
 
 def lookup(path: str, B: int, H: int, L: int, K: int, dtype: str,
-           backend: str, padding: str = "same") -> Optional[TuneEntry]:
+           backend: str, padding: str = "same",
+           epilogue: str = "none") -> Optional[TuneEntry]:
     """The single entry point ``kernels/ops.py`` uses for auto dispatch."""
     return default_cache().get(
         ShapeKey(path=path, B=B, H=H, L=L, K=K, dtype=dtype, backend=backend,
-                 padding=padding))
+                 padding=padding, epilogue=epilogue))

@@ -29,6 +29,7 @@ from repro.analysis.hw import TPU_V5E, HardwareModel
 from repro.analysis.timer import Timing, time_fn
 from repro.kernels import ops, ref
 from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import parse_epilogue
 from repro.tuning.space import Candidate
 
 # Fixed per-DMA issue overhead for the analytical model.  The value is a
@@ -37,16 +38,24 @@ from repro.tuning.space import Candidate
 DMA_OVERHEAD_S = 1e-7
 
 
-def _traffic_for(c: Candidate, d: DWConvDims, itemsize: int) -> traffic.TrafficEstimate:
-    if c.path in ("fwd", "bwd_in"):
+def _traffic_for(c: Candidate, d: DWConvDims, itemsize: int,
+                 epilogue: str = "none") -> traffic.TrafficEstimate:
+    if c.path == "fwd":
+        return traffic.epilogue_fwd_traffic(d, c.variant, itemsize,
+                                            epilogue=epilogue, fused=True,
+                                            block_h=c.block_h, block_t=c.block_t)
+    if c.path == "bwd_in":
         return traffic.fwd_traffic(d, c.variant, itemsize,
                                    block_h=c.block_h, block_t=c.block_t)
     if c.path == "bwd_fused":
         # Whole-backward accounting (pad materialization charged): fused
         # candidates against the "split" two-op baseline, like for like.
-        return traffic.bwd_fused_traffic(d, c.variant, itemsize,
-                                         block_h=c.block_h, block_t=c.block_t,
-                                         batch_chunk=c.batch_chunk)
+        # The epilogue-aware model charges the recompute MACs on the fused
+        # side and the standalone pre-activation pass on the split side.
+        return traffic.epilogue_bwd_traffic(d, c.variant, itemsize,
+                                            epilogue=epilogue,
+                                            block_h=c.block_h, block_t=c.block_t,
+                                            batch_chunk=c.batch_chunk)
     return traffic.bwdk_traffic(d, c.variant, itemsize,
                                 block_h=c.block_h, block_t=c.block_t,
                                 batch_chunk=c.batch_chunk)
@@ -58,6 +67,7 @@ def analytical_time_s(
     *,
     itemsize: int = 4,
     hw: HardwareModel = TPU_V5E,
+    epilogue: str = "none",
 ) -> float:
     """Roofline-bounded execution-time estimate for one candidate (seconds).
 
@@ -68,7 +78,7 @@ def analytical_time_s(
     cache-dependent redundancy) is still ranked by its logical traffic —
     pessimistic, exactly like the paper's Table III treatment.
     """
-    est = _traffic_for(c, d, itemsize)
+    est = _traffic_for(c, d, itemsize, epilogue)
     compute_s = est.flops / hw.peak_flops_f32
     memory_s = est.bytes_moved / hw.hbm_bw
     return max(compute_s, memory_s) + est.transactions * DMA_OVERHEAD_S
@@ -81,9 +91,11 @@ def rank_candidates(
     itemsize: int = 4,
     hw: HardwareModel = TPU_V5E,
     top_n: Optional[int] = None,
+    epilogue: str = "none",
 ) -> List[Tuple[Candidate, float]]:
     """Sort candidates by analytical cost; keep the best ``top_n`` if set."""
-    scored = [(c, analytical_time_s(c, d, itemsize=itemsize, hw=hw))
+    scored = [(c, analytical_time_s(c, d, itemsize=itemsize, hw=hw,
+                                    epilogue=epilogue))
               for c in candidates]
     scored.sort(key=lambda cs: cs[1])
     return scored[:top_n] if top_n else scored
@@ -105,6 +117,7 @@ def build_measurable(
     dtype: str = "float32",
     interpret: Optional[bool] = None,
     seed: int = 0,
+    epilogue: str = "none",
 ) -> Tuple[Callable, tuple]:
     """A jitted zero-arg-ready ``(fn, args)`` executing the candidate's path."""
     dt = _dtype_of(dtype)
@@ -112,12 +125,20 @@ def build_measurable(
     x = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), dt)
     k = jnp.asarray(rng.normal(size=(d.H, d.K)), dt)
     opts = c.options(interpret=interpret)
+    has_bias, act = parse_epilogue(epilogue)
+    bias = jnp.asarray(rng.normal(size=(d.H,)), dt) if has_bias else None
+    if epilogue != "none" and c.path not in ("fwd", "bwd_fused"):
+        raise ValueError(
+            f"epilogue {epilogue!r} applies to the 'fwd'/'bwd_fused' paths, "
+            f"not {c.path!r} (the split reductions consume dy_eff unchanged)")
 
     if c.path == "fwd":
         if c.variant == "xla":
-            fn = jax.jit(lambda x, k: ref.dwconv_fwd_ref(x, k, d.padding))
+            fn = jax.jit(lambda x, k: ref.dwconv_act_ref(
+                x, k, bias=bias, act=act, padding=d.padding))
         else:
-            fn = jax.jit(lambda x, k: ops.dwconv_fwd_op(x, k, d.padding, c.variant, opts))
+            fn = jax.jit(lambda x, k: ops.dwconv_fwd_op(
+                x, k, d.padding, c.variant, opts, bias=bias, act=act))
         return fn, (x, k)
     if c.path == "bwd_in":
         dy = x
@@ -137,12 +158,20 @@ def build_measurable(
     if c.path == "bwd_fused":
         # Whole backward in one measurable: the fused kernels, or — for the
         # "split" baseline — the two independent ops resolved through their
-        # own tuned (or fallback) configurations.
+        # own tuned (or fallback) configurations.  With an epilogue, the
+        # epilogue-aware entry point runs (recompute kernels vs the
+        # standalone-recompute split composition).
         dy = jnp.asarray(rng.normal(size=(d.B, d.H, d.L)), dt)
-        fn = jax.jit(
-            lambda x, dy, k: ops.dwconv_bwd_fused_op(
-                x, dy, k, d.padding, c.variant,
-                None if c.variant == "split" else opts))
+        if epilogue == "none":
+            fn = jax.jit(
+                lambda x, dy, k: ops.dwconv_bwd_fused_op(
+                    x, dy, k, d.padding, c.variant,
+                    None if c.variant == "split" else opts))
+        else:
+            fn = jax.jit(
+                lambda x, dy, k: ops.dwconv_bwd_fused_act_op(
+                    x, dy, k, bias, d.padding, c.variant,
+                    None if c.variant == "split" else opts, act=act))
         return fn, (x, dy, k)
     raise ValueError(f"unknown path {c.path!r}")
 
@@ -157,8 +186,10 @@ def measure_candidate(
     interpret: Optional[bool] = None,
     timer: Callable[..., Timing] = time_fn,
     seed: int = 0,
+    epilogue: str = "none",
 ) -> float:
     """Steady-state seconds-per-call for one candidate (paper §III-F)."""
-    fn, args = build_measurable(c, d, dtype=dtype, interpret=interpret, seed=seed)
+    fn, args = build_measurable(c, d, dtype=dtype, interpret=interpret,
+                                seed=seed, epilogue=epilogue)
     t = timer(fn, *args, warmup=warmup, iters=iters)
     return float(t.mean_s)

@@ -114,15 +114,19 @@ def _effective_tiles(c: Candidate, d: DWConvDims) -> Tuple[int, int, int, int]:
     return Hb, Lt, Bc, Lout
 
 
-def _bwd_time_tile(c: Candidate, d: DWConvDims) -> Optional[int]:
+def _bwd_time_tile(c: Candidate, d: DWConvDims, epilogue: str = "none") -> Optional[int]:
     """Effective time tile for a staged bwd candidate, or None when the
-    kernel executes untiled — mirrors ``ops.bwdk_time_tile`` exactly."""
-    from repro.kernels.ops import bwdk_time_tile
+    kernel executes untiled — mirrors ``ops.bwdk_time_tile`` exactly (and
+    its stricter epilogue sibling for epilogue-aware bwd_fused problems,
+    whose recompute window needs a prev-tile halo)."""
+    from repro.kernels.ops import bwdk_time_tile, epilogue_time_tile
 
+    if c.path == "bwd_fused" and epilogue != "none":
+        return epilogue_time_tile(d.L, d.K, c.block_t, c.variant)
     return bwdk_time_tile(d.L, d.K, c.block_t, c.variant)
 
 
-def normalize(c: Candidate, d: DWConvDims) -> Candidate:
+def normalize(c: Candidate, d: DWConvDims, epilogue: str = "none") -> Candidate:
     """Clamp knobs to the problem dims and pin knobs the variant ignores.
 
     Two candidates that resolve to the same executed configuration collapse
@@ -140,12 +144,14 @@ def normalize(c: Candidate, d: DWConvDims) -> Candidate:
     # staged variants honour block_t (time-tiled reduction); every block_t
     # that executes untiled (naive, single tile, or a halo-starved tile that
     # ops.py falls back from) collapses to the canonical Lt=Lout form.
-    tiled_lt = _bwd_time_tile(c, d)
+    tiled_lt = _bwd_time_tile(c, d, epilogue)
     Lt = tiled_lt if tiled_lt is not None else Lout
     return Candidate(c.path, c.variant, Hb, Lt, Bc)
 
 
-def _vmem_working_set_bytes(c: Candidate, d: DWConvDims, itemsize: int) -> int:
+def _vmem_working_set_bytes(
+    c: Candidate, d: DWConvDims, itemsize: int, epilogue: str = "none"
+) -> int:
     """Per-grid-cell VMEM staging estimate for the candidate's kernel."""
     Hb, Lt, Bc, Lout = _effective_tiles(c, d)
     Wpad = round_up(Lout + d.K - 1, LANE)
@@ -156,15 +162,20 @@ def _vmem_working_set_bytes(c: Candidate, d: DWConvDims, itemsize: int) -> int:
         if c.variant == "block":
             return Hb * 3 * Lt * itemsize          # cur + halo + out tile
         return Hb * (Lt + LANE + Lt) * itemsize    # naive/lane scratch + out
-    tiled_lt = _bwd_time_tile(c, d)
+    tiled_lt = _bwd_time_tile(c, d, epilogue)
     if c.path == "bwd_fused":
+        epi = epilogue != "none"
+        # The epilogue kernels additionally hold the recomputed
+        # pre-activation / effective-gradient temporaries (f32, one output
+        # window each) and — tiled — a third (prev) x tile.
         if tiled_lt is not None:
-            # Time-tiled: haloed (cur + neighbour) slabs of both operands
-            # plus the dx tile — bounded by block_t, independent of L.
-            return Bc * Hb * 5 * tiled_lt * itemsize + Kp4
+            slabs = 6 if epi else 5
+            extra = 2 * Bc * Hb * (tiled_lt + d.K - 1) * 4 if epi else 0
+            return Bc * Hb * slabs * tiled_lt * itemsize + extra + Kp4
         # Both operand slabs (width Wpad each) + the dx output block + the
         # dk accumulator staged per (h-block, batch-chunk) cell.
-        return Bc * Hb * (2 * Wpad + Lout) * itemsize + Kp4
+        extra = 2 * Bc * Hb * Lout * 4 if epi else 0
+        return Bc * Hb * (2 * Wpad + Lout) * itemsize + extra + Kp4
     # bwd_k: both operand slabs staged per (h-block, batch-chunk) cell;
     # time-tiled accum/twostage bound the slabs by block_t instead of L.
     if tiled_lt is not None:
@@ -178,6 +189,7 @@ def is_legal(
     *,
     itemsize: int = 4,
     hw: HardwareModel = TPU_V5E,
+    epilogue: str = "none",
 ) -> Tuple[bool, str]:
     """Check the kernel asserts (post-ops-padding) for this candidate.
 
@@ -201,7 +213,7 @@ def is_legal(
         if c.variant == "block" and Lt < d.K - 1:
             return False, f"halo K-1={d.K - 1} does not fit tile Lt={Lt}"
     if hw.vmem_bytes:
-        need = _vmem_working_set_bytes(c, d, itemsize)
+        need = _vmem_working_set_bytes(c, d, itemsize, epilogue)
         if need > hw.vmem_bytes:
             return False, f"VMEM working set {need}B > {int(hw.vmem_bytes)}B"
     return True, "ok"
@@ -218,6 +230,7 @@ def search_space(
     include_xla: bool = True,
     itemsize: int = 4,
     hw: HardwareModel = TPU_V5E,
+    epilogue: str = "none",
 ) -> List[Candidate]:
     """Enumerate the legal, normalized, deduplicated candidates for a path."""
     if path not in PATHS:
@@ -232,18 +245,19 @@ def search_space(
     for v, bh, bt, bc in itertools.product(
         variants, block_h_choices, block_t_choices, batch_chunk_choices
     ):
-        cand = normalize(Candidate(path, v, bh, bt, bc), d)
+        cand = normalize(Candidate(path, v, bh, bt, bc), d, epilogue)
         if cand in seen:
             continue
         seen.add(cand)
-        ok, _ = is_legal(cand, d, itemsize=itemsize, hw=hw)
+        ok, _ = is_legal(cand, d, itemsize=itemsize, hw=hw, epilogue=epilogue)
         if ok:
             out.append(cand)
     return out
 
 
 def neighbors(c: Candidate, d: DWConvDims, *, itemsize: int = 4,
-              hw: HardwareModel = TPU_V5E) -> List[Candidate]:
+              hw: HardwareModel = TPU_V5E,
+              epilogue: str = "none") -> List[Candidate]:
     """Single-knob moves on the tiling lattice plus variant switches —
     the move set of the greedy hillclimb driver."""
     moves: List[Candidate] = []
@@ -271,8 +285,9 @@ def neighbors(c: Candidate, d: DWConvDims, *, itemsize: int = 4,
             moves.append(dataclasses.replace(c, variant=v))
     uniq, seen = [], {c}
     for m in moves:
-        m = normalize(m, d)
-        if m not in seen and is_legal(m, d, itemsize=itemsize, hw=hw)[0]:
+        m = normalize(m, d, epilogue)
+        if m not in seen and is_legal(m, d, itemsize=itemsize, hw=hw,
+                                      epilogue=epilogue)[0]:
             seen.add(m)
             uniq.append(m)
     return uniq

@@ -68,11 +68,12 @@ def fallback_candidate(d: DWConvDims, path: str) -> Candidate:
                   batch_chunk=DEFAULT_OPTS.batch_chunk), d)
 
 
-def _make_key(d: DWConvDims, path: str, dtype: str, backend: Optional[str]) -> ShapeKey:
+def _make_key(d: DWConvDims, path: str, dtype: str, backend: Optional[str],
+              epilogue: str = "none") -> ShapeKey:
     return ShapeKey(
         path=path, B=d.B, H=d.H, L=d.L, K=d.K, dtype=dtype,
         backend=backend if backend is not None else jax.default_backend(),
-        padding=d.padding,
+        padding=d.padding, epilogue=epilogue,
     )
 
 
@@ -93,17 +94,25 @@ def tune_path(
     cache: Optional[TuningCache] = None,
     persist: bool = True,
     verbose: bool = False,
+    epilogue: str = "none",
 ) -> TuneResult:
     """Tune one (shape, path) and record the winner in the cache."""
     if budget < 1:
         raise ValueError(f"budget must be >= 1, got {budget}")
+    if epilogue != "none" and path not in ("fwd", "bwd_fused"):
+        raise ValueError(
+            f"epilogue {epilogue!r} only parameterizes the 'fwd'/'bwd_fused' "
+            f"paths, not {path!r}")
     if measure_fn is None:
         def measure_fn(c: Candidate, dd: DWConvDims) -> float:
             return cost.measure_candidate(
-                c, dd, dtype=dtype, warmup=warmup, iters=iters)
+                c, dd, dtype=dtype, warmup=warmup, iters=iters,
+                epilogue=epilogue)
 
-    cands = space.search_space(d, path, variants=variants, itemsize=itemsize, hw=hw)
-    ranked = cost.rank_candidates(cands, d, itemsize=itemsize, hw=hw)
+    cands = space.search_space(d, path, variants=variants, itemsize=itemsize,
+                               hw=hw, epilogue=epilogue)
+    ranked = cost.rank_candidates(cands, d, itemsize=itemsize, hw=hw,
+                                  epilogue=epilogue)
     analytical: Dict[Candidate, float] = dict(ranked)
 
     measured: Dict[Candidate, float] = {}
@@ -136,10 +145,12 @@ def tune_path(
         improved = True
         while improved and len(measured) < budget:
             improved = False
-            moves = space.neighbors(cur, d, itemsize=itemsize, hw=hw)
+            moves = space.neighbors(cur, d, itemsize=itemsize, hw=hw,
+                                    epilogue=epilogue)
             # visit neighbours in analytical order: best-looking moves first
             moves.sort(key=lambda m: analytical.get(
-                m, cost.analytical_time_s(m, d, itemsize=itemsize, hw=hw)))
+                m, cost.analytical_time_s(m, d, itemsize=itemsize, hw=hw,
+                                          epilogue=epilogue)))
             for m in moves:
                 if len(measured) >= budget:
                     break
@@ -151,7 +162,7 @@ def tune_path(
         raise ValueError(f"unknown search {search!r}; use 'grid' or 'hillclimb'")
 
     best_c = min(measured, key=measured.get)
-    key = _make_key(d, path, dtype, backend)
+    key = _make_key(d, path, dtype, backend, epilogue)
     entry = TuneEntry(
         variant=best_c.variant,
         block_h=best_c.block_h,
@@ -178,8 +189,16 @@ def tune_shape(
     *,
     paths: Sequence[str] = space.PATHS,
     budget: int = 20,
+    epilogue: str = "none",
     **kw,
 ) -> Dict[str, TuneResult]:
-    """Tune every execution path of one shape; budget is split across paths."""
+    """Tune every execution path of one shape; budget is split across paths.
+
+    ``epilogue`` applies to the paths it parameterizes ('fwd', 'bwd_fused');
+    the split reductions ('bwd_in', 'bwd_k') consume the effective gradient
+    unchanged and always tune epilogue-less."""
     per_path = max(1, budget // max(len(paths), 1))
-    return {p: tune_path(d, p, budget=per_path, **kw) for p in paths}
+    return {p: tune_path(
+        d, p, budget=per_path,
+        epilogue=epilogue if p in ("fwd", "bwd_fused") else "none",
+        **kw) for p in paths}

@@ -1,0 +1,452 @@
+"""Fused-epilogue validation: gradients (dx, dk, dbias) vs ``jax.vjp`` of
+the unfused reference composition for gelu/silu on same+causal padding,
+``act=none`` bitwise-identical to the pre-epilogue kernels, mixed-dtype
+accumulator semantics (bias+act in f32 before the cast), the cache v4->v5
+migration (epilogue-less entries survive; epilogue keys tune fresh), the
+epilogue-aware tuner path, and the traffic-model accounting (fused saves
+exactly the modeled standalone elementwise bytes).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import traffic
+from repro.core import dwconv as dw
+from repro.kernels import ops, ref
+from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import (
+    ACTS,
+    act_grad,
+    apply_act,
+    epilogue_key,
+    parse_epilogue,
+)
+from repro.tuning import cache as tcache
+from repro.tuning import tuner
+from repro.tuning.cache import ShapeKey, TuneEntry, TuningCache
+
+SMALL_OPTS = ops.KernelOptions(batch_chunk=2, block_h=3, interpret=True)
+# (B, H, L, K, padding): odd/even K, same/causal, ragged B/H, L > LANE.
+SHAPES = [
+    (2, 8, 48, 48, "same"),
+    (3, 5, 100, 7, "causal"),
+    (1, 8, 130, 48, "same"),
+    (2, 3, 48, 5, "causal"),
+]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _unfused(x, k, b, act, pad):
+    """The unfused composition the call sites ran before this PR — the
+    autodiff oracle for every epilogue gradient."""
+    y = ref.dwconv_fwd_ref(x, k, pad)
+    if b is not None:
+        y = y + b[None, :, None]
+    return {"none": lambda v: v, "gelu": jax.nn.gelu, "silu": jax.nn.silu}[act](y)
+
+
+# ---------------------------------------------------------------------------
+# activation table
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_act_value_and_grad_match_jax(act):
+    x = _rand((64,), jnp.float32, 0) * 3.0
+    want = {"none": lambda v: v, "gelu": jax.nn.gelu, "silu": jax.nn.silu}[act](x)
+    np.testing.assert_allclose(np.asarray(apply_act(x, act)), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+    gwant = jax.vmap(jax.grad(
+        {"none": lambda v: v, "gelu": jax.nn.gelu, "silu": jax.nn.silu}[act]))(x)
+    np.testing.assert_allclose(np.asarray(act_grad(x, act)), np.asarray(gwant),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_epilogue_key_roundtrip():
+    for bias in (False, True):
+        for act in ACTS:
+            assert parse_epilogue(epilogue_key(bias, act)) == (bias, act)
+    assert epilogue_key(False, "none") == "none"
+    assert epilogue_key(True, "silu") == "bias+silu"
+    with pytest.raises(ValueError):
+        epilogue_key(True, "relu6")
+
+
+# ---------------------------------------------------------------------------
+# forward: fused epilogue == unfused composition, act=none bitwise-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["row", "block", "lane", "naive"])
+@pytest.mark.parametrize("act", ["gelu", "silu"])
+def test_fwd_epilogue_matches_unfused(variant, act):
+    B, H, L, K, pad = 2, 8, 100, 7, "same"
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    b = _rand((H,), jnp.float32, 2)
+    got = ops.dwconv_fwd_op(x, k, pad, variant, SMALL_OPTS, bias=b, act=act)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_unfused(x, k, b, act, pad)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["row", "block", "lane", "naive"])
+def test_fwd_trivial_epilogue_bitwise_identical(variant):
+    """The epilogue plumbing with bias=None, act='none' must produce the
+    exact bit pattern of the pre-epilogue kernels (controlled study)."""
+    B, H, L, K = 2, 8, 130, 48
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    plain = ops.dwconv_fwd_op(x, k, "same", variant, SMALL_OPTS)
+    epi = ops.dwconv_fwd_op(x, k, "same", variant, SMALL_OPTS,
+                            bias=None, act="none")
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(epi))
+
+
+def test_dwconv_act_none_is_dwconv_bitwise():
+    x = _rand((2, 8, 64), jnp.float32, 0)
+    k = _rand((8, 9), jnp.float32, 1)
+    a = dw.dwconv(x, k, variant="row", opts=SMALL_OPTS)
+    b = dw.dwconv_act(x, k, act="none", variant="row", opts=SMALL_OPTS)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dwconv_act_validates_inputs():
+    x = _rand((2, 4, 32), jnp.float32, 0)
+    k = _rand((4, 5), jnp.float32, 1)
+    with pytest.raises(ValueError):
+        dw.dwconv_act(x, k, act="relu")
+    with pytest.raises(ValueError):
+        dw.dwconv_act(x, k, _rand((3,), jnp.float32, 2), act="silu")
+
+
+# ---------------------------------------------------------------------------
+# backward: fused kernels vs jax.vjp of the unfused composition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["fused", "fused_partials"])
+@pytest.mark.parametrize("act", ["gelu", "silu"])
+@pytest.mark.parametrize("B,H,L,K,pad", SHAPES)
+def test_fused_epilogue_bwd_matches_vjp(variant, act, B, H, L, K, pad):
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    b = _rand((H,), jnp.float32, 2)
+    dy = _rand((B, H, L), jnp.float32, 3)
+    _, vjp = jax.vjp(lambda x, k, b: _unfused(x, k, b, act, pad), x, k, b)
+    dx_want, dk_want, db_want = vjp(dy)
+    dx, dk, db = ops.dwconv_bwd_fused_act_op(x, dy, k, b, pad, variant,
+                                             SMALL_OPTS, act=act)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_want),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("variant", ["fused", "fused_partials"])
+@pytest.mark.parametrize("pad", ["same", "causal"])
+def test_fused_epilogue_bwd_tiled_matches_vjp(variant, pad):
+    """Time-tiled epilogue backward (prev+cur+next x slab) on L >> block_t,
+    including a non-divisible tail tile."""
+    B, H, L, K, bt = 2, 4, 700, 5, 128
+    opts = ops.KernelOptions(batch_chunk=2, block_h=2, block_t=bt, interpret=True)
+    assert ops.epilogue_time_tile(L, K, bt, variant) == bt
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    b = _rand((H,), jnp.float32, 2)
+    dy = _rand((B, H, L), jnp.float32, 3)
+    _, vjp = jax.vjp(lambda x, k, b: _unfused(x, k, b, "gelu", pad), x, k, b)
+    dx_want, dk_want, db_want = vjp(dy)
+    dx, dk, db = ops.dwconv_bwd_fused_act_op(x, dy, k, b, pad, variant,
+                                             opts, act="gelu")
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want),
+                               atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_want),
+                               atol=2e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_want),
+                               atol=2e-3, rtol=1e-4)
+
+
+def test_epilogue_time_tile_needs_recompute_halo():
+    """Tiles too small for the extended recompute window fall back untiled
+    (a perf knob, never a correctness cliff)."""
+    assert ops.epilogue_time_tile(4096, 48, 128, "fused") is not None  # 128 >= 94
+    assert ops.epilogue_time_tile(4096, 80, 128, "fused") is None      # 128 < 158
+    assert ops.bwdk_time_tile(4096, 80, 128, "fused") == 128           # trivial path tiles
+    assert ops.epilogue_time_tile(48, 5, 512, "fused") is None         # single tile
+
+
+def test_split_recompute_path_matches_vjp():
+    """variant='split' (the untuned fallback): one standalone pre-activation
+    recompute pass + the split two-op backward — still no saved residual."""
+    B, H, L, K, pad = 2, 4, 48, 5, "same"
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    b = _rand((H,), jnp.float32, 2)
+    dy = _rand((B, H, L), jnp.float32, 3)
+    _, vjp = jax.vjp(lambda x, k, b: _unfused(x, k, b, "silu", pad), x, k, b)
+    dx_want, dk_want, db_want = vjp(dy)
+    dx, dk, db = ops.dwconv_bwd_fused_act_op(x, dy, k, b, pad, "split",
+                                             SMALL_OPTS, act="silu")
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_want), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_want), atol=1e-3)
+    with pytest.raises(ValueError):
+        ops.dwconv_bwd_fused_act_op(None, dy, k, b, pad, "split",
+                                    SMALL_OPTS, act="silu")
+
+
+@pytest.mark.parametrize("variant", ["fused", "xla", "row"])
+@pytest.mark.parametrize("act", ["gelu", "silu"])
+def test_dwconv_act_custom_vjp_matches_autodiff(variant, act):
+    """The differentiable operator end to end: residual is the padded input
+    (or raw x), gradients match XLA autodiff of the unfused chain."""
+    x = _rand((2, 8, 64), jnp.float32, 0)
+    k = _rand((8, 9), jnp.float32, 1)
+    b = _rand((8,), jnp.float32, 2)
+
+    def loss_fused(x, k, b):
+        return jnp.sum(jnp.sin(dw.dwconv_act(
+            x, k, b, act=act, padding="causal", variant=variant)))
+
+    def loss_ref(x, k, b):
+        return jnp.sum(jnp.sin(_unfused(x, k, b, act, "causal")))
+
+    got = jax.grad(loss_fused, argnums=(0, 1, 2))(x, k, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, k, b)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_dwconv_act_no_bias_grads():
+    x = _rand((2, 8, 64), jnp.float32, 0)
+    k = _rand((8, 48), jnp.float32, 1)
+    got = jax.grad(lambda x, k: jnp.sum(
+        dw.dwconv_act(x, k, act="gelu", variant="fused") ** 2), argnums=(0, 1))(x, k)
+    want = jax.grad(lambda x, k: jnp.sum(
+        _unfused(x, k, None, "gelu", "same") ** 2), argnums=(0, 1))(x, k)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mixed dtype: the epilogue runs in the f32 accumulator before the cast
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_fused_epilogue_beats_unfused_rounding():
+    """The unfused bf16 composition rounds between every op (conv -> bf16,
+    +bias -> bf16, silu -> bf16); the fused epilogue rounds once, after the
+    whole f32-accumulator chain, so it must sit strictly closer to the f32
+    reference in aggregate."""
+    B, H, L, K, pad = 4, 8, 96, 9, "same"
+    x32 = _rand((B, H, L), jnp.float32, 0)
+    k32 = _rand((H, K), jnp.float32, 1)
+    b32 = _rand((H,), jnp.float32, 2)
+    x, k, b = x32.astype(jnp.bfloat16), k32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16)
+
+    exact = _unfused(x32.astype(jnp.float32), k32, b32, "silu", pad)
+    # same bf16 operands for both contenders: only the rounding points differ
+    exact_bf_inputs = _unfused(x.astype(jnp.float32), k.astype(jnp.float32),
+                               b.astype(jnp.float32), "silu", pad)
+    fused = ops.dwconv_fwd_op(x, k, pad, "row", SMALL_OPTS, bias=b, act="silu")
+    unfused = jax.nn.silu(ref.dwconv_fwd_ref(x, k, pad) + b[None, :, None])
+    assert fused.dtype == jnp.bfloat16 and unfused.dtype == jnp.bfloat16
+
+    err_fused = float(jnp.mean(jnp.abs(fused.astype(jnp.float32) - exact_bf_inputs)))
+    err_unfused = float(jnp.mean(jnp.abs(unfused.astype(jnp.float32) - exact_bf_inputs)))
+    assert err_fused < err_unfused, (err_fused, err_unfused)
+    # and the fused bf16 result stays within bf16 tolerance of full f32
+    np.testing.assert_allclose(np.asarray(fused, np.float32), np.asarray(exact),
+                               atol=5e-2, rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# tuning: epilogue-aware keys, v4 -> v5 migration, epilogue tuner path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    p = tmp_path / "cache.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    yield p
+    tcache.reset_default_cache()
+
+
+def test_shape_key_epilogue_roundtrip():
+    k = ShapeKey(path="bwd_fused", B=2, H=4, L=48, K=5, dtype="float32",
+                 backend="cpu", padding="causal", epilogue="bias+silu")
+    assert ShapeKey.decode(k.encode()) == k
+    legacy = "fwd/B64-H128-L48-K48/same/float32/cpu"
+    decoded = ShapeKey.decode(legacy)
+    assert decoded.epilogue == "none"
+    assert decoded.encode().endswith("/none")
+
+
+def test_cache_v4_migrates_epilogue_keys_tune_fresh(tmp_path):
+    """v4 entries (epilogue-less decisions over unchanged kernels) migrate
+    verbatim and answer epilogue='none' lookups; epilogue keys have no
+    pre-v5 entries and must miss (re-tune), never inherit a v4 decision."""
+    key = ShapeKey(path="fwd", B=64, H=128, L=48, K=48, dtype="float32",
+                   backend="cpu")
+    bkey = ShapeKey(path="bwd_fused", B=8, H=64, L=4096, K=4, dtype="float32",
+                    backend="cpu")  # tileable: must *survive* v4 (unlike v3)
+    entry = TuneEntry(variant="row", block_h=8, block_t=512, batch_chunk=128)
+    bentry = TuneEntry(variant="fused", block_h=8, block_t=512, batch_chunk=8)
+    p = tmp_path / "db.json"
+    p.write_text(json.dumps({
+        "version": 4,
+        "entries": {key.encode().rsplit("/none", 1)[0]: entry.to_dict(),
+                    bkey.encode().rsplit("/none", 1)[0]: bentry.to_dict()},
+    }))
+    c = TuningCache(p)
+    assert c.get(key) == entry, "v4 epilogue-less entry lost in migration"
+    assert c.get(bkey) == bentry, "v4 bwd_fused entry must migrate (no drop)"
+    import dataclasses as dc
+    assert c.get(dc.replace(key, epilogue="gelu")) is None
+    assert c.get(dc.replace(bkey, epilogue="bias+silu")) is None
+    # a save rewrites at v5 with normalized (6-segment) keys
+    c.save()
+    raw = json.loads(p.read_text())
+    assert raw["version"] == tcache.CACHE_VERSION == 5
+    assert all(k.count("/") == 5 for k in raw["entries"])
+    assert TuningCache(p).get(key) == entry
+
+
+def test_cache_v3_tiled_drop_still_applies(tmp_path):
+    """The v3 migration rule is unchanged by v5: tileable bwd decisions drop."""
+    stale = ShapeKey(path="bwd_k", B=8, H=64, L=4096, K=4, dtype="float32",
+                     backend="cpu")
+    entry = TuneEntry(variant="accum", block_h=8, block_t=512, batch_chunk=8)
+    p = tmp_path / "db.json"
+    p.write_text(json.dumps({
+        "version": 3,
+        "entries": {stale.encode().rsplit("/none", 1)[0]: entry.to_dict()},
+    }))
+    assert TuningCache(p).get(stale) is None
+
+
+def test_auto_dispatch_epilogue_key(tmp_cache):
+    """An epilogue-keyed cache entry steers variant='auto' for the epilogue
+    problem only; the epilogue-less problem keeps its own resolution."""
+    B, H, L, K = 2, 4, 48, 5
+    tcache.default_cache().put(
+        ShapeKey(path="bwd_fused", B=B, H=H, L=L, K=K, dtype="float32",
+                 backend=jax.default_backend(), epilogue="bias+silu"),
+        TuneEntry(variant="fused_partials", block_h=2, block_t=512, batch_chunk=2))
+    v, o = ops.resolve_variant("bwd_fused", "auto", None, B=B, H=H, L=L, K=K,
+                               dtype=jnp.float32, epilogue="bias+silu")
+    assert v == "fused_partials" and o.batch_chunk == 2
+    v2, _ = ops.resolve_variant("bwd_fused", "auto", None, B=B, H=H, L=L, K=K,
+                                dtype=jnp.float32)
+    assert v2 == "split", "epilogue entry must not leak into the plain key"
+
+    # end to end: variant='auto' + epilogue entry -> fused epilogue backward
+    x = _rand((B, H, L), jnp.float32, 0)
+    k = _rand((H, K), jnp.float32, 1)
+    b = _rand((H,), jnp.float32, 2)
+    ga = jax.grad(lambda x, k, b: jnp.sum(
+        dw.dwconv_act(x, k, b, act="silu", variant="auto") ** 2),
+        argnums=(0, 1, 2))(x, k, b)
+    gr = jax.grad(lambda x, k, b: jnp.sum(
+        _unfused(x, k, b, "silu", "same") ** 2), argnums=(0, 1, 2))(x, k, b)
+    for a, w in zip(ga, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w), atol=2e-3)
+
+
+def test_tune_path_epilogue_writes_epilogue_key(tmp_cache):
+    d = DWConvDims(B=2, H=4, L=48, K=5)
+    calls = []
+
+    def fake_measure(c, dd):
+        calls.append(c)
+        return 1.0 if c.variant == "split" else 0.5
+
+    res = tuner.tune_path(d, "bwd_fused", budget=3, measure_fn=fake_measure,
+                          epilogue="bias+silu", cache=tcache.default_cache())
+    assert res.key.epilogue == "bias+silu"
+    assert tcache.default_cache().get(res.key) is not None
+    # the plain problem stays untuned
+    assert tcache.lookup("bwd_fused", 2, 4, 48, 5, "float32",
+                         jax.default_backend()) is None
+    with pytest.raises(ValueError):
+        tuner.tune_path(d, "bwd_k", budget=2, measure_fn=fake_measure,
+                        epilogue="gelu")
+
+
+# ---------------------------------------------------------------------------
+# traffic accounting: fusion saves exactly the modeled elementwise bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("epi,n_ops", [("gelu", 1), ("bias", 1),
+                                       ("bias+silu", 2), ("bias+gelu", 2)])
+def test_fwd_traffic_fused_saves_exact_elementwise_bytes(epi, n_ops):
+    d = DWConvDims(B=32, H=128, L=48, K=48)
+    itemsize = 4
+    fused = traffic.epilogue_fwd_traffic(d, "row", itemsize, epilogue=epi, fused=True)
+    unfused = traffic.epilogue_fwd_traffic(d, "row", itemsize, epilogue=epi, fused=False)
+    slab = d.B * d.H * d.L * itemsize
+    assert unfused.bytes_moved - fused.bytes_moved == n_ops * 2 * slab
+    assert unfused.flops == fused.flops  # same math, different bytes
+    # epilogue='none' degenerates to the plain model exactly
+    plain = traffic.fwd_traffic(d, "row", itemsize)
+    none = traffic.epilogue_fwd_traffic(d, "row", itemsize, epilogue="none")
+    assert (none.bytes_read, none.bytes_written, none.flops) == \
+        (plain.bytes_read, plain.bytes_written, plain.flops)
+
+
+def test_bwd_traffic_fused_epilogue_costs_flops_not_bytes():
+    """The recompute strategy: the fused epilogue backward adds one
+    path_flops of MACs over the trivial fused backward, while its byte
+    delta is just the bias vector in + dbias vector out."""
+    d = DWConvDims(B=32, H=128, L=48, K=48)
+    itemsize = 4
+    plain = traffic.bwd_fused_traffic(d, "fused", itemsize)
+    epi = traffic.epilogue_bwd_traffic(d, "fused", itemsize, epilogue="bias+silu")
+    assert epi.flops > plain.flops + traffic.path_flops(d) - 1
+    assert epi.bytes_moved - plain.bytes_moved == 2 * d.H * itemsize
+    # unfused composition backward pays full-tensor passes instead
+    unfused = traffic.epilogue_unfused_bwd_traffic(d, itemsize, epilogue="bias+silu")
+    slab = d.B * d.H * d.L * itemsize
+    assert unfused.bytes_moved - traffic.bwd_split_traffic(d, itemsize).bytes_moved \
+        >= 4 * slab  # act bwd (3 slabs) + dbias reduction (1 slab)
+
+
+def test_block_traffic_gate_shape_passes():
+    d = DWConvDims(B=32, H=128, L=48, K=48)
+    for epi in ("gelu", "bias+silu"):
+        fused = traffic.epilogue_block_traffic(d, epilogue=epi, fused=True)
+        unfused = traffic.epilogue_block_traffic(d, epilogue=epi, fused=False)
+        assert fused.bytes_moved <= 0.75 * unfused.bytes_moved
+
+
+# ---------------------------------------------------------------------------
+# timer satellite
+# ---------------------------------------------------------------------------
+
+
+def test_time_fn_validates_iters_and_trims():
+    from repro.analysis.timer import time_fn
+
+    with pytest.raises(ValueError, match="iters >= 1"):
+        time_fn(lambda: 0, iters=0)
+    with pytest.raises(ValueError, match="trim"):
+        time_fn(lambda: 0, iters=2, trim=0.5)
+    t = time_fn(lambda: 0, warmup=0, iters=10, trim=0.2)
+    assert len(t.samples) == 10
+    kept = sorted(t.samples)[2:8]
+    assert t.mean_s == pytest.approx(sum(kept) / len(kept))
+    assert t.median_us == pytest.approx(t.median_s * 1e6)
