@@ -1,33 +1,18 @@
-"""Published measurements from the paper, used to validate the counter-free
-analysis pipeline against the paper's own numbers (Tables II/III, Fig. 10).
+"""Published measurements from the paper (Tables II/III, Fig. 10).
 
-All runtimes in milliseconds, steady-state (epochs 2-5, warm-up excluded),
-NVIDIA P100, (B, H, L, K) = (16384, 128, 48, 48), float32.
+Canonical home: ``repro.analysis.paper_data`` (importable by the
+``repro.launch.report`` CLI without depending on this benchmarks tree);
+re-exported here because every ``benchmarks/paper_*`` module historically
+imports them from this module.
 """
-from repro.kernels.common import DWConvDims
-
-PAPER_DIMS = DWConvDims(B=16384, H=128, L=48, K=48)
-
-# Table II — per-path kernel runtimes (ms) + epoch time (s).
-TABLE2_MS = {
-    #            FWD    BWD_in  BWD_k   conv_total  epoch_s
-    "naive":  (29.97, 30.25, 73.26, 133.47, 44.82),
-    "gmc":    (28.23, 28.78, 49.64, 106.65, 40.31),
-    "shared": (16.36, 16.03, 34.17, 66.57, 36.91),
-    "warp":   (10.46, 10.61, 19.91, 40.99, 34.74),
-}
-
-# Appendix A — PyTorch grouped-conv1d reference runtimes (ms).
-PYTORCH_MS = {"fwd": 28.44, "bwd_in": 25.62, "bwd_k": 141.73, "total": 195.79}
-
-# Table III — the paper's counter-free effective-bandwidth estimates (GB/s).
-TABLE3_GBPS = {"naive": None, "gmc": 42.0, "shared": 75.0, "warp": 115.0}
-
-# Headline claims to reproduce.
-CLAIM_KERNEL_SPEEDUP = 3.26   # warp vs naive, conv total
-CLAIM_EPOCH_SPEEDUP = 1.29    # warp vs naive, end-to-end
-CLAIM_BWDK_SPEEDUP = 3.68     # weight-gradient path speedup
-CLAIM_FWD_SPEEDUP = 2.9       # forward ~2.9x
-
-# Map paper variant names -> this framework's TPU kernel variants.
-PAPER_TO_TPU = {"naive": "naive", "gmc": "lane", "shared": "block", "warp": "row"}
+from repro.analysis.paper_data import (  # noqa: F401
+    CLAIM_BWDK_SPEEDUP,
+    CLAIM_EPOCH_SPEEDUP,
+    CLAIM_FWD_SPEEDUP,
+    CLAIM_KERNEL_SPEEDUP,
+    PAPER_DIMS,
+    PAPER_TO_TPU,
+    PYTORCH_MS,
+    TABLE2_MS,
+    TABLE3_GBPS,
+)

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis import traffic
+from repro import perfmodel
 from repro.analysis.hw import TPU_V5E
 from repro.analysis.timer import time_fn
 from repro.core import dwconv as dw
@@ -60,21 +60,21 @@ def modeled_rows() -> List[Row]:
     rows: List[Row] = []
     worst = 0.0
     for epi in CALL_SITE_EPILOGUES:
-        ests = {
-            "fused": traffic.epilogue_block_traffic(EPI_DIMS, epilogue=epi, fused=True),
-            "unfused": traffic.epilogue_block_traffic(EPI_DIMS, epilogue=epi, fused=False),
+        points = {
+            name: perfmodel.roofline_point(
+                perfmodel.epilogue_block_schedule(EPI_DIMS, epilogue=epi,
+                                                  fused=fused), hw)
+            for name, fused in (("fused", True), ("unfused", False))
         }
-        for name, est in ests.items():
-            compute_s = est.flops / hw.peak_flops_f32
-            memory_s = est.bytes_moved / hw.hbm_bw
+        for name, p in points.items():
             rows.append(Row(
                 f"paper_epilogue/modeled/{epi}/{name}",
-                max(compute_s, memory_s) * 1e6,
-                f"bytes={est.bytes_moved / 1e6:.3f}MB "
-                f"AI={est.arithmetic_intensity:.2f} "
-                f"roofline={'memory' if memory_s >= compute_s else 'compute'}-bound",
+                p.runtime_s * 1e6,
+                f"bytes={p.bytes_moved / 1e6:.3f}MB "
+                f"AI={p.arithmetic_intensity:.2f} "
+                f"roofline={p.regime}",
             ))
-        ratio = ests["fused"].bytes_moved / ests["unfused"].bytes_moved
+        ratio = points["fused"].bytes_moved / points["unfused"].bytes_moved
         worst = max(worst, ratio)
         rows.append(Row(
             f"paper_epilogue/modeled/{epi}/ratio", 0.0,

@@ -1,19 +1,22 @@
 """Paper Fig. 10 analogue: roofline placement of every (variant x path) point.
 
-Counter-free construction (paper §III-G): FLOPs from eqs. (2)-(3), bytes from
-the analytical traffic model, runtimes from the paper's Table II, roofs from
-the P100 datasheet (732 GB/s, 10.6 TFLOP/s fp32).  The reproduction target
-is the paper's qualitative result: *every* variant/path stays in the
-memory-bound regime, with shared/warp shifted up and slightly right.
+Counter-free construction (paper §III-G): FLOPs from eqs. (2)-(3), bytes
+derived from the registered kernel schedules (``repro.perfmodel``),
+runtimes from the paper's Table II, roofs from the P100 datasheet
+(732 GB/s, 10.6 TFLOP/s fp32).  The rows are rendered from
+``analysis/report.paper_roofline_points`` — the same derivation the
+``python -m repro.launch.report`` CLI emits, so the benchmark and the
+report cannot diverge.  The reproduction target is the paper's qualitative
+result: *every* variant/path stays in the memory-bound regime, with
+shared/warp shifted up and slightly right.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List
 
-from benchmarks.paper_constants import PAPER_DIMS, TABLE2_MS
 from repro.analysis.hw import P100
-from repro.analysis.traffic import paper_bwdk_traffic, paper_fwd_traffic, path_flops
+from repro.analysis.report import paper_roofline_points
 
 
 @dataclasses.dataclass
@@ -26,27 +29,21 @@ class Row:
 def run(fast: bool = False) -> List[Row]:
     rows: List[Row] = []
     knee = P100.roofline_knee()
-    flops = path_flops(PAPER_DIMS)
-    for variant, (fwd_ms, bin_ms, bk_ms, _, _) in TABLE2_MS.items():
-        for path, ms in (("fwd", fwd_ms), ("bwd_in", bin_ms), ("bwd_k", bk_ms)):
-            est = (paper_bwdk_traffic if path == "bwd_k" else paper_fwd_traffic)(PAPER_DIMS, variant)
-            gflops = flops / (ms / 1e3) / 1e9
-            if est.reliable:
-                ai = est.arithmetic_intensity
-                mem_roof_gflops = ai * P100.hbm_bw / 1e9
-                regime = "memory-bound" if ai < knee else "compute-bound"
-                assert regime == "memory-bound", (variant, path, ai)
-                assert gflops < P100.peak_flops / 1e9, "must stay below compute roof"
-                rows.append(Row(
-                    f"paper_roofline/{variant}/{path}", ms * 1e3,
-                    f"AI={ai:.2f}FLOP/B achieved={gflops:.0f}GFLOP/s "
-                    f"roof@AI={mem_roof_gflops:.0f}GFLOP/s {regime}",
-                ))
-            else:
-                rows.append(Row(
-                    f"paper_roofline/{variant}/{path}", ms * 1e3,
-                    f"achieved={gflops:.0f}GFLOP/s AI=N/A (naive proxy) memory-bound",
-                ))
+    for p in paper_roofline_points():
+        if p.reliable:
+            assert p.regime == "memory-bound", (p.variant, p.path, p.arithmetic_intensity)
+            assert p.achieved_gflops < P100.peak_flops / 1e9, "must stay below compute roof"
+            rows.append(Row(
+                f"paper_roofline/{p.variant}/{p.path}", p.runtime_s * 1e6,
+                f"AI={p.arithmetic_intensity:.2f}FLOP/B "
+                f"achieved={p.achieved_gflops:.0f}GFLOP/s "
+                f"roof@AI={p.roof_gflops:.0f}GFLOP/s {p.regime}",
+            ))
+        else:
+            rows.append(Row(
+                f"paper_roofline/{p.variant}/{p.path}", p.runtime_s * 1e6,
+                f"achieved={p.achieved_gflops:.0f}GFLOP/s AI=N/A (naive proxy) memory-bound",
+            ))
     rows.append(Row("paper_roofline/summary", 0.0,
                     f"knee={knee:.1f}FLOP/B all points memory-bound REPRODUCED"))
     return rows

@@ -1,6 +1,8 @@
 """Roofline table generator (deliverable g): reads the dry-run records and
 emits the per-(arch x shape x mesh) three-term table as markdown + CSV rows
-for EXPERIMENTS.md §Roofline.
+for EXPERIMENTS.md §Roofline — plus the kernel-level roofline rows derived
+from the registered kernel schedules (``repro.perfmodel``), so this module
+and ``repro.launch.report`` place the conv kernels from one computation.
 """
 from __future__ import annotations
 
@@ -56,10 +58,35 @@ def markdown_table(mesh: str = "pod1x16x16") -> str:
     return "\n".join(lines)
 
 
-def run(fast: bool = False) -> List[Row]:
+def kernel_rows() -> List[Row]:
+    """Schedule-derived roofline placement of the conv kernels at the paper
+    shape (the same derivation ``repro.launch.report`` renders)."""
+    from repro.analysis.hw import TPU_V5E
+    from repro.analysis.paper_data import PAPER_DIMS
+    from repro.analysis.report import counter_free_report
+
+    payload = counter_free_report(PAPER_DIMS, hw=TPU_V5E,
+                                  include_paper=False, include_epilogue=False)
     rows: List[Row] = []
+    for r in payload["roofline"]:
+        ai = "N/A" if r["arithmetic_intensity"] is None \
+            else f"{r['arithmetic_intensity']:.2f}"
+        bw = "N/A" if r["effective_bandwidth"] is None \
+            else f"{r['effective_bandwidth'] / 1e9:.1f}GB/s"
+        rows.append(Row(
+            f"roofline_table/kernel/{r['study']}/{r['path']}",
+            r["runtime_s"] * 1e6,
+            f"AI={ai}FLOP/B regime={r['regime'] or 'N/A'} eff_bw={bw} "
+            f"bytes={r['bytes_moved'] / 1e9:.3f}GB (schedule-derived)",
+        ))
+    return rows
+
+
+def run(fast: bool = False) -> List[Row]:
+    rows: List[Row] = kernel_rows()
     if not RESULTS.exists():
-        return [Row("roofline_table/missing", 0.0, "run repro.launch.dryrun first")]
+        return rows + [Row("roofline_table/missing", 0.0,
+                           "run repro.launch.dryrun first")]
     for mesh in ("pod1x16x16", "pod2x16x16"):
         for r in load_records(mesh):
             rows.append(Row(

@@ -32,6 +32,7 @@ MODULE_NAMES = [
     "paper_table2",
     "paper_table3",
     "paper_roofline",
+    "paper_report",
     "paper_validation",
     "paper_autotune",
     "paper_fused_bwd",
@@ -46,6 +47,7 @@ MODULE_NAMES = [
 _STABLE_METRIC_KEYS = (
     "fused_vs_split_backward_speedup",
     "epilogue_fused_speedup",
+    "report_memory_bound_fraction",
 )
 
 

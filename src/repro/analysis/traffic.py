@@ -10,47 +10,32 @@ that is unobservable without counters, so — exactly as the paper does —
 
 FLOP counts follow paper eqs. (2)-(3): every multiply-add pair is 2 FLOPs,
 so all three paths count  B * H * L * 2K.
+
+Since the ``perfmodel`` refactor, every function here is a thin wrapper:
+the byte/transaction accounting lives in the declarative
+:class:`~repro.perfmodel.schedule.KernelSchedule` registered per kernel
+variant (``repro/perfmodel/schedules.py``), and this module just derives
+the :class:`TrafficEstimate` from it.  The historical signatures are kept
+because the benchmarks, tests, and tuner all call them; the golden
+equivalence suite (``tests/test_perfmodel_golden.py``) pins the derived
+numbers to integer-byte equality with the pre-refactor formulas.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
-from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
-
-
-@dataclasses.dataclass(frozen=True)
-class TrafficEstimate:
-    """Modeled HBM traffic for one (variant, path) execution."""
-
-    flops: float
-    bytes_read: float
-    bytes_written: float
-    transactions: float          # DMA count (structural, from the kernel)
-    aligned: bool                # lane-aligned transactions?
-    reliable: bool               # paper: naive redundant traffic is a proxy only
-
-    @property
-    def bytes_moved(self) -> float:
-        return self.bytes_read + self.bytes_written
-
-    @property
-    def arithmetic_intensity(self) -> float:
-        return self.flops / max(self.bytes_moved, 1.0)
-
-
-def path_flops(d: DWConvDims) -> float:
-    """Paper eqs. (2)-(3): identical op count on all three paths."""
-    return 2.0 * d.B * d.H * d.L * d.K
-
-
-def _tile_geometry(d: DWConvDims, block_h: int, block_t: int):
-    Hb = min(block_h, d.H)
-    Lout = round_up(d.L, LANE)
-    Lt = min(block_t, Lout)
-    nT = cdiv(Lout, Lt)
-    n_tiles = d.B * cdiv(d.H, Hb) * nT
-    return Hb, Lout, Lt, nT, n_tiles
+from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import parse_epilogue  # noqa: F401  (re-export)
+from repro.perfmodel import (
+    ACT_FLOPS_PER_ELEM,  # noqa: F401  (re-export: historical home)
+    PAPER_VARIANTS,  # noqa: F401  (re-export)
+    TrafficEstimate,  # noqa: F401  (re-export: historical home)
+    derive_traffic,
+    epilogue_block_schedule,
+    path_flops,  # noqa: F401  (re-export)
+    schedule_for,
+    unfused_epilogue_bwd_schedule,
+)
 
 
 def fwd_traffic(
@@ -61,69 +46,8 @@ def fwd_traffic(
     block_t: int = 512,
 ) -> TrafficEstimate:
     """Forward path (and, by kernel symmetry, the input-gradient path)."""
-    Hb, Lout, Lt, nT, n_tiles = _tile_geometry(d, block_h, block_t)
-    flops = path_flops(d)
-    y_bytes = d.B * d.H * d.L * itemsize
-    k_bytes_once = d.H * d.K * itemsize
-
-    if variant == "naive":
-        # K unaligned per-tap DMAs of an (Hb, Lt) window per output tile.
-        # Filter reads are charged uniformly across variants: one logical
-        # pass over the (H, K) filter bank.
-        read = n_tiles * d.K * (Hb * Lt) * itemsize + k_bytes_once
-        tx = n_tiles * d.K
-        return TrafficEstimate(flops, read, y_bytes, tx, aligned=False, reliable=False)
-    if variant == "lane":
-        # Same per-tap redundancy; windows widened to lane alignment.
-        read = n_tiles * d.K * (Hb * (Lt + LANE)) * itemsize + k_bytes_once
-        tx = n_tiles * d.K
-        return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
-    if variant == "block":
-        # Current + neighbour halo tile staged in VMEM per output tile.
-        read = n_tiles * 2 * (Hb * Lt) * itemsize + k_bytes_once
-        tx = n_tiles * 2
-        return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
-    if variant == "row":
-        # Full row staged once: every input element crosses HBM once.
-        read = d.B * d.H * (Lout + d.K - 1) * itemsize + k_bytes_once
-        tx = d.B * cdiv(d.H, Hb)
-        return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
-    if variant == "xla":
-        # Fused elementwise loop: x once, y once (upper bound: XLA may fuse
-        # the pad away; we model the logical minimum, like the paper's
-        # PyTorch runtime context).
-        read = d.B * d.H * (d.L + d.K - 1) * itemsize + k_bytes_once
-        return TrafficEstimate(flops, read, y_bytes, 0, aligned=True, reliable=True)
-    raise ValueError(variant)
-
-
-def _bwd_tiles(d: DWConvDims, variant: str, block_t: int):
-    """(nT, halo_elems_per_operand) for a staged bwd kernel.
-
-    ``nT`` is the time-tile count the kernel actually runs (1 = untiled, the
-    pre-``block_t`` behaviour); the halo term charges the K-1 columns every
-    interior tile seam re-reads — the redundancy the tuner trades against
-    per-cell footprint when it shrinks ``block_t``.
-
-    This models the *design's* haloed ``(Bc, Hb, Lt + K - 1)`` slab (the
-    traffic a manual halo DMA would move).  The current BlockSpec
-    realization binds a full neighbour tile instead — an implementation
-    ceiling that re-reads ~Lt columns per seam, like the fwd ``block``
-    variant's 2x-tile charge — but on the tuner's axis the *ordering* of
-    block_t candidates is set by the seam count either way, and the logical
-    model is what the paper's counter-free methodology prescribes for
-    redundancy a better realization (or a cache) absorbs.  The transaction
-    term does count the physical per-cell block binds, so the DMA-issue
-    cost of small tiles is not hidden.
-    """
-    from repro.kernels.ops import bwdk_time_tile
-
-    Lt = bwdk_time_tile(d.L, d.K, block_t, variant)
-    if Lt is None:
-        return 1, 0
-    nT = cdiv(round_up(d.L, LANE), Lt)
-    halo = d.B * d.H * (nT - 1) * (d.K - 1)
-    return nT, halo
+    return derive_traffic(schedule_for(
+        "fwd", variant, d, itemsize, block_h=block_h, block_t=block_t))
 
 
 def bwdk_traffic(
@@ -135,53 +59,9 @@ def bwdk_traffic(
     batch_chunk: int = 128,
 ) -> TrafficEstimate:
     """Weight-gradient path: reduction over the (B x L) domain."""
-    flops = path_flops(d)
-    Hb = min(block_h, d.H)
-    Bc = min(batch_chunk, d.B)
-    nC = cdiv(d.B, Bc)
-    nH = cdiv(d.H, Hb)
-    Kp = round_up(d.K, LANE)
-    slab = d.B * d.H * d.L * itemsize  # one full pass over x (or dy)
-    dk_bytes = d.H * d.K * itemsize
-    nT, halo = _bwd_tiles(d, variant, block_t)
-    halo_bytes = halo * itemsize  # x halo re-read at every interior tile seam
-    in_blocks = 3 if nT > 1 else 2  # tiled cells bind (x_cur, x_next, dy)
-
-    if variant == "naive":
-        # Both operands re-read per tap; no reuse across the K taps.
-        read = 2 * d.K * slab
-        tx = nH * nC * d.K * 2
-        return TrafficEstimate(flops, read, dk_bytes, tx, aligned=False, reliable=False)
-    if variant == "twostage":
-        # One staged pass over both operands; partials round-trip HBM
-        # (one partial block per (chunk, time-tile) in the tiled regime).
-        partials = nC * nT * d.H * Kp * 4  # f32 partials
-        read = 2 * slab + halo_bytes + partials
-        tx = nH * nC * nT * in_blocks + nH * nC * nT
-        return TrafficEstimate(flops, read, dk_bytes + partials, tx, aligned=True, reliable=True)
-    if variant == "accum":
-        # One staged pass; accumulator lives in VMEM across the sequential grid.
-        read = 2 * slab + halo_bytes
-        tx = nH * nC * nT * in_blocks
-        return TrafficEstimate(flops, read, dk_bytes, tx, aligned=True, reliable=True)
-    if variant == "xla":
-        read = 2 * slab
-        return TrafficEstimate(flops, read, dk_bytes, 0, aligned=True, reliable=True)
-    raise ValueError(variant)
-
-
-# ---------------------------------------------------------------------------
-# Whole-backward accounting: fused single pass vs the split two-op path.
-#
-# Unlike the per-kernel models above, these charge the *padded-layout
-# materialization* traffic (each ``jnp.pad`` reads its source and writes the
-# padded buffer to HBM) — that is exactly the traffic the fusion removes, so
-# a fused-vs-split comparison that ignored it would miss the point.  The
-# split backward materializes three layouts (dy in the adjoint layout, x
-# re-padded, dy again in the forward-aligned layout) and reads dy from HBM
-# twice; the fused backward materializes one dy layout, reuses the forward's
-# padded x residual verbatim, and reads each operand once.
-# ---------------------------------------------------------------------------
+    return derive_traffic(schedule_for(
+        "bwd_k", variant, d, itemsize,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk))
 
 
 def bwd_split_traffic(
@@ -193,26 +73,12 @@ def bwd_split_traffic(
     block_t: int = 512,
     batch_chunk: int = 128,
 ) -> TrafficEstimate:
-    """Total modeled backward traffic for the split (bwd_in + bwd_k) path."""
-    est_in = fwd_traffic(d, bwd_in_variant, itemsize,
-                         block_h=block_h, block_t=block_t)
-    est_k = bwdk_traffic(d, bwd_k_variant, itemsize,
-                         block_h=block_h, block_t=block_t,
-                         batch_chunk=batch_chunk)
-    slab = d.B * d.H * d.L * itemsize
-    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize  # one padded layout
-    # Three pad materializations: dy -> adjoint layout, x -> x_pad,
-    # dy -> forward-aligned layout (each: read source, write padded buffer).
-    pad_read = 3 * slab
-    pad_written = 2 * pslab + slab
-    return TrafficEstimate(
-        flops=est_in.flops + est_k.flops,
-        bytes_read=pad_read + est_in.bytes_read + est_k.bytes_read,
-        bytes_written=pad_written + est_in.bytes_written + est_k.bytes_written,
-        transactions=est_in.transactions + est_k.transactions + 3,
-        aligned=est_in.aligned and est_k.aligned,
-        reliable=est_in.reliable and est_k.reliable,
-    )
+    """Total modeled backward traffic for the split (bwd_in + bwd_k) path,
+    with the three padded-layout materializations charged."""
+    return derive_traffic(schedule_for(
+        "bwd_fused", "split", d, itemsize,
+        bwd_in_variant=bwd_in_variant, bwd_k_variant=bwd_k_variant,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk))
 
 
 def bwd_fused_traffic(
@@ -225,68 +91,9 @@ def bwd_fused_traffic(
 ) -> TrafficEstimate:
     """Backward traffic for the fused single-pass kernels (``"split"`` maps
     to :func:`bwd_split_traffic` so the tuner compares like with like)."""
-    if variant == "split":
-        return bwd_split_traffic(d, itemsize, block_h=block_h,
-                                 block_t=block_t, batch_chunk=batch_chunk)
-    flops = 2.0 * path_flops(d)  # dx taps + dk reduction
-    Hb = min(block_h, d.H)
-    Bc = min(batch_chunk, d.B)
-    nC = cdiv(d.B, Bc)
-    nH = cdiv(d.H, Hb)
-    slab = d.B * d.H * d.L * itemsize
-    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
-    k_bytes = d.H * d.K * itemsize
-    dk_bytes = d.H * d.K * itemsize
-    # Time tiling re-reads the K-1 halo columns of BOTH staged operands at
-    # every interior tile seam (the fused slabs are haloed x *and* dy).
-    nT, halo = _bwd_tiles(d, variant, block_t)
-    halo_bytes = 2 * halo * itemsize
-    in_blocks = 5 if nT > 1 else 3  # tiled: (x_cur, x_next, dy_cur, dy_next, k)
-    # One pad materialization (dy, single unified layout); the forward's
-    # x_pad residual is reused verbatim — zero backward pad cost for x.
-    read = slab + 2 * pslab + k_bytes + halo_bytes  # pad src + x_pad + dy_pad + k
-    written = pslab + slab + dk_bytes   # dy_pad + dx + dk
-    tx = nH * nC * nT * in_blocks + 1
-    if variant == "fused_partials":
-        partials = nC * nT * d.H * round_up(d.K, LANE) * 4  # f32 HBM round-trip
-        read += partials
-        written += partials
-        tx += nH * nC * nT
-    elif variant != "fused":
-        raise ValueError(variant)
-    return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
-
-
-# ---------------------------------------------------------------------------
-# Epilogue accounting: fused bias/activation vs standalone elementwise ops.
-#
-# Every model-level call site composes the conv with a per-channel bias add
-# and/or a pointwise activation.  Run standalone, each op is one full-tensor
-# HBM read + write in the forward, and the activation backward costs a
-# further read of dy, a read of the saved pre-activation residual, and a
-# write of the effective gradient.  The fused epilogue moves *none* of
-# those bytes: the forward applies the ops in-register before the single
-# write, and the backward recomputes the pre-activation from the staged
-# slab (K extra MACs per element — flops, not bytes) — so the modeled
-# difference between the fused and unfused compositions is exactly the
-# standalone elementwise traffic.
-# ---------------------------------------------------------------------------
-
-from repro.kernels.epilogue import parse_epilogue
-
-# Pointwise-activation cost proxy (tanh/sigmoid polynomial, value or
-# derivative) — a flop ordering term, not a calibrated count.
-ACT_FLOPS_PER_ELEM = 10.0
-
-
-def _epilogue_n_ops(bias: bool, act: str) -> int:
-    """Standalone elementwise passes the unfused composition runs forward."""
-    return (1 if bias else 0) + (1 if act != "none" else 0)
-
-
-def _epilogue_flops(d: DWConvDims, bias: bool, act: str) -> float:
-    elems = d.B * d.H * d.L
-    return (elems if bias else 0.0) + (ACT_FLOPS_PER_ELEM * elems if act != "none" else 0.0)
+    return derive_traffic(schedule_for(
+        "bwd_fused", variant, d, itemsize,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk))
 
 
 def epilogue_fwd_traffic(
@@ -306,19 +113,9 @@ def epilogue_fwd_traffic(
     composition one extra full-tensor read + write per standalone op, so
     ``unfused - fused == n_ops * 2 * B*H*L * itemsize`` exactly.
     """
-    bias, act = parse_epilogue(epilogue)
-    base = fwd_traffic(d, variant, itemsize, block_h=block_h, block_t=block_t)
-    bias_bytes = d.H * itemsize if bias else 0
-    flops = base.flops + _epilogue_flops(d, bias, act)
-    if fused:
-        return dataclasses.replace(
-            base, flops=flops, bytes_read=base.bytes_read + bias_bytes)
-    n_ops = _epilogue_n_ops(bias, act)
-    slab = d.B * d.H * d.L * itemsize
-    return dataclasses.replace(
-        base, flops=flops,
-        bytes_read=base.bytes_read + bias_bytes + n_ops * slab,
-        bytes_written=base.bytes_written + n_ops * slab)
+    return derive_traffic(schedule_for(
+        "fwd", variant, d, itemsize, epilogue=epilogue, fused=fused,
+        block_h=block_h, block_t=block_t))
 
 
 def epilogue_bwd_traffic(
@@ -338,67 +135,14 @@ def epilogue_bwd_traffic(
     pre-activation recompute adds one ``path_flops`` of MACs and — in the
     tiled regime — the extended x window binds a *third* (prev) tile, so
     three haloed operand reads cross every interior seam instead of two.
-    No pre-activation residual is read and no standalone pass runs; the
-    only new bytes are the bias vector in and the dbias vector out.
-
     ``variant="split"`` maps to the activation-*recompute* split
     composition that ``ops.dwconv_bwd_fused_act_op`` actually runs on that
-    path (one standalone pre-activation pass + effective-gradient pass +
-    the split two-op backward), so fused-vs-split stays like for like on
-    the tuner's epilogue-aware ``bwd_fused`` axis.
+    path, so fused-vs-split stays like for like on the tuner's
+    epilogue-aware ``bwd_fused`` axis.
     """
-    bias, act = parse_epilogue(epilogue)
-    if epilogue == "none":
-        return bwd_fused_traffic(d, variant, itemsize, block_h=block_h,
-                                 block_t=block_t, batch_chunk=batch_chunk)
-    slab = d.B * d.H * d.L * itemsize
-    if variant == "split":
-        base = bwd_split_traffic(d, itemsize, block_h=block_h,
-                                 block_t=block_t, batch_chunk=batch_chunk)
-        # pre recompute (conv + bias, one pass) ...
-        pre = fwd_traffic(d, "row", itemsize, block_h=block_h, block_t=block_t)
-        # ... + effective-gradient pass (read dy + pre, write dy_eff) + the
-        # dbias reduction over dy_eff.
-        extra_read = pre.bytes_read + 2 * slab + (slab if bias else 0)
-        extra_written = pre.bytes_written + slab + (d.H * itemsize if bias else 0)
-        return dataclasses.replace(
-            base,
-            flops=base.flops + pre.flops + _epilogue_flops(d, bias, act),
-            bytes_read=base.bytes_read + extra_read,
-            bytes_written=base.bytes_written + extra_written,
-            transactions=base.transactions + pre.transactions + 2)
-    if variant not in ("fused", "fused_partials"):
-        raise ValueError(variant)
-    from repro.kernels.ops import epilogue_time_tile
-
-    flops = 3.0 * path_flops(d) + _epilogue_flops(d, bias, act)  # dx + dk + recompute
-    Hb = min(block_h, d.H)
-    Bc = min(batch_chunk, d.B)
-    nC = cdiv(d.B, Bc)
-    nH = cdiv(d.H, Hb)
-    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
-    k_bytes = d.H * d.K * itemsize
-    dk_bytes = d.H * d.K * itemsize
-    bias_bytes = d.H * itemsize if bias else 0
-    Lt = epilogue_time_tile(d.L, d.K, block_t, variant)
-    if Lt is None:
-        nT, halo = 1, 0
-    else:
-        nT = cdiv(round_up(d.L, LANE), Lt)
-        halo = d.B * d.H * (nT - 1) * (d.K - 1)
-    # Tiled: x binds prev+cur+next (two haloed seam re-reads) and dy
-    # cur+next (one) — three halo charges vs the trivial kernels' two.
-    halo_bytes = 3 * halo * itemsize
-    in_blocks = (7 if bias else 6) if nT > 1 else (4 if bias else 3)
-    read = slab + 2 * pslab + k_bytes + bias_bytes + halo_bytes
-    written = pslab + slab + dk_bytes + bias_bytes  # dy_pad + dx + dk + dbias
-    tx = nH * nC * nT * in_blocks + 1
-    if variant == "fused_partials":
-        partials = nC * nT * d.H * (round_up(d.K, LANE) + LANE) * 4  # dk + dbias blocks
-        read += partials
-        written += partials
-        tx += nH * nC * nT
-    return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
+    return derive_traffic(schedule_for(
+        "bwd_fused", variant, d, itemsize, epilogue=epilogue,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk))
 
 
 def epilogue_unfused_bwd_traffic(
@@ -411,26 +155,11 @@ def epilogue_unfused_bwd_traffic(
     batch_chunk: int = 128,
 ) -> TrafficEstimate:
     """Backward traffic of the *unfused composition* under ordinary autodiff
-    (``jax.vjp`` of conv -> bias add -> act): the activation backward reads
-    dy and the saved pre-activation residual and writes the effective
-    gradient, the dbias reduction re-reads it, and the split two-op
-    backward consumes it.  This is the baseline the epilogue gate compares
-    against (the residual's forward-side write is charged by
-    ``epilogue_fwd_traffic(fused=False)``)."""
-    bias, act = parse_epilogue(epilogue)
-    base = bwd_split_traffic(d, itemsize, block_h=block_h, block_t=block_t,
-                             batch_chunk=batch_chunk)
-    slab = d.B * d.H * d.L * itemsize
-    # act backward: read dy + read pre residual, write dy_eff (2R + 1W);
-    # dbias reduction (bias only): re-read dy_eff, write the (H,) vector.
-    extra_read = (2 * slab if act != "none" else 0) + (slab if bias else 0)
-    extra_written = (slab if act != "none" else 0) + (d.H * itemsize if bias else 0)
-    return dataclasses.replace(
-        base,
-        flops=base.flops + _epilogue_flops(d, bias, act),
-        bytes_read=base.bytes_read + extra_read,
-        bytes_written=base.bytes_written + extra_written,
-        transactions=base.transactions + _epilogue_n_ops(bias, act))
+    (``jax.vjp`` of conv -> bias add -> act) — the baseline the epilogue
+    gate compares against."""
+    return derive_traffic(unfused_epilogue_bwd_schedule(
+        d, itemsize, epilogue=epilogue,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk))
 
 
 def epilogue_block_traffic(
@@ -447,24 +176,10 @@ def epilogue_block_traffic(
 ) -> TrafficEstimate:
     """Whole-block (forward + backward) traffic for one conv + epilogue:
     the quantity the ``paper_epilogue`` gate compares fused vs unfused."""
-    fwd = epilogue_fwd_traffic(d, fwd_variant, itemsize, epilogue=epilogue,
-                               fused=fused, block_h=block_h, block_t=block_t)
-    if fused:
-        bwd = epilogue_bwd_traffic(d, bwd_variant, itemsize, epilogue=epilogue,
-                                   block_h=block_h, block_t=block_t,
-                                   batch_chunk=batch_chunk)
-    else:
-        bwd = epilogue_unfused_bwd_traffic(d, itemsize, epilogue=epilogue,
-                                           block_h=block_h, block_t=block_t,
-                                           batch_chunk=batch_chunk)
-    return TrafficEstimate(
-        flops=fwd.flops + bwd.flops,
-        bytes_read=fwd.bytes_read + bwd.bytes_read,
-        bytes_written=fwd.bytes_written + bwd.bytes_written,
-        transactions=fwd.transactions + bwd.transactions,
-        aligned=fwd.aligned and bwd.aligned,
-        reliable=fwd.reliable and bwd.reliable,
-    )
+    return derive_traffic(epilogue_block_schedule(
+        d, itemsize, epilogue=epilogue, fused=fused,
+        fwd_variant=fwd_variant, bwd_variant=bwd_variant,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk))
 
 
 # ---------------------------------------------------------------------------
@@ -475,44 +190,13 @@ def epilogue_block_traffic(
 # explicit-DMA TPU variants move.  Variant names here are the paper's.
 # ---------------------------------------------------------------------------
 
-PAPER_VARIANTS = ("naive", "gmc", "shared", "warp")
-_WARP_SIZE = 32
-_SHARED_TPB = 128  # paper §IV-D temporal tile
-
 
 def paper_fwd_traffic(d: DWConvDims, variant: str, itemsize: int = 4) -> TrafficEstimate:
-    flops = path_flops(d)
-    slab = d.B * d.H * d.L * itemsize
-    k_bytes = d.H * d.K * itemsize
-    if variant == "naive":
-        # Realized traffic unobservable without counters: logical lower bound
-        # as proxy, flagged unreliable (paper Table III "N/A").
-        return TrafficEstimate(flops, slab + k_bytes, slab, 0, aligned=False, reliable=False)
-    if variant == "gmc":
-        # Warp-level reuse only: redundancy K / min(K, warp) survives caches.
-        rho = d.K / min(d.K, _WARP_SIZE)
-        return TrafficEstimate(flops, rho * slab + k_bytes, slab, 0, aligned=True, reliable=True)
-    if variant == "shared":
-        rho = (_SHARED_TPB + d.K - 1) / _SHARED_TPB  # halo per TPB tile
-        return TrafficEstimate(flops, rho * slab + k_bytes, slab, 0, aligned=True, reliable=True)
-    if variant == "warp":
-        # Full row staged once; halo is zero padding (no HBM reads).
-        return TrafficEstimate(flops, slab + k_bytes, slab, 0, aligned=True, reliable=True)
-    raise ValueError(variant)
+    return derive_traffic(schedule_for("paper_fwd", variant, d, itemsize))
 
 
 def paper_bwdk_traffic(d: DWConvDims, variant: str, itemsize: int = 4) -> TrafficEstimate:
-    flops = path_flops(d)
-    slab = d.B * d.H * d.L * itemsize
-    dk = d.H * d.K * itemsize
-    if variant == "naive":
-        # Sequential accumulation over B x L per (h, j): K x redundant logical
-        # traffic, realized value cache-dependent -> unreliable proxy.
-        return TrafficEstimate(flops, 2 * slab, dk, 0, aligned=False, reliable=False)
-    # gmc/shared/warp all restructure into chunked two-stage reductions:
-    n_chunks = max(d.B // 128, 1)
-    partials = n_chunks * d.H * d.K * 4 * 2  # write + re-read in stage 2
-    return TrafficEstimate(flops, 2 * slab + partials / 2, dk + partials / 2, 0, aligned=True, reliable=True)
+    return derive_traffic(schedule_for("paper_bwd_k", variant, d, itemsize))
 
 
 def paper_total_traffic(d: DWConvDims, variant: str, itemsize: int = 4) -> float:
@@ -529,16 +213,19 @@ def variant_traffic_table(
     the paper's Table III / Fig. 10 analogues."""
     from repro.core.variant import REGISTRY
 
+    fwd_kw = {k: v for k, v in tiling.items() if k in ("block_h", "block_t")}
+    bwd_kw = {k: v for k, v in tiling.items()
+              if k in ("block_h", "block_t", "batch_chunk")}
     out: Dict[str, Dict[str, TrafficEstimate]] = {}
     for name, spec in REGISTRY.items():
         if spec.fwd == "auto":  # cache-dependent dispatch: no static model
             continue
-        fwd = fwd_traffic(d, spec.fwd, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t")})
-        bwd_in = fwd_traffic(d, spec.bwd_in, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t")})
-        bwd_k = bwdk_traffic(d, spec.bwd_k, itemsize, **{k: v for k, v in tiling.items() if k in ("block_h", "block_t", "batch_chunk")})
-        out[name] = {"fwd": fwd, "bwd_in": bwd_in, "bwd_k": bwd_k}
+        out[name] = {
+            "fwd": fwd_traffic(d, spec.fwd, itemsize, **fwd_kw),
+            "bwd_in": fwd_traffic(d, spec.bwd_in, itemsize, **fwd_kw),
+            "bwd_k": bwdk_traffic(d, spec.bwd_k, itemsize, **bwd_kw),
+        }
         if spec.bwd == "fused":
             out[name]["bwd_fused"] = bwd_fused_traffic(
-                d, spec.bwd_fused, itemsize,
-                **{k: v for k, v in tiling.items() if k in ("block_h", "block_t", "batch_chunk")})
+                d, spec.bwd_fused, itemsize, **bwd_kw)
     return out

@@ -44,6 +44,17 @@ from repro.kernels.common import (
 )
 from repro.kernels.epilogue import act_grad, epilogue_key, is_trivial
 
+# Tile geometry is shared with the declarative performance model
+# (``repro.perfmodel``): runtime padding/tiling here and the analytical
+# schedules there read the *same* functions, so they cannot drift.  The
+# names are re-exported because this module is their historical home.
+from repro.perfmodel.geometry import (  # noqa: F401  (re-exports)
+    bwd_fused_wpad,
+    bwdk_time_tile,
+    epilogue_time_tile,
+    unified_wpad,
+)
+
 FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
 BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
 # Fused backward family ("split" = run the two independent backward ops —
@@ -150,28 +161,6 @@ def _prep_bias(bias: Optional[jnp.ndarray], Hp: int) -> Optional[jnp.ndarray]:
     if bias.ndim != 1:
         raise ValueError(f"epilogue bias must be per-channel (H,), got {bias.shape}")
     return jnp.pad(bias[:, None], ((0, Hp - bias.shape[0]), (0, LANE - 1)))
-
-
-def bwd_fused_wpad(L: int, K: int) -> int:
-    """Staged-window width the fused backward kernels read: one padded
-    layout covering both the dx taps and the dk reduction."""
-    return round_up(round_up(L, LANE) + K - 1, LANE)
-
-
-def unified_wpad(L: int, K: int, block_t: int) -> int:
-    """One padded-buffer width serving every forward variant's window reads
-    *and* the fused backward's staged window (``bwd_fused_wpad`` is its
-    first max term), so the forward's ``xp`` is reusable as the fused VJP
-    residual verbatim — no re-pad in backward."""
-    Lout = round_up(L, LANE)
-    Lt = min(block_t, Lout)
-    nT = cdiv(Lout, Lt)
-    Wpad = max(
-        bwd_fused_wpad(L, K),                # row + fused-backward window
-        (nT + 1) * Lt,                       # block: neighbour halo tile
-        nT * Lt + K - 1 + LANE,              # lane: widened aligned windows
-    )
-    return round_up(Wpad, LANE)
 
 
 def _fwd_impl(
@@ -282,37 +271,6 @@ def dwconv_bwd_input_op(
         return ref.dwconv_bwd_input_ref(dy, k, padding)
     p_left, _ = adjoint_pad_widths(K, padding)
     return _fwd_impl(dy, k[:, ::-1], p_left, variant, opts)
-
-
-def bwdk_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
-    """Effective time tile ``Lt`` for a staged weight-gradient kernel, or
-    ``None`` when it executes untiled (single staged slab).
-
-    Tiling requires more than one tile to be worth a third grid dimension
-    and ``Lt >= K - 1`` so the halo fits one neighbour tile; shapes failing
-    that quietly run the untiled path (tiling is a perf knob, not
-    semantics).  ``naive`` has no staged slab to tile.
-    """
-    if variant not in ("accum", "twostage", "fused", "fused_partials"):
-        return None
-    Lout = round_up(L, LANE)
-    Lt = min(block_t, Lout)
-    if Lt >= Lout or Lt < K - 1:
-        return None
-    return Lt
-
-
-def epilogue_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
-    """Time tile for the *epilogue* fused backward, or ``None`` (untiled).
-
-    The activation-recompute needs the extended pre-activation window
-    (prev + cur + next x tiles), so the tile must additionally satisfy
-    ``Lt >= 2 * (K - 1)``; shapes failing that quietly run untiled, exactly
-    like ``bwdk_time_tile``'s own fallbacks."""
-    Lt = bwdk_time_tile(L, K, block_t, variant)
-    if Lt is None or Lt < 2 * (K - 1):
-        return None
-    return Lt
 
 
 def _bwdk_impl(

@@ -1,0 +1,110 @@
+"""Counter-free performance report CLI — the paper's full analysis from specs.
+
+  PYTHONPATH=src python -m repro.launch.report
+  PYTHONPATH=src python -m repro.launch.report --shapes paper --out REPORT.md \\
+      --json BENCH_report.json
+  PYTHONPATH=src python -m repro.launch.report --shapes 8x64x16384x4 --hw p100
+
+One command reproduces the paper's Tables II/III / Fig. 10 analysis for
+every (study variant x execution path): the execution-path traffic
+decomposition, modeled HBM bytes with the per-operand breakdown, effective
+bandwidth against the ``analysis/hw.py`` peaks, and the roofline table —
+all *derived* from the declarative kernel schedules (``repro.perfmodel``),
+with no hardware counters, no measurement, and no benchmark scripts.
+
+The P100 paper-mode section places the paper's published Table II runtimes
+on the roofline through the same derivation ``benchmarks/paper_roofline.py``
+renders, so the report and the benchmark cannot diverge.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.analysis.hw import HARDWARE, TPU_V5E
+from repro.analysis.report import (
+    counter_free_markdown,
+    counter_free_report,
+    dump_json,
+)
+from repro.kernels.common import DWConvDims
+from repro.perfmodel import dtype_itemsize
+
+
+def parse_shapes(spec: str) -> List[DWConvDims]:
+    from repro.tuning.space import PAPER_DIMS_CPU, PAPER_DIMS_FULL
+
+    presets = {"paper": PAPER_DIMS_FULL, "paper-cpu": PAPER_DIMS_CPU}
+    out: List[DWConvDims] = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if tok in presets:
+            out.append(presets[tok])
+            continue
+        try:
+            b, h, l, k = (int(v) for v in tok.lower().split("x"))
+        except ValueError:
+            raise SystemExit(
+                f"bad shape {tok!r}: expected a preset {sorted(presets)} or BxHxLxK")
+        out.append(DWConvDims(B=b, H=h, L=l, K=k))
+    if not out:
+        raise SystemExit("no shapes given")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--shapes", default="paper",
+                    help="comma-separated presets (paper, paper-cpu) and/or BxHxLxK")
+    ap.add_argument("--hw", default=TPU_V5E.name, choices=sorted(HARDWARE),
+                    help="hardware model for the roofline terms")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="operand dtype: sets the one itemsize convention "
+                         "charged end to end (f32 partials always charge 4)")
+    ap.add_argument("--block-h", type=int, default=8)
+    ap.add_argument("--block-t", type=int, default=512)
+    ap.add_argument("--batch-chunk", type=int, default=128)
+    ap.add_argument("--no-paper", action="store_true",
+                    help="omit the P100 paper-mode section")
+    ap.add_argument("--no-epilogue", action="store_true",
+                    help="omit the epilogue fused-vs-unfused section")
+    ap.add_argument("--out", default="",
+                    help="write the markdown report here (default: stdout)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the machine-readable payload (BENCH_report.json)")
+    args = ap.parse_args(argv)
+
+    hw = HARDWARE[args.hw]
+    itemsize = dtype_itemsize(args.dtype)
+    payloads = []
+    chunks = []
+    for d in parse_shapes(args.shapes):
+        payload = counter_free_report(
+            d, hw=hw, itemsize=itemsize,
+            block_h=args.block_h, block_t=args.block_t,
+            batch_chunk=args.batch_chunk,
+            include_paper=not args.no_paper,
+            include_epilogue=not args.no_epilogue,
+        )
+        payloads.append(payload)
+        chunks.append(counter_free_markdown(payload))
+    md = "\n".join(chunks)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"[report] wrote {args.out}", file=sys.stderr)
+    else:
+        print(md, end="")
+    if args.json:
+        dump_json(args.json, payloads[0] if len(payloads) == 1 else payloads)
+        print(f"[report] wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""Declarative kernel-schedule performance model (counter-free).
+
+One :class:`~repro.perfmodel.schedule.KernelSchedule` spec per
+(execution path x kernel variant x epilogue), registered alongside each
+Pallas kernel in :mod:`repro.perfmodel.schedules`, from which the system
+*derives* everything the paper's counter-free methodology needs — HBM byte
+traffic, per-grid-cell VMEM footprint and legality, stage-1 analytical
+time for the tuner, and arithmetic intensity / roofline placement.
+
+Runtime padding/tiling (``kernels/ops.py``) and the model both read the
+same geometry functions (:mod:`repro.perfmodel.geometry`), so they cannot
+drift.
+"""
+from repro.perfmodel.derive import (
+    DMA_OVERHEAD_S,
+    RooflinePoint,
+    analytical_time_s,
+    check_legality,
+    derive_traffic,
+    roofline_point,
+    vmem_bytes,
+)
+from repro.perfmodel.geometry import (
+    bwd_fused_wpad,
+    bwd_time_tiles,
+    bwdk_time_tile,
+    dtype_itemsize,
+    effective_tiles,
+    epilogue_time_tile,
+    fwd_tile_grid,
+    time_tile,
+    unified_wpad,
+)
+from repro.perfmodel.schedule import (
+    KernelSchedule,
+    OperandTraffic,
+    TrafficEstimate,
+    merge_schedules,
+    path_flops,
+)
+from repro.perfmodel.schedules import (
+    ACT_FLOPS_PER_ELEM,
+    PAPER_VARIANTS,
+    SCHEDULE_BUILDERS,
+    epilogue_block_schedule,
+    epilogue_elementwise_ops,
+    epilogue_flops,
+    register_schedule,
+    registered_variants,
+    schedule_for,
+    unfused_epilogue_bwd_schedule,
+)
+
+__all__ = [
+    "ACT_FLOPS_PER_ELEM",
+    "DMA_OVERHEAD_S",
+    "KernelSchedule",
+    "OperandTraffic",
+    "PAPER_VARIANTS",
+    "RooflinePoint",
+    "SCHEDULE_BUILDERS",
+    "TrafficEstimate",
+    "analytical_time_s",
+    "bwd_fused_wpad",
+    "bwd_time_tiles",
+    "bwdk_time_tile",
+    "check_legality",
+    "derive_traffic",
+    "dtype_itemsize",
+    "effective_tiles",
+    "epilogue_block_schedule",
+    "epilogue_elementwise_ops",
+    "epilogue_flops",
+    "epilogue_time_tile",
+    "fwd_tile_grid",
+    "merge_schedules",
+    "path_flops",
+    "register_schedule",
+    "registered_variants",
+    "roofline_point",
+    "schedule_for",
+    "time_tile",
+    "unfused_epilogue_bwd_schedule",
+    "unified_wpad",
+    "vmem_bytes",
+]

@@ -1,0 +1,137 @@
+"""Shared tile geometry for the depthwise-conv kernel family.
+
+This module is the *single* source of truth for every derived geometric
+quantity the kernels and the performance model agree on: padded-buffer
+widths, effective tile sizes, time-tile fallbacks, and grid extents.
+``kernels/ops.py`` imports (and re-exports) these functions to lay out the
+runtime padding/tiling, and ``perfmodel/schedules.py`` reads the *same*
+functions to build the declarative :class:`~repro.perfmodel.schedule.
+KernelSchedule` specs — so the analytical model and the executed kernels
+cannot drift (the divergence PRs 2-4 had to maintain by hand across
+``ops.py`` / ``analysis/traffic.py`` / ``tuning/space.py``).
+
+Nothing here imports jax or any kernel module: pure integer arithmetic on
+static shapes, usable from the tuner's host-side ranking loop.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
+
+
+def dtype_itemsize(dtype) -> int:
+    """Bytes per element for the dtypes the kernels support.
+
+    The one consistent charging convention for the whole model: operand
+    traffic is charged at the tensor dtype's width; f32 accumulators /
+    HBM partials are always charged at 4 (they are materialized in f32
+    regardless of the operand dtype).
+    """
+    name = getattr(dtype, "name", None) or str(dtype)
+    sizes = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+    try:
+        return sizes[name]
+    except KeyError:
+        raise ValueError(f"no itemsize convention for dtype {name!r}") from None
+
+
+def bwd_fused_wpad(L: int, K: int) -> int:
+    """Staged-window width the fused backward kernels read: one padded
+    layout covering both the dx taps and the dk reduction."""
+    return round_up(round_up(L, LANE) + K - 1, LANE)
+
+
+def unified_wpad(L: int, K: int, block_t: int) -> int:
+    """One padded-buffer width serving every forward variant's window reads
+    *and* the fused backward's staged window (``bwd_fused_wpad`` is its
+    first max term), so the forward's ``xp`` is reusable as the fused VJP
+    residual verbatim — no re-pad in backward."""
+    Lout = round_up(L, LANE)
+    Lt = min(block_t, Lout)
+    nT = cdiv(Lout, Lt)
+    Wpad = max(
+        bwd_fused_wpad(L, K),                # row + fused-backward window
+        (nT + 1) * Lt,                       # block: neighbour halo tile
+        nT * Lt + K - 1 + LANE,              # lane: widened aligned windows
+    )
+    return round_up(Wpad, LANE)
+
+
+def bwdk_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
+    """Effective time tile ``Lt`` for a staged weight-gradient kernel, or
+    ``None`` when it executes untiled (single staged slab).
+
+    Tiling requires more than one tile to be worth a third grid dimension
+    and ``Lt >= K - 1`` so the halo fits one neighbour tile; shapes failing
+    that quietly run the untiled path (tiling is a perf knob, not
+    semantics).  ``naive`` has no staged slab to tile.
+    """
+    if variant not in ("accum", "twostage", "fused", "fused_partials"):
+        return None
+    Lout = round_up(L, LANE)
+    Lt = min(block_t, Lout)
+    if Lt >= Lout or Lt < K - 1:
+        return None
+    return Lt
+
+
+def epilogue_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
+    """Time tile for the *epilogue* fused backward, or ``None`` (untiled).
+
+    The activation-recompute needs the extended pre-activation window
+    (prev + cur + next x tiles), so the tile must additionally satisfy
+    ``Lt >= 2 * (K - 1)``; shapes failing that quietly run untiled, exactly
+    like ``bwdk_time_tile``'s own fallbacks."""
+    Lt = bwdk_time_tile(L, K, block_t, variant)
+    if Lt is None or Lt < 2 * (K - 1):
+        return None
+    return Lt
+
+
+def time_tile(L: int, K: int, block_t: int, variant: str,
+              epilogue: str = "none") -> Optional[int]:
+    """The time tile the kernel actually runs for this (variant, epilogue):
+    the epilogue-aware fused backward needs the stricter recompute window."""
+    if epilogue != "none":
+        return epilogue_time_tile(L, K, block_t, variant)
+    return bwdk_time_tile(L, K, block_t, variant)
+
+
+def effective_tiles(
+    d: DWConvDims, block_h: int, block_t: int, batch_chunk: int
+) -> Tuple[int, int, int, int]:
+    """``(Hb, Lt, Bc, Lout)`` exactly as ``ops.py`` and the kernels clamp
+    the tiling knobs to the problem dimensions."""
+    Hb = max(1, min(block_h, d.H))
+    Lout = round_up(d.L, LANE)
+    Lt = max(1, min(block_t, Lout))
+    Bc = max(1, min(batch_chunk, d.B))
+    return Hb, Lt, Bc, Lout
+
+
+def fwd_tile_grid(d: DWConvDims, block_h: int, block_t: int
+                  ) -> Tuple[int, int, int, int, int]:
+    """``(Hb, Lout, Lt, nT, n_tiles)`` for the tiled forward-family kernels
+    (naive/lane/block): the output-tile grid the per-tap DMA charges walk."""
+    Hb, Lt, _, Lout = effective_tiles(d, block_h, block_t, d.B)
+    nT = cdiv(Lout, Lt)
+    n_tiles = d.B * cdiv(d.H, Hb) * nT
+    return Hb, Lout, Lt, nT, n_tiles
+
+
+def bwd_time_tiles(d: DWConvDims, variant: str, block_t: int,
+                   epilogue: str = "none") -> Tuple[int, int]:
+    """``(nT, halo_elems_per_operand)`` for a staged bwd kernel.
+
+    ``nT`` is the time-tile count the kernel actually runs (1 = untiled, the
+    pre-``block_t`` behaviour); the halo term counts the K-1 columns every
+    interior tile seam re-reads — the redundancy the tuner trades against
+    per-cell footprint when it shrinks ``block_t``.
+    """
+    Lt = time_tile(d.L, d.K, block_t, variant, epilogue)
+    if Lt is None:
+        return 1, 0
+    nT = cdiv(round_up(d.L, LANE), Lt)
+    halo = d.B * d.H * (nT - 1) * (d.K - 1)
+    return nT, halo

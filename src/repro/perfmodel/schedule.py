@@ -1,0 +1,178 @@
+"""The declarative kernel-schedule IR for counter-free analysis.
+
+A :class:`KernelSchedule` is a *pure-data* description of how one kernel
+configuration — (execution path x implementation variant x epilogue) at one
+static problem shape and tiling — maps onto the machine: the launch grid,
+every operand's per-grid-cell staged block shape (halos included), the total
+elements each operand moves across HBM (revisit counts folded in), the HBM
+partials arrays, and the epilogue op counts.  It asserts nothing about
+*when* things run; it only records *what* the kernel touches.
+
+Everything the paper's counter-free methodology needs is then **derived**
+(``perfmodel/derive.py``) instead of hand-maintained per call site:
+
+  * HBM byte traffic            — sum of the operands' HBM crossings;
+  * per-grid-cell VMEM footprint — sum of the staged block shapes;
+  * structural legality          — the schedule's own verdict fields;
+  * stage-1 analytical time      — traffic + flops through the roofline;
+  * arithmetic intensity / roofline placement — the same two numbers.
+
+Schedules are built by the registered builders in
+``perfmodel/schedules.py`` from the *same* geometry functions
+(``perfmodel/geometry.py``) that ``kernels/ops.py`` uses to pad and tile
+the real buffers, so the model and the runtime cannot drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.kernels.common import DWConvDims
+
+#: Operand roles a schedule distinguishes.  ``read`` / ``write`` charge HBM
+#: traffic; ``scratch`` is VMEM-only state (accumulators, recompute
+#: temporaries) that never crosses HBM but occupies the per-cell footprint.
+ROLES = ("read", "write", "scratch")
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandTraffic:
+    """One array the kernel touches: its HBM crossings and VMEM staging.
+
+    ``elems`` is the *total* element count crossing HBM over the whole
+    launch — output revisit counts, halo re-reads, and partials round-trips
+    are already folded in by the builder (from the shared geometry, so the
+    sum is exact, not an estimate).  ``block`` is the per-grid-cell staged
+    VMEM shape (``()`` for operands the kernel streams without staging, or
+    whose staging the footprint model deliberately does not charge — the
+    convention the tuner's legality predicates have always used).
+    """
+
+    name: str                             # "x", "dy", "k", "dk_partials", ...
+    role: str                             # "read" | "write" | "scratch"
+    # Integral for the explicit-DMA TPU family; paper-mode *cache-adjusted*
+    # charges (surviving-redundancy fractions rho) may be fractional.
+    elems: float                          # total elements crossing HBM
+    itemsize: int                         # bytes/elem charged for HBM traffic
+    transactions: int = 0                 # structural DMA count (whole launch)
+    block: Tuple[int, ...] = ()           # per-grid-cell staged VMEM shape
+    block_itemsize: Optional[int] = None  # VMEM width (defaults to itemsize)
+    note: str = ""                        # derivation note, surfaced in reports
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown operand role {self.role!r}; known: {ROLES}")
+
+    @property
+    def hbm_bytes(self) -> int:
+        return 0 if self.role == "scratch" else self.elems * self.itemsize
+
+    @property
+    def block_elems(self) -> int:
+        n = 1
+        for s in self.block:
+            n *= s
+        return n if self.block else 0
+
+    @property
+    def vmem_bytes(self) -> int:
+        w = self.block_itemsize if self.block_itemsize is not None else self.itemsize
+        return self.block_elems * w
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    """Pure-data execution mapping of one kernel configuration."""
+
+    path: str                              # "fwd" | "bwd_in" | "bwd_k" | "bwd_fused" | composites
+    variant: str                           # implementation variant (or composite label)
+    dims: DWConvDims
+    grid: Tuple[Tuple[str, int], ...]      # named launch-grid extents
+    operands: Tuple[OperandTraffic, ...]
+    flops: float                           # paper eqs. (2)-(3) + epilogue ops
+    epilogue: str = "none"                 # canonical epilogue key
+    epilogue_ops: int = 0                  # standalone elementwise passes (unfused)
+    aligned: bool = True                   # lane-aligned transactions?
+    reliable: bool = True                  # False: redundant-traffic proxy (paper "N/A")
+    legal: bool = True                     # structural kernel asserts satisfied?
+    illegal_reason: str = "ok"
+
+    @property
+    def grid_cells(self) -> int:
+        n = 1
+        for _, extent in self.grid:
+            n *= extent
+        return n
+
+    def reads(self) -> Tuple[OperandTraffic, ...]:
+        return tuple(o for o in self.operands if o.role == "read")
+
+    def writes(self) -> Tuple[OperandTraffic, ...]:
+        return tuple(o for o in self.operands if o.role == "write")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficEstimate:
+    """Modeled HBM traffic for one (variant, path) execution.
+
+    The typed contract every traffic/report/roofline consumer shares (no
+    ad-hoc dicts): derived from a :class:`KernelSchedule` by
+    ``perfmodel.derive.derive_traffic`` and re-exported by
+    ``repro.analysis.traffic`` under its historical name.
+    """
+
+    flops: float
+    bytes_read: float
+    bytes_written: float
+    transactions: float          # DMA count (structural, from the kernel)
+    aligned: bool                # lane-aligned transactions?
+    reliable: bool               # paper: naive redundant traffic is a proxy only
+
+    @property
+    def bytes_moved(self) -> float:
+        return self.bytes_read + self.bytes_written
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_moved, 1.0)
+
+
+def path_flops(d: DWConvDims) -> float:
+    """Paper eqs. (2)-(3): identical op count on all three paths."""
+    return 2.0 * d.B * d.H * d.L * d.K
+
+
+def merge_schedules(
+    path: str,
+    variant: str,
+    d: DWConvDims,
+    parts: Tuple[KernelSchedule, ...],
+    *,
+    extra_operands: Tuple[OperandTraffic, ...] = (),
+    extra_flops: float = 0.0,
+    epilogue: str = "none",
+    epilogue_ops: int = 0,
+) -> KernelSchedule:
+    """Concatenate component schedules into one composite (e.g. the split
+    backward = pad materializations + bwd_in + bwd_k).  Traffic and flops
+    sum; alignment/reliability/legality AND together; the grid is the
+    disjoint union (components launch sequentially)."""
+    operands = tuple(extra_operands)
+    grid: Tuple[Tuple[str, int], ...] = ()
+    flops = extra_flops
+    aligned = reliable = legal = True
+    reason = "ok"
+    for i, p in enumerate(parts):
+        operands += tuple(
+            dataclasses.replace(o, name=f"{p.path}/{p.variant}:{o.name}")
+            for o in p.operands)
+        grid += tuple((f"{p.path}[{i}].{name}", ext) for name, ext in p.grid)
+        flops += p.flops
+        aligned &= p.aligned
+        reliable &= p.reliable
+        if legal and not p.legal:
+            legal, reason = False, p.illegal_reason
+    return KernelSchedule(
+        path=path, variant=variant, dims=d, grid=grid, operands=operands,
+        flops=flops, epilogue=epilogue, epilogue_ops=epilogue_ops,
+        aligned=aligned, reliable=reliable, legal=legal, illegal_reason=reason)

@@ -1,0 +1,553 @@
+"""Registered :class:`KernelSchedule` builders — one per kernel variant.
+
+Every Pallas kernel variant in this repo registers a builder here, keyed by
+``(execution path, variant)``.  A builder reads the problem shape, the
+tiling knobs, and the epilogue key, pulls the *executed* geometry from
+``perfmodel/geometry.py`` (the same functions ``kernels/ops.py`` pads and
+tiles with), and emits the pure-data schedule: grid extents, per-operand
+HBM crossings and staged block shapes, partials arrays, flop counts, and
+structural-legality verdicts.
+
+All downstream numbers — ``analysis/traffic.py``'s byte models,
+``tuning/space.py``'s VMEM/legality predicates, ``tuning/cost.py``'s
+stage-1 analytical time, and the ``launch.report`` roofline tables — are
+derived from these schedules (``perfmodel/derive.py``).  The golden
+equivalence suite (``tests/test_perfmodel_golden.py``) pins every derived
+quantity to integer-byte equality with the pre-refactor hand-written
+formulas.
+
+Two model families coexist, exactly as before the refactor:
+
+  * the **TPU explicit-DMA** family (paths ``fwd`` / ``bwd_in`` / ``bwd_k``
+    / ``bwd_fused``): traffic is what the BlockSpecs physically move;
+  * the **paper-mode** family (paths ``paper_fwd`` / ``paper_bwd_k``,
+    paper variant names): §III-G cache-adjusted traffic on the P100, where
+    only the redundancy surviving L1/L2/shared memory is charged.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
+from repro.kernels.epilogue import parse_epilogue
+from repro.perfmodel.geometry import (
+    bwd_time_tiles,
+    effective_tiles,
+    fwd_tile_grid,
+    time_tile,
+)
+from repro.perfmodel.schedule import (
+    KernelSchedule,
+    OperandTraffic,
+    merge_schedules,
+    path_flops,
+)
+
+# Pointwise-activation cost proxy (tanh/sigmoid polynomial, value or
+# derivative) — a flop ordering term, not a calibrated count.
+ACT_FLOPS_PER_ELEM = 10.0
+
+SCHEDULE_BUILDERS: Dict[Tuple[str, str], Callable[..., KernelSchedule]] = {}
+
+
+def register_schedule(*keys: Tuple[str, str]):
+    """Register a builder for one or more ``(path, variant)`` pairs."""
+    def deco(fn):
+        for key in keys:
+            if key in SCHEDULE_BUILDERS:
+                raise ValueError(f"duplicate schedule registration {key}")
+            SCHEDULE_BUILDERS[key] = fn
+        return fn
+    return deco
+
+
+def registered_variants(path: str) -> Tuple[str, ...]:
+    return tuple(v for (p, v) in SCHEDULE_BUILDERS if p == path)
+
+
+def schedule_for(
+    path: str,
+    variant: str,
+    d: DWConvDims,
+    itemsize: int = 4,
+    *,
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+    epilogue: str = "none",
+    fused: bool = True,
+    bwd_in_variant: str = "row",
+    bwd_k_variant: str = "accum",
+) -> KernelSchedule:
+    """Build the registered schedule for one kernel configuration."""
+    try:
+        builder = SCHEDULE_BUILDERS[(path, variant)]
+    except KeyError:
+        known = sorted(registered_variants(path))
+        raise ValueError(
+            f"no schedule registered for path={path!r} variant={variant!r}"
+            + (f"; known variants: {known}" if known else f"; unknown path {path!r}")
+        ) from None
+    return builder(
+        path, variant, d, itemsize,
+        block_h=block_h, block_t=block_t, batch_chunk=batch_chunk,
+        epilogue=epilogue, fused=fused,
+        bwd_in_variant=bwd_in_variant, bwd_k_variant=bwd_k_variant)
+
+
+def epilogue_elementwise_ops(bias: bool, act: str) -> int:
+    """Standalone elementwise passes the unfused composition runs forward."""
+    return (1 if bias else 0) + (1 if act != "none" else 0)
+
+
+def epilogue_flops(d: DWConvDims, bias: bool, act: str) -> float:
+    elems = d.B * d.H * d.L
+    return (elems if bias else 0.0) + (ACT_FLOPS_PER_ELEM * elems if act != "none" else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# forward family (paths "fwd" and "bwd_in": same kernels, flipped filter)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_epilogue_extras(d, itemsize, bias, act, fused):
+    """Bias-vector read + (unfused only) the standalone elementwise passes."""
+    ops = []
+    if bias:
+        ops.append(OperandTraffic("bias", "read", d.H, itemsize,
+                                  note="per-channel bias vector"))
+    n_ops = 0
+    if not fused:
+        n_ops = epilogue_elementwise_ops(bias, act)
+        slab = d.B * d.H * d.L
+        for i in range(n_ops):
+            ops.append(OperandTraffic(f"epilogue_pass{i}:in", "read", slab, itemsize,
+                                      note="standalone elementwise op, full-tensor read"))
+            ops.append(OperandTraffic(f"epilogue_pass{i}:out", "write", slab, itemsize,
+                                      note="standalone elementwise op, full-tensor write"))
+    return tuple(ops), n_ops
+
+
+def _fwd_schedule(path, variant, d, itemsize, *, block_h, block_t,
+                  epilogue="none", fused=True, **_):
+    bias, act = parse_epilogue(epilogue)
+    Hb, Lout, Lt, nT, n_tiles = fwd_tile_grid(d, block_h, block_t)
+    Wpad = round_up(Lout + d.K - 1, LANE)
+    flops = path_flops(d) + epilogue_flops(d, bias, act)
+    y = OperandTraffic("y", "write", d.B * d.H * d.L, itemsize,
+                       block=(Hb, Lout) if variant == "row" else (Hb, Lt),
+                       note="output, written once")
+    k = OperandTraffic("k", "read", d.H * d.K, itemsize,
+                       note="filter bank, charged once uniformly across variants")
+    epi_ops, n_ops = _fwd_epilogue_extras(d, itemsize, bias, act, fused)
+    grid = (("b", d.B), ("h", cdiv(d.H, Hb)), ("t", nT))
+    aligned = reliable = True
+    legal, reason = True, "ok"
+
+    if variant == "naive":
+        # K unaligned per-tap DMAs of an (Hb, Lt) window per output tile.
+        x = OperandTraffic("x", "read", n_tiles * d.K * (Hb * Lt), itemsize,
+                           transactions=n_tiles * d.K, block=(Hb, Lt + LANE),
+                           note=f"{d.K} per-tap window DMAs per output tile")
+        aligned = reliable = False
+        if Lt % LANE != 0:
+            legal, reason = False, f"Lt={Lt} not lane-aligned (Lt % {LANE} != 0)"
+    elif variant == "lane":
+        # Same per-tap redundancy; windows widened to lane alignment.
+        x = OperandTraffic("x", "read", n_tiles * d.K * (Hb * (Lt + LANE)), itemsize,
+                           transactions=n_tiles * d.K, block=(Hb, Lt + LANE),
+                           note=f"{d.K} lane-aligned per-tap DMAs per output tile")
+        if Lt % LANE != 0:
+            legal, reason = False, f"Lt={Lt} not lane-aligned (Lt % {LANE} != 0)"
+    elif variant == "block":
+        # Current + neighbour halo tile staged in VMEM per output tile.
+        x = OperandTraffic("x", "read", n_tiles * 2 * (Hb * Lt), itemsize,
+                           transactions=n_tiles * 2, block=(2, Hb, Lt),
+                           note="current + neighbour halo tile per output tile")
+        if Lt < d.K - 1:
+            legal, reason = False, f"halo K-1={d.K - 1} does not fit tile Lt={Lt}"
+    elif variant == "row":
+        # Full row staged once: every input element crosses HBM once.
+        x = OperandTraffic("x", "read", d.B * d.H * (Lout + d.K - 1), itemsize,
+                           transactions=d.B * cdiv(d.H, Hb), block=(Hb, Wpad),
+                           note="whole padded row staged once per (b, h-block)")
+        grid = (("b", d.B), ("h", cdiv(d.H, Hb)))
+    elif variant == "xla":
+        # Fused elementwise loop: x once, y once (logical minimum).
+        x = OperandTraffic("x", "read", d.B * d.H * (d.L + d.K - 1), itemsize,
+                           note="XLA-fused logical minimum: padded input once")
+        y = OperandTraffic("y", "write", d.B * d.H * d.L, itemsize)
+        grid = ()
+    else:
+        raise ValueError(variant)
+    return KernelSchedule(
+        path=path, variant=variant, dims=d, grid=grid,
+        operands=(x, k, y) + epi_ops, flops=flops,
+        epilogue=epilogue, epilogue_ops=n_ops,
+        aligned=aligned, reliable=reliable, legal=legal, illegal_reason=reason)
+
+
+for _v in ("naive", "lane", "block", "row", "xla"):
+    register_schedule(("fwd", _v), ("bwd_in", _v))(_fwd_schedule)
+
+
+# ---------------------------------------------------------------------------
+# weight-gradient family (path "bwd_k": reduction over the B x L domain)
+# ---------------------------------------------------------------------------
+
+
+def _bwdk_schedule(path, variant, d, itemsize, *, block_h, block_t,
+                   batch_chunk, **_):
+    Hb, Lt_eff, Bc, Lout = effective_tiles(d, block_h, block_t, batch_chunk)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    Kp = round_up(d.K, LANE)
+    Wpad = round_up(Lout + d.K - 1, LANE)
+    slab = d.B * d.H * d.L
+    flops = path_flops(d)
+    nT, halo = bwd_time_tiles(d, variant, block_t)
+    tiled = nT > 1
+    dk = OperandTraffic("dk", "write", d.H * d.K, itemsize)
+    # f32 accumulator / partials block, staged per grid cell (not charged
+    # for the untiled regime — the historical footprint convention).
+    dk_acc = OperandTraffic("dk_acc", "scratch", 0, 4, block=(Hb, Kp),
+                            block_itemsize=4,
+                            note="f32 dk accumulator, staged per (h-block, chunk)")
+    grid = (("chunk", nC), ("h", nH), ("t", nT))
+
+    if variant == "naive":
+        # Both operands re-read per tap; no reuse across the K taps.
+        x = OperandTraffic("x", "read", d.K * slab, itemsize,
+                           transactions=nH * nC * d.K, block=(Bc, Hb, Wpad),
+                           note=f"{d.K}x redundant: one pass per tap")
+        dy = OperandTraffic("dy", "read", d.K * slab, itemsize,
+                            transactions=nH * nC * d.K, block=(Bc, Hb, d.L),
+                            note=f"{d.K}x redundant: one pass per tap")
+        return KernelSchedule(path, variant, d, (("chunk", nC), ("h", nH)),
+                              (x, dy, dk), flops,
+                              aligned=False, reliable=False)
+    if variant in ("accum", "twostage"):
+        per_op_binds = 2 if tiled else 1  # tiled cells bind (cur, next) x
+        x = OperandTraffic(
+            "x", "read", slab + halo, itemsize,
+            transactions=nH * nC * nT * per_op_binds,
+            block=(2, Bc, Hb, Lt_eff) if tiled else (Bc, Hb, Wpad),
+            note="staged slab; tiled: + K-1 halo columns per interior seam")
+        dy = OperandTraffic(
+            "dy", "read", slab, itemsize, transactions=nH * nC * nT,
+            block=(Bc, Hb, Lt_eff) if tiled else (Bc, Hb, d.L),
+            note="staged slab, one pass")
+        ops = [x, dy, dk]
+        if tiled:
+            ops.append(dk_acc)
+        if variant == "twostage":
+            # Partials round-trip HBM: one f32 block per (chunk, time-tile).
+            partials = nC * nT * d.H * Kp
+            ops.append(OperandTraffic("dk_partials", "write", partials, 4,
+                                      transactions=nH * nC * nT,
+                                      note="stage-1 f32 partials -> HBM"))
+            ops.append(OperandTraffic("dk_partials", "read", partials, 4,
+                                      note="stage-2 re-read of the partials"))
+        return KernelSchedule(path, variant, d, grid, tuple(ops), flops)
+    if variant == "xla":
+        x = OperandTraffic("x", "read", slab, itemsize)
+        dy = OperandTraffic("dy", "read", slab, itemsize)
+        return KernelSchedule(path, variant, d, (), (x, dy, dk), flops)
+    raise ValueError(variant)
+
+
+for _v in ("naive", "twostage", "accum", "xla"):
+    register_schedule(("bwd_k", _v))(_bwdk_schedule)
+
+
+# ---------------------------------------------------------------------------
+# whole-backward family (path "bwd_fused"): fused single pass vs split.
+#
+# Unlike the per-kernel schedules above, these charge the *padded-layout
+# materialization* traffic (each ``jnp.pad`` reads its source and writes the
+# padded buffer to HBM) — that is exactly the traffic the fusion removes, so
+# a fused-vs-split comparison that ignored it would miss the point.
+# ---------------------------------------------------------------------------
+
+
+def _bwd_split_schedule(path, variant, d, itemsize, *, block_h, block_t,
+                        batch_chunk, bwd_in_variant="row",
+                        bwd_k_variant="accum", **_):
+    """Split (bwd_in + bwd_k) composite with the three pad materializations
+    the two-op path runs (dy -> adjoint layout, x -> x_pad, dy -> forward-
+    aligned layout; each: read source, write padded buffer)."""
+    part_in = schedule_for("bwd_in", bwd_in_variant, d, itemsize,
+                           block_h=block_h, block_t=block_t)
+    part_k = schedule_for("bwd_k", bwd_k_variant, d, itemsize,
+                          block_h=block_h, block_t=block_t,
+                          batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L
+    pslab = d.B * d.H * (d.L + d.K - 1)
+    pads = (
+        OperandTraffic("pad:dy_src", "read", slab, itemsize),
+        OperandTraffic("pad:dy_adjoint", "write", pslab, itemsize, transactions=1,
+                       note="dy materialized in the adjoint layout"),
+        OperandTraffic("pad:x_src", "read", slab, itemsize),
+        OperandTraffic("pad:x_pad", "write", pslab, itemsize, transactions=1,
+                       note="x re-padded for the dk reduction"),
+        OperandTraffic("pad:dy_src2", "read", slab, itemsize),
+        OperandTraffic("pad:dy_fwd", "write", slab, itemsize, transactions=1,
+                       note="dy materialized in the forward-aligned layout"),
+    )
+    return merge_schedules(path, variant, d, (part_in, part_k),
+                           extra_operands=pads)
+
+
+register_schedule(("bwd_fused", "split"))(
+    lambda path, variant, d, itemsize, *, epilogue="none", **kw:
+        _bwd_split_schedule(path, variant, d, itemsize, **kw)
+        if epilogue == "none"
+        else _split_epilogue_schedule(path, variant, d, itemsize,
+                                      epilogue=epilogue, **kw))
+
+
+def _split_epilogue_schedule(path, variant, d, itemsize, *, epilogue,
+                             block_h, block_t, batch_chunk, **_):
+    """Activation-*recompute* split composition (what
+    ``ops.dwconv_bwd_fused_act_op`` actually runs on the split path): one
+    standalone pre-activation pass (conv + bias, no act), an effective-
+    gradient pass, the dbias reduction, then the ordinary split backward."""
+    bias, act = parse_epilogue(epilogue)
+    base = _bwd_split_schedule(path, variant, d, itemsize, block_h=block_h,
+                               block_t=block_t, batch_chunk=batch_chunk)
+    pre = schedule_for("fwd", "row", d, itemsize,
+                       block_h=block_h, block_t=block_t)
+    slab = d.B * d.H * d.L
+    extras = [
+        OperandTraffic("dy_eff:dy", "read", slab, itemsize, transactions=1),
+        OperandTraffic("dy_eff:pre", "read", slab, itemsize,
+                       note="recomputed pre-activation, read back once"),
+        OperandTraffic("dy_eff", "write", slab, itemsize, transactions=1),
+    ]
+    if bias:
+        extras.append(OperandTraffic("dbias:dy_eff", "read", slab, itemsize,
+                                     note="dbias reduction re-reads dy_eff"))
+        extras.append(OperandTraffic("dbias", "write", d.H, itemsize))
+    return merge_schedules(
+        path, variant, d, (base, pre), extra_operands=tuple(extras),
+        extra_flops=epilogue_flops(d, bias, act),
+        epilogue=epilogue)
+
+
+def _bwd_fused_schedule(path, variant, d, itemsize, *, block_h, block_t,
+                        batch_chunk, epilogue="none", **_):
+    bias, act = parse_epilogue(epilogue)
+    epi = epilogue != "none"
+    Hb, _, Bc, Lout = effective_tiles(d, block_h, block_t, batch_chunk)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    Kp = round_up(d.K, LANE)
+    Wpad = round_up(Lout + d.K - 1, LANE)
+    slab = d.B * d.H * d.L
+    pslab = d.B * d.H * (d.L + d.K - 1)
+    Lt = time_tile(d.L, d.K, block_t, variant, epilogue)
+    nT, halo = bwd_time_tiles(d, variant, block_t, epilogue)
+    tiled = nT > 1
+    # Per-operand seam re-reads: the staged x slab needs prev+cur+next tiles
+    # under the epilogue recompute window (two halo charges), cur+next
+    # otherwise (one); dy always cur+next (one).
+    x_halo, dy_halo = (2 * halo, halo) if epi else (halo, halo)
+    x_binds = (3 if epi else 2) if tiled else 1
+    dy_binds = 2 if tiled else 1
+    # dx taps + dk reduction (+ the in-register pre-activation recompute).
+    flops = (3.0 if epi else 2.0) * path_flops(d) + epilogue_flops(d, bias, act)
+    x_block = ((x_binds, Bc, Hb, Lt) if tiled else (Bc, Hb, Wpad))
+    dy_block = ((dy_binds, Bc, Hb, Lt) if tiled else (Bc, Hb, Wpad))
+    operands = [
+        # One pad materialization (dy, single unified layout); the forward's
+        # x_pad residual is reused verbatim — zero backward pad cost for x.
+        OperandTraffic("pad:dy_src", "read", slab, itemsize),
+        OperandTraffic("pad:dy_unified", "write", pslab, itemsize, transactions=1,
+                       note="single unified dy layout (dx taps + off_dk reduction)"),
+        OperandTraffic("x_pad", "read", pslab + x_halo, itemsize,
+                       transactions=nH * nC * nT * x_binds, block=x_block,
+                       note="forward residual reused; tiled: haloed seam re-reads"),
+        OperandTraffic("dy_pad", "read", pslab + dy_halo, itemsize,
+                       transactions=nH * nC * nT * dy_binds, block=dy_block,
+                       note="unified dy layout; tiled: haloed seam re-reads"),
+        OperandTraffic("k", "read", d.H * d.K, itemsize,
+                       transactions=nH * nC * nT,
+                       note="filter block per grid cell (VMEM resident)"),
+        OperandTraffic("dx", "write", slab, itemsize,
+                       block=(Bc, Hb, Lt) if tiled else (Bc, Hb, Lout)),
+        OperandTraffic("dk", "write", d.H * d.K, itemsize),
+        OperandTraffic("dk_acc", "scratch", 0, 4, block=(Hb, Kp), block_itemsize=4,
+                       note="f32 dk accumulator per (h-block, chunk) cell"),
+    ]
+    if epi:
+        operands.append(OperandTraffic(
+            "bias", "read", d.H if bias else 0, itemsize,
+            transactions=nH * nC * nT if bias else 0))
+        operands.append(OperandTraffic("dbias", "write", d.H if bias else 0, itemsize))
+        # Recompute temporaries: the pre-activation and effective-gradient
+        # windows held in f32 alongside the staged slabs.
+        tmp = (Bc, Hb, Lt + d.K - 1) if tiled else (Bc, Hb, Lout)
+        operands.append(OperandTraffic("pre", "scratch", 0, 4, block=tmp,
+                                       block_itemsize=4,
+                                       note="recomputed pre-activation (f32)"))
+        operands.append(OperandTraffic("dy_eff", "scratch", 0, 4, block=tmp,
+                                       block_itemsize=4,
+                                       note="effective gradient dy * act'(pre) (f32)"))
+    if variant == "fused_partials":
+        # f32 HBM round-trip; the epilogue kernels append a dbias column
+        # block (LANE wide) to every partials row.
+        partials = nC * nT * d.H * ((Kp + LANE) if epi else Kp)
+        operands.append(OperandTraffic("partials", "write", partials, 4,
+                                       transactions=nH * nC * nT,
+                                       note="stage-1 f32 partials -> HBM"))
+        operands.append(OperandTraffic("partials", "read", partials, 4))
+    elif variant != "fused":
+        raise ValueError(variant)
+    return KernelSchedule(
+        path=path, variant=variant, dims=d,
+        grid=(("chunk", nC), ("h", nH), ("t", nT)),
+        operands=tuple(operands), flops=flops, epilogue=epilogue)
+
+
+for _v in ("fused", "fused_partials"):
+    register_schedule(("bwd_fused", _v))(_bwd_fused_schedule)
+
+
+def unfused_epilogue_bwd_schedule(
+    d: DWConvDims,
+    itemsize: int = 4,
+    *,
+    epilogue: str = "none",
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+) -> KernelSchedule:
+    """Backward of the *unfused composition* under ordinary autodiff
+    (``jax.vjp`` of conv -> bias add -> act): the activation backward reads
+    dy and the saved pre-activation residual and writes the effective
+    gradient, the dbias reduction re-reads it, and the split two-op
+    backward consumes it."""
+    bias, act = parse_epilogue(epilogue)
+    base = _bwd_split_schedule("bwd_fused", "split", d, itemsize,
+                               block_h=block_h, block_t=block_t,
+                               batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L
+    extras = []
+    if act != "none":
+        extras += [
+            OperandTraffic("act_bwd:dy", "read", slab, itemsize, transactions=1),
+            OperandTraffic("act_bwd:pre_residual", "read", slab, itemsize,
+                           note="saved pre-activation residual (forward-side write "
+                                "charged by the unfused forward model)"),
+            OperandTraffic("dy_eff", "write", slab, itemsize),
+        ]
+    if bias:
+        extras += [
+            OperandTraffic("dbias:dy_eff", "read", slab, itemsize, transactions=1),
+            OperandTraffic("dbias", "write", d.H, itemsize),
+        ]
+    return merge_schedules(
+        "bwd_unfused", "autodiff", d, (base,), extra_operands=tuple(extras),
+        extra_flops=epilogue_flops(d, bias, act), epilogue=epilogue,
+        epilogue_ops=epilogue_elementwise_ops(bias, act))
+
+
+def epilogue_block_schedule(
+    d: DWConvDims,
+    itemsize: int = 4,
+    *,
+    epilogue: str = "bias+silu",
+    fused: bool = True,
+    fwd_variant: str = "row",
+    bwd_variant: str = "fused",
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+) -> KernelSchedule:
+    """Whole-block (forward + backward) schedule for one conv + epilogue:
+    the quantity the ``paper_epilogue`` gate compares fused vs unfused."""
+    fwd = schedule_for("fwd", fwd_variant, d, itemsize, epilogue=epilogue,
+                       fused=fused, block_h=block_h, block_t=block_t)
+    if fused:
+        bwd = schedule_for("bwd_fused", bwd_variant, d, itemsize,
+                           epilogue=epilogue, block_h=block_h,
+                           block_t=block_t, batch_chunk=batch_chunk)
+    else:
+        bwd = unfused_epilogue_bwd_schedule(d, itemsize, epilogue=epilogue,
+                                            block_h=block_h, block_t=block_t,
+                                            batch_chunk=batch_chunk)
+    return merge_schedules("block", "fused" if fused else "unfused", d,
+                           (fwd, bwd), epilogue=epilogue)
+
+
+# ---------------------------------------------------------------------------
+# paper-mode family (P100 tables): §III-G cache-adjusted accounting — only
+# the redundancy surviving L1/L2/shared memory is charged.  Variant names
+# are the paper's.
+# ---------------------------------------------------------------------------
+
+PAPER_VARIANTS = ("naive", "gmc", "shared", "warp")
+_WARP_SIZE = 32
+_SHARED_TPB = 128  # paper §IV-D temporal tile
+
+
+def _paper_fwd_schedule(path, variant, d, itemsize, **_):
+    flops = path_flops(d)
+    slab = d.B * d.H * d.L
+    k = OperandTraffic("k", "read", d.H * d.K, itemsize)
+    y = OperandTraffic("y", "write", slab, itemsize)
+    if variant == "naive":
+        # Realized traffic unobservable without counters: logical lower bound
+        # as proxy, flagged unreliable (paper Table III "N/A").
+        x = OperandTraffic("x", "read", slab, itemsize,
+                           note="logical lower bound; realized value cache-dependent")
+        return KernelSchedule(path, variant, d, (), (x, k, y), flops,
+                              aligned=False, reliable=False)
+    if variant == "gmc":
+        # Warp-level reuse only: redundancy K / min(K, warp) survives caches.
+        rho = d.K / min(d.K, _WARP_SIZE)
+        x = OperandTraffic("x", "read", rho * slab, itemsize,
+                           note=f"surviving redundancy rho={rho:.3f} (warp reuse only)")
+    elif variant == "shared":
+        rho = (_SHARED_TPB + d.K - 1) / _SHARED_TPB  # halo per TPB tile
+        x = OperandTraffic("x", "read", rho * slab, itemsize,
+                           note=f"halo per {_SHARED_TPB}-thread tile: rho={rho:.4f}")
+    elif variant == "warp":
+        # Full row staged once; halo is zero padding (no HBM reads).
+        x = OperandTraffic("x", "read", slab, itemsize,
+                           note="row staged once; halo is zero padding")
+    else:
+        raise ValueError(variant)
+    return KernelSchedule(path, variant, d, (), (x, k, y), flops)
+
+
+for _v in PAPER_VARIANTS:
+    register_schedule(("paper_fwd", _v))(_paper_fwd_schedule)
+
+
+def _paper_bwdk_schedule(path, variant, d, itemsize, **_):
+    if variant not in PAPER_VARIANTS:
+        raise ValueError(variant)
+    flops = path_flops(d)
+    slab = d.B * d.H * d.L
+    x = OperandTraffic("x", "read", slab, itemsize)
+    dy = OperandTraffic("dy", "read", slab, itemsize)
+    dk = OperandTraffic("dk", "write", d.H * d.K, itemsize)
+    if variant == "naive":
+        # Sequential accumulation over B x L per (h, j): K x redundant logical
+        # traffic, realized value cache-dependent -> unreliable proxy.
+        return KernelSchedule(path, variant, d, (), (x, dy, dk), flops,
+                              aligned=False, reliable=False)
+    # gmc/shared/warp all restructure into chunked two-stage reductions:
+    n_chunks = max(d.B // 128, 1)
+    partials = n_chunks * d.H * d.K
+    ops = (x, dy, dk,
+           OperandTraffic("dk_partials", "write", partials, 4,
+                          note="stage-1 f32 partials -> HBM"),
+           OperandTraffic("dk_partials", "read", partials, 4,
+                          note="stage-2 re-read of the partials"))
+    return KernelSchedule(path, variant, d, (("chunk", n_chunks),), ops, flops)
+
+
+for _v in PAPER_VARIANTS:
+    register_schedule(("paper_bwd_k", _v))(_paper_bwdk_schedule)

@@ -24,41 +24,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis import traffic
+from repro import perfmodel
 from repro.analysis.hw import TPU_V5E, HardwareModel
 from repro.analysis.timer import Timing, time_fn
 from repro.kernels import ops, ref
 from repro.kernels.common import DWConvDims
 from repro.kernels.epilogue import parse_epilogue
+from repro.perfmodel import DMA_OVERHEAD_S  # noqa: F401  (historical home)
+from repro.perfmodel.schedule import KernelSchedule, TrafficEstimate
 from repro.tuning.space import Candidate
 
-# Fixed per-DMA issue overhead for the analytical model.  The value is a
-# structural tie-breaker (it orders high-transaction-count candidates behind
-# equal-traffic low-transaction ones), not a calibrated latency.
-DMA_OVERHEAD_S = 1e-7
+
+def _schedule_for(c: Candidate, d: DWConvDims, itemsize: int,
+                  epilogue: str = "none") -> KernelSchedule:
+    """The candidate's registered schedule on the path the tuner scores.
+
+    ``fwd`` scores the fused-epilogue kernel; ``bwd_in``/``bwd_k`` are
+    epilogue-less (the split reductions consume dy_eff unchanged);
+    ``bwd_fused`` is the whole-backward accounting (pad materialization
+    charged) so fused candidates rank against the "split" two-op baseline
+    like for like — the epilogue-aware schedule charges the recompute MACs
+    on the fused side and the standalone pre-activation pass on the split
+    side.
+    """
+    return perfmodel.schedule_for(
+        c.path, c.variant, d, itemsize,
+        block_h=c.block_h, block_t=c.block_t, batch_chunk=c.batch_chunk,
+        epilogue=epilogue if c.path in ("fwd", "bwd_fused") else "none")
 
 
 def _traffic_for(c: Candidate, d: DWConvDims, itemsize: int,
-                 epilogue: str = "none") -> traffic.TrafficEstimate:
-    if c.path == "fwd":
-        return traffic.epilogue_fwd_traffic(d, c.variant, itemsize,
-                                            epilogue=epilogue, fused=True,
-                                            block_h=c.block_h, block_t=c.block_t)
-    if c.path == "bwd_in":
-        return traffic.fwd_traffic(d, c.variant, itemsize,
-                                   block_h=c.block_h, block_t=c.block_t)
-    if c.path == "bwd_fused":
-        # Whole-backward accounting (pad materialization charged): fused
-        # candidates against the "split" two-op baseline, like for like.
-        # The epilogue-aware model charges the recompute MACs on the fused
-        # side and the standalone pre-activation pass on the split side.
-        return traffic.epilogue_bwd_traffic(d, c.variant, itemsize,
-                                            epilogue=epilogue,
-                                            block_h=c.block_h, block_t=c.block_t,
-                                            batch_chunk=c.batch_chunk)
-    return traffic.bwdk_traffic(d, c.variant, itemsize,
-                                block_h=c.block_h, block_t=c.block_t,
-                                batch_chunk=c.batch_chunk)
+                 epilogue: str = "none") -> TrafficEstimate:
+    return perfmodel.derive_traffic(_schedule_for(c, d, itemsize, epilogue))
 
 
 def analytical_time_s(
@@ -78,10 +75,8 @@ def analytical_time_s(
     cache-dependent redundancy) is still ranked by its logical traffic —
     pessimistic, exactly like the paper's Table III treatment.
     """
-    est = _traffic_for(c, d, itemsize, epilogue)
-    compute_s = est.flops / hw.peak_flops_f32
-    memory_s = est.bytes_moved / hw.hbm_bw
-    return max(compute_s, memory_s) + est.transactions * DMA_OVERHEAD_S
+    return perfmodel.analytical_time_s(
+        _schedule_for(c, d, itemsize, epilogue), hw)
 
 
 def rank_candidates(

@@ -2,7 +2,9 @@
 
 A :class:`Candidate` names, for one execution path, the kernel implementation
 variant plus the tiling knobs :class:`~repro.kernels.ops.KernelOptions`
-understands.  The legality predicates mirror the asserts inside
+understands.  Legality and the VMEM working set are *derived* from the
+candidate's registered :class:`~repro.perfmodel.KernelSchedule`
+(``repro.perfmodel``), whose verdicts mirror the asserts inside
 ``kernels/dwconv_fwd.py`` / ``kernels/dwconv_bwdk.py`` *after* the padding
 ``kernels/ops.py`` applies, so every candidate emitted by
 :func:`search_space` is guaranteed to execute:
@@ -40,8 +42,10 @@ import itertools
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TPU_V5E, HardwareModel
-from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
+from repro.kernels.common import DWConvDims
 from repro.kernels.ops import KernelOptions
+from repro.perfmodel import check_legality, schedule_for, vmem_bytes
+from repro.perfmodel.geometry import effective_tiles, time_tile
 
 PATHS = ("fwd", "bwd_in", "bwd_k", "bwd_fused")
 
@@ -106,24 +110,19 @@ _DEFAULT = Candidate(path="fwd", variant="row")  # source of default knob values
 
 
 def _effective_tiles(c: Candidate, d: DWConvDims) -> Tuple[int, int, int, int]:
-    """(Hb, Lt, Bc, Lout) exactly as ops.py/kernels compute them."""
-    Hb = max(1, min(c.block_h, d.H))
-    Lout = round_up(d.L, LANE)
-    Lt = max(1, min(c.block_t, Lout))
-    Bc = max(1, min(c.batch_chunk, d.B))
-    return Hb, Lt, Bc, Lout
+    """(Hb, Lt, Bc, Lout) exactly as ops.py/kernels compute them (shared
+    geometry: ``perfmodel.geometry.effective_tiles``)."""
+    return effective_tiles(d, c.block_h, c.block_t, c.batch_chunk)
 
 
 def _bwd_time_tile(c: Candidate, d: DWConvDims, epilogue: str = "none") -> Optional[int]:
     """Effective time tile for a staged bwd candidate, or None when the
-    kernel executes untiled — mirrors ``ops.bwdk_time_tile`` exactly (and
-    its stricter epilogue sibling for epilogue-aware bwd_fused problems,
-    whose recompute window needs a prev-tile halo)."""
-    from repro.kernels.ops import bwdk_time_tile, epilogue_time_tile
-
-    if c.path == "bwd_fused" and epilogue != "none":
-        return epilogue_time_tile(d.L, d.K, c.block_t, c.variant)
-    return bwdk_time_tile(d.L, d.K, c.block_t, c.variant)
+    kernel executes untiled — the shared ``perfmodel.geometry.time_tile``
+    (``bwdk_time_tile``, or its stricter epilogue sibling for
+    epilogue-aware bwd_fused problems, whose recompute window needs a
+    prev-tile halo)."""
+    epi = epilogue if c.path == "bwd_fused" else "none"
+    return time_tile(d.L, d.K, c.block_t, c.variant, epi)
 
 
 def normalize(c: Candidate, d: DWConvDims, epilogue: str = "none") -> Candidate:
@@ -149,38 +148,22 @@ def normalize(c: Candidate, d: DWConvDims, epilogue: str = "none") -> Candidate:
     return Candidate(c.path, c.variant, Hb, Lt, Bc)
 
 
+def _schedule(c: Candidate, d: DWConvDims, itemsize: int, epilogue: str):
+    """The candidate's registered :class:`~repro.perfmodel.KernelSchedule`
+    (the fwd/bwd_in structural checks ignore the epilogue, like the
+    kernels themselves — only bwd_fused changes body under an epilogue)."""
+    return schedule_for(
+        c.path, c.variant, d, itemsize,
+        block_h=c.block_h, block_t=c.block_t, batch_chunk=c.batch_chunk,
+        epilogue=epilogue if c.path in ("fwd", "bwd_fused") else "none")
+
+
 def _vmem_working_set_bytes(
     c: Candidate, d: DWConvDims, itemsize: int, epilogue: str = "none"
 ) -> int:
-    """Per-grid-cell VMEM staging estimate for the candidate's kernel."""
-    Hb, Lt, Bc, Lout = _effective_tiles(c, d)
-    Wpad = round_up(Lout + d.K - 1, LANE)
-    Kp4 = Hb * round_up(d.K, LANE) * 4  # f32 dk accumulator / partials block
-    if c.path in ("fwd", "bwd_in"):
-        if c.variant == "row":
-            return Hb * (Wpad + Lout) * itemsize
-        if c.variant == "block":
-            return Hb * 3 * Lt * itemsize          # cur + halo + out tile
-        return Hb * (Lt + LANE + Lt) * itemsize    # naive/lane scratch + out
-    tiled_lt = _bwd_time_tile(c, d, epilogue)
-    if c.path == "bwd_fused":
-        epi = epilogue != "none"
-        # The epilogue kernels additionally hold the recomputed
-        # pre-activation / effective-gradient temporaries (f32, one output
-        # window each) and — tiled — a third (prev) x tile.
-        if tiled_lt is not None:
-            slabs = 6 if epi else 5
-            extra = 2 * Bc * Hb * (tiled_lt + d.K - 1) * 4 if epi else 0
-            return Bc * Hb * slabs * tiled_lt * itemsize + extra + Kp4
-        # Both operand slabs (width Wpad each) + the dx output block + the
-        # dk accumulator staged per (h-block, batch-chunk) cell.
-        extra = 2 * Bc * Hb * Lout * 4 if epi else 0
-        return Bc * Hb * (2 * Wpad + Lout) * itemsize + extra + Kp4
-    # bwd_k: both operand slabs staged per (h-block, batch-chunk) cell;
-    # time-tiled accum/twostage bound the slabs by block_t instead of L.
-    if tiled_lt is not None:
-        return Bc * Hb * 3 * tiled_lt * itemsize + Kp4
-    return Bc * Hb * (Wpad + d.L) * itemsize
+    """Per-grid-cell VMEM staging estimate for the candidate's kernel —
+    derived from the staged block shapes its schedule declares."""
+    return vmem_bytes(_schedule(c, d, itemsize, epilogue))
 
 
 def is_legal(
@@ -192,6 +175,11 @@ def is_legal(
     epilogue: str = "none",
 ) -> Tuple[bool, str]:
     """Check the kernel asserts (post-ops-padding) for this candidate.
+
+    The structural verdicts (lane alignment, halo fit) and the VMEM bound
+    are both derived from the candidate's registered schedule
+    (``perfmodel.check_legality``); this wrapper only screens the
+    search-space domain (known path/variant, positive knobs).
 
     Returns ``(ok, reason)`` — the reason names the violated constraint so
     tuner logs stay self-explanatory.
@@ -205,18 +193,7 @@ def is_legal(
         return False, "tiling knobs must be positive"
     if c.variant in _KNOBLESS:
         return True, "ok"
-
-    Hb, Lt, Bc, Lout = _effective_tiles(c, d)
-    if c.path in ("fwd", "bwd_in"):
-        if c.variant in ("naive", "lane") and Lt % LANE != 0:
-            return False, f"Lt={Lt} not lane-aligned (Lt % {LANE} != 0)"
-        if c.variant == "block" and Lt < d.K - 1:
-            return False, f"halo K-1={d.K - 1} does not fit tile Lt={Lt}"
-    if hw.vmem_bytes:
-        need = _vmem_working_set_bytes(c, d, itemsize, epilogue)
-        if need > hw.vmem_bytes:
-            return False, f"VMEM working set {need}B > {int(hw.vmem_bytes)}B"
-    return True, "ok"
+    return check_legality(_schedule(c, d, itemsize, epilogue), hw=hw)
 
 
 def search_space(

@@ -87,7 +87,7 @@ def tune_path(
     search: str = "grid",
     variants: Optional[Sequence[str]] = None,
     hw: HardwareModel = TPU_V5E,
-    itemsize: int = 4,
+    itemsize: Optional[int] = None,
     measure_fn: Optional[MeasureFn] = None,
     warmup: int = 1,
     iters: int = 3,
@@ -96,9 +96,19 @@ def tune_path(
     verbose: bool = False,
     epilogue: str = "none",
 ) -> TuneResult:
-    """Tune one (shape, path) and record the winner in the cache."""
+    """Tune one (shape, path) and record the winner in the cache.
+
+    ``itemsize`` defaults to the *measured* ``dtype``'s width (the one
+    charging convention, ``perfmodel.dtype_itemsize``), so the stage-1
+    analytical ranking and the stage-2 measurement always price bytes in
+    the same currency; pass it explicitly only to model a different one.
+    """
     if budget < 1:
         raise ValueError(f"budget must be >= 1, got {budget}")
+    if itemsize is None:
+        from repro.perfmodel import dtype_itemsize
+
+        itemsize = dtype_itemsize(dtype)
     if epilogue != "none" and path not in ("fwd", "bwd_fused"):
         raise ValueError(
             f"epilogue {epilogue!r} only parameterizes the 'fwd'/'bwd_fused' "

@@ -1,0 +1,432 @@
+"""Frozen pre-refactor analytical model — the golden reference.
+
+This module is a verbatim snapshot of the hand-written formulas that lived
+in ``analysis/traffic.py``, ``tuning/space.py``, and ``kernels/ops.py``
+*before* the declarative ``repro.perfmodel`` refactor (seed commit of PR 5).
+It is imported only by ``tests/test_perfmodel_golden.py``, which pins every
+schedule-derived quantity — traffic bytes, transactions, flops, VMEM
+working sets, legality verdicts, tile geometry — to exact (integer-byte)
+equality with these functions across a parameterized shape/tiling/epilogue
+grid.
+
+DO NOT "fix" or modernize anything here: its only value is being frozen.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
+from repro.kernels.epilogue import parse_epilogue
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficEstimate:
+    flops: float
+    bytes_read: float
+    bytes_written: float
+    transactions: float
+    aligned: bool
+    reliable: bool
+
+    @property
+    def bytes_moved(self) -> float:
+        return self.bytes_read + self.bytes_written
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_moved, 1.0)
+
+
+def path_flops(d: DWConvDims) -> float:
+    return 2.0 * d.B * d.H * d.L * d.K
+
+
+# --------------------------------------------------------------------------
+# kernels/ops.py geometry (pre-refactor)
+# --------------------------------------------------------------------------
+
+
+def bwd_fused_wpad(L: int, K: int) -> int:
+    return round_up(round_up(L, LANE) + K - 1, LANE)
+
+
+def unified_wpad(L: int, K: int, block_t: int) -> int:
+    Lout = round_up(L, LANE)
+    Lt = min(block_t, Lout)
+    nT = cdiv(Lout, Lt)
+    Wpad = max(
+        bwd_fused_wpad(L, K),
+        (nT + 1) * Lt,
+        nT * Lt + K - 1 + LANE,
+    )
+    return round_up(Wpad, LANE)
+
+
+def bwdk_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
+    if variant not in ("accum", "twostage", "fused", "fused_partials"):
+        return None
+    Lout = round_up(L, LANE)
+    Lt = min(block_t, Lout)
+    if Lt >= Lout or Lt < K - 1:
+        return None
+    return Lt
+
+
+def epilogue_time_tile(L: int, K: int, block_t: int, variant: str) -> Optional[int]:
+    Lt = bwdk_time_tile(L, K, block_t, variant)
+    if Lt is None or Lt < 2 * (K - 1):
+        return None
+    return Lt
+
+
+# --------------------------------------------------------------------------
+# analysis/traffic.py (pre-refactor)
+# --------------------------------------------------------------------------
+
+
+def _tile_geometry(d: DWConvDims, block_h: int, block_t: int):
+    Hb = min(block_h, d.H)
+    Lout = round_up(d.L, LANE)
+    Lt = min(block_t, Lout)
+    nT = cdiv(Lout, Lt)
+    n_tiles = d.B * cdiv(d.H, Hb) * nT
+    return Hb, Lout, Lt, nT, n_tiles
+
+
+def fwd_traffic(d, variant, itemsize=4, block_h=8, block_t=512) -> TrafficEstimate:
+    Hb, Lout, Lt, nT, n_tiles = _tile_geometry(d, block_h, block_t)
+    flops = path_flops(d)
+    y_bytes = d.B * d.H * d.L * itemsize
+    k_bytes_once = d.H * d.K * itemsize
+
+    if variant == "naive":
+        read = n_tiles * d.K * (Hb * Lt) * itemsize + k_bytes_once
+        tx = n_tiles * d.K
+        return TrafficEstimate(flops, read, y_bytes, tx, aligned=False, reliable=False)
+    if variant == "lane":
+        read = n_tiles * d.K * (Hb * (Lt + LANE)) * itemsize + k_bytes_once
+        tx = n_tiles * d.K
+        return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
+    if variant == "block":
+        read = n_tiles * 2 * (Hb * Lt) * itemsize + k_bytes_once
+        tx = n_tiles * 2
+        return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
+    if variant == "row":
+        read = d.B * d.H * (Lout + d.K - 1) * itemsize + k_bytes_once
+        tx = d.B * cdiv(d.H, Hb)
+        return TrafficEstimate(flops, read, y_bytes, tx, aligned=True, reliable=True)
+    if variant == "xla":
+        read = d.B * d.H * (d.L + d.K - 1) * itemsize + k_bytes_once
+        return TrafficEstimate(flops, read, y_bytes, 0, aligned=True, reliable=True)
+    raise ValueError(variant)
+
+
+def _bwd_tiles(d: DWConvDims, variant: str, block_t: int):
+    Lt = bwdk_time_tile(d.L, d.K, block_t, variant)
+    if Lt is None:
+        return 1, 0
+    nT = cdiv(round_up(d.L, LANE), Lt)
+    halo = d.B * d.H * (nT - 1) * (d.K - 1)
+    return nT, halo
+
+
+def bwdk_traffic(d, variant, itemsize=4, block_h=8, block_t=512,
+                 batch_chunk=128) -> TrafficEstimate:
+    flops = path_flops(d)
+    Hb = min(block_h, d.H)
+    Bc = min(batch_chunk, d.B)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    Kp = round_up(d.K, LANE)
+    slab = d.B * d.H * d.L * itemsize
+    dk_bytes = d.H * d.K * itemsize
+    nT, halo = _bwd_tiles(d, variant, block_t)
+    halo_bytes = halo * itemsize
+    in_blocks = 3 if nT > 1 else 2
+
+    if variant == "naive":
+        read = 2 * d.K * slab
+        tx = nH * nC * d.K * 2
+        return TrafficEstimate(flops, read, dk_bytes, tx, aligned=False, reliable=False)
+    if variant == "twostage":
+        partials = nC * nT * d.H * Kp * 4
+        read = 2 * slab + halo_bytes + partials
+        tx = nH * nC * nT * in_blocks + nH * nC * nT
+        return TrafficEstimate(flops, read, dk_bytes + partials, tx, aligned=True, reliable=True)
+    if variant == "accum":
+        read = 2 * slab + halo_bytes
+        tx = nH * nC * nT * in_blocks
+        return TrafficEstimate(flops, read, dk_bytes, tx, aligned=True, reliable=True)
+    if variant == "xla":
+        read = 2 * slab
+        return TrafficEstimate(flops, read, dk_bytes, 0, aligned=True, reliable=True)
+    raise ValueError(variant)
+
+
+def bwd_split_traffic(d, itemsize=4, bwd_in_variant="row", bwd_k_variant="accum",
+                      block_h=8, block_t=512, batch_chunk=128) -> TrafficEstimate:
+    est_in = fwd_traffic(d, bwd_in_variant, itemsize,
+                         block_h=block_h, block_t=block_t)
+    est_k = bwdk_traffic(d, bwd_k_variant, itemsize,
+                         block_h=block_h, block_t=block_t,
+                         batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L * itemsize
+    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
+    pad_read = 3 * slab
+    pad_written = 2 * pslab + slab
+    return TrafficEstimate(
+        flops=est_in.flops + est_k.flops,
+        bytes_read=pad_read + est_in.bytes_read + est_k.bytes_read,
+        bytes_written=pad_written + est_in.bytes_written + est_k.bytes_written,
+        transactions=est_in.transactions + est_k.transactions + 3,
+        aligned=est_in.aligned and est_k.aligned,
+        reliable=est_in.reliable and est_k.reliable,
+    )
+
+
+def bwd_fused_traffic(d, variant="fused", itemsize=4, block_h=8, block_t=512,
+                      batch_chunk=128) -> TrafficEstimate:
+    if variant == "split":
+        return bwd_split_traffic(d, itemsize, block_h=block_h,
+                                 block_t=block_t, batch_chunk=batch_chunk)
+    flops = 2.0 * path_flops(d)
+    Hb = min(block_h, d.H)
+    Bc = min(batch_chunk, d.B)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    slab = d.B * d.H * d.L * itemsize
+    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
+    k_bytes = d.H * d.K * itemsize
+    dk_bytes = d.H * d.K * itemsize
+    nT, halo = _bwd_tiles(d, variant, block_t)
+    halo_bytes = 2 * halo * itemsize
+    in_blocks = 5 if nT > 1 else 3
+    read = slab + 2 * pslab + k_bytes + halo_bytes
+    written = pslab + slab + dk_bytes
+    tx = nH * nC * nT * in_blocks + 1
+    if variant == "fused_partials":
+        partials = nC * nT * d.H * round_up(d.K, LANE) * 4
+        read += partials
+        written += partials
+        tx += nH * nC * nT
+    elif variant != "fused":
+        raise ValueError(variant)
+    return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
+
+
+ACT_FLOPS_PER_ELEM = 10.0
+
+
+def _epilogue_n_ops(bias: bool, act: str) -> int:
+    return (1 if bias else 0) + (1 if act != "none" else 0)
+
+
+def _epilogue_flops(d: DWConvDims, bias: bool, act: str) -> float:
+    elems = d.B * d.H * d.L
+    return (elems if bias else 0.0) + (ACT_FLOPS_PER_ELEM * elems if act != "none" else 0.0)
+
+
+def epilogue_fwd_traffic(d, variant="row", itemsize=4, *, epilogue="none",
+                         fused=True, block_h=8, block_t=512) -> TrafficEstimate:
+    bias, act = parse_epilogue(epilogue)
+    base = fwd_traffic(d, variant, itemsize, block_h=block_h, block_t=block_t)
+    bias_bytes = d.H * itemsize if bias else 0
+    flops = base.flops + _epilogue_flops(d, bias, act)
+    if fused:
+        return dataclasses.replace(
+            base, flops=flops, bytes_read=base.bytes_read + bias_bytes)
+    n_ops = _epilogue_n_ops(bias, act)
+    slab = d.B * d.H * d.L * itemsize
+    return dataclasses.replace(
+        base, flops=flops,
+        bytes_read=base.bytes_read + bias_bytes + n_ops * slab,
+        bytes_written=base.bytes_written + n_ops * slab)
+
+
+def epilogue_bwd_traffic(d, variant="fused", itemsize=4, *, epilogue="none",
+                         block_h=8, block_t=512, batch_chunk=128) -> TrafficEstimate:
+    bias, act = parse_epilogue(epilogue)
+    if epilogue == "none":
+        return bwd_fused_traffic(d, variant, itemsize, block_h=block_h,
+                                 block_t=block_t, batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L * itemsize
+    if variant == "split":
+        base = bwd_split_traffic(d, itemsize, block_h=block_h,
+                                 block_t=block_t, batch_chunk=batch_chunk)
+        pre = fwd_traffic(d, "row", itemsize, block_h=block_h, block_t=block_t)
+        extra_read = pre.bytes_read + 2 * slab + (slab if bias else 0)
+        extra_written = pre.bytes_written + slab + (d.H * itemsize if bias else 0)
+        return dataclasses.replace(
+            base,
+            flops=base.flops + pre.flops + _epilogue_flops(d, bias, act),
+            bytes_read=base.bytes_read + extra_read,
+            bytes_written=base.bytes_written + extra_written,
+            transactions=base.transactions + pre.transactions + 2)
+    if variant not in ("fused", "fused_partials"):
+        raise ValueError(variant)
+    flops = 3.0 * path_flops(d) + _epilogue_flops(d, bias, act)
+    Hb = min(block_h, d.H)
+    Bc = min(batch_chunk, d.B)
+    nC = cdiv(d.B, Bc)
+    nH = cdiv(d.H, Hb)
+    pslab = d.B * d.H * (d.L + d.K - 1) * itemsize
+    k_bytes = d.H * d.K * itemsize
+    dk_bytes = d.H * d.K * itemsize
+    bias_bytes = d.H * itemsize if bias else 0
+    Lt = epilogue_time_tile(d.L, d.K, block_t, variant)
+    if Lt is None:
+        nT, halo = 1, 0
+    else:
+        nT = cdiv(round_up(d.L, LANE), Lt)
+        halo = d.B * d.H * (nT - 1) * (d.K - 1)
+    halo_bytes = 3 * halo * itemsize
+    in_blocks = (7 if bias else 6) if nT > 1 else (4 if bias else 3)
+    read = slab + 2 * pslab + k_bytes + bias_bytes + halo_bytes
+    written = pslab + slab + dk_bytes + bias_bytes
+    tx = nH * nC * nT * in_blocks + 1
+    if variant == "fused_partials":
+        partials = nC * nT * d.H * (round_up(d.K, LANE) + LANE) * 4
+        read += partials
+        written += partials
+        tx += nH * nC * nT
+    return TrafficEstimate(flops, read, written, tx, aligned=True, reliable=True)
+
+
+def epilogue_unfused_bwd_traffic(d, itemsize=4, *, epilogue="none", block_h=8,
+                                 block_t=512, batch_chunk=128) -> TrafficEstimate:
+    bias, act = parse_epilogue(epilogue)
+    base = bwd_split_traffic(d, itemsize, block_h=block_h, block_t=block_t,
+                             batch_chunk=batch_chunk)
+    slab = d.B * d.H * d.L * itemsize
+    extra_read = (2 * slab if act != "none" else 0) + (slab if bias else 0)
+    extra_written = (slab if act != "none" else 0) + (d.H * itemsize if bias else 0)
+    return dataclasses.replace(
+        base,
+        flops=base.flops + _epilogue_flops(d, bias, act),
+        bytes_read=base.bytes_read + extra_read,
+        bytes_written=base.bytes_written + extra_written,
+        transactions=base.transactions + _epilogue_n_ops(bias, act))
+
+
+def epilogue_block_traffic(d, itemsize=4, *, epilogue="bias+silu", fused=True,
+                           fwd_variant="row", bwd_variant="fused", block_h=8,
+                           block_t=512, batch_chunk=128) -> TrafficEstimate:
+    fwd = epilogue_fwd_traffic(d, fwd_variant, itemsize, epilogue=epilogue,
+                               fused=fused, block_h=block_h, block_t=block_t)
+    if fused:
+        bwd = epilogue_bwd_traffic(d, bwd_variant, itemsize, epilogue=epilogue,
+                                   block_h=block_h, block_t=block_t,
+                                   batch_chunk=batch_chunk)
+    else:
+        bwd = epilogue_unfused_bwd_traffic(d, itemsize, epilogue=epilogue,
+                                           block_h=block_h, block_t=block_t,
+                                           batch_chunk=batch_chunk)
+    return TrafficEstimate(
+        flops=fwd.flops + bwd.flops,
+        bytes_read=fwd.bytes_read + bwd.bytes_read,
+        bytes_written=fwd.bytes_written + bwd.bytes_written,
+        transactions=fwd.transactions + bwd.transactions,
+        aligned=fwd.aligned and bwd.aligned,
+        reliable=fwd.reliable and bwd.reliable,
+    )
+
+
+_WARP_SIZE = 32
+_SHARED_TPB = 128
+
+
+def paper_fwd_traffic(d, variant, itemsize=4) -> TrafficEstimate:
+    flops = path_flops(d)
+    slab = d.B * d.H * d.L * itemsize
+    k_bytes = d.H * d.K * itemsize
+    if variant == "naive":
+        return TrafficEstimate(flops, slab + k_bytes, slab, 0, aligned=False, reliable=False)
+    if variant == "gmc":
+        rho = d.K / min(d.K, _WARP_SIZE)
+        return TrafficEstimate(flops, rho * slab + k_bytes, slab, 0, aligned=True, reliable=True)
+    if variant == "shared":
+        rho = (_SHARED_TPB + d.K - 1) / _SHARED_TPB
+        return TrafficEstimate(flops, rho * slab + k_bytes, slab, 0, aligned=True, reliable=True)
+    if variant == "warp":
+        return TrafficEstimate(flops, slab + k_bytes, slab, 0, aligned=True, reliable=True)
+    raise ValueError(variant)
+
+
+def paper_bwdk_traffic(d, variant, itemsize=4) -> TrafficEstimate:
+    flops = path_flops(d)
+    slab = d.B * d.H * d.L * itemsize
+    dk = d.H * d.K * itemsize
+    if variant == "naive":
+        return TrafficEstimate(flops, 2 * slab, dk, 0, aligned=False, reliable=False)
+    n_chunks = max(d.B // 128, 1)
+    partials = n_chunks * d.H * d.K * 4 * 2
+    return TrafficEstimate(flops, 2 * slab + partials / 2, dk + partials / 2, 0,
+                           aligned=True, reliable=True)
+
+
+# --------------------------------------------------------------------------
+# tuning/space.py (pre-refactor): VMEM working set + legality
+# --------------------------------------------------------------------------
+
+_KNOBLESS = ("xla", "split")
+
+
+def _effective_tiles_raw(block_h, block_t, batch_chunk,
+                         d: DWConvDims) -> Tuple[int, int, int, int]:
+    Hb = max(1, min(block_h, d.H))
+    Lout = round_up(d.L, LANE)
+    Lt = max(1, min(block_t, Lout))
+    Bc = max(1, min(batch_chunk, d.B))
+    return Hb, Lt, Bc, Lout
+
+
+def _bwd_time_tile_raw(path, variant, block_t, d, epilogue="none"):
+    if path == "bwd_fused" and epilogue != "none":
+        return epilogue_time_tile(d.L, d.K, block_t, variant)
+    return bwdk_time_tile(d.L, d.K, block_t, variant)
+
+
+def vmem_working_set_bytes(path, variant, d, itemsize, block_h=8, block_t=512,
+                           batch_chunk=128, epilogue="none") -> int:
+    Hb, Lt, Bc, Lout = _effective_tiles_raw(block_h, block_t, batch_chunk, d)
+    Wpad = round_up(Lout + d.K - 1, LANE)
+    Kp4 = Hb * round_up(d.K, LANE) * 4
+    if path in ("fwd", "bwd_in"):
+        if variant == "row":
+            return Hb * (Wpad + Lout) * itemsize
+        if variant == "block":
+            return Hb * 3 * Lt * itemsize
+        return Hb * (Lt + LANE + Lt) * itemsize
+    tiled_lt = _bwd_time_tile_raw(path, variant, block_t, d, epilogue)
+    if path == "bwd_fused":
+        epi = epilogue != "none"
+        if tiled_lt is not None:
+            slabs = 6 if epi else 5
+            extra = 2 * Bc * Hb * (tiled_lt + d.K - 1) * 4 if epi else 0
+            return Bc * Hb * slabs * tiled_lt * itemsize + extra + Kp4
+        extra = 2 * Bc * Hb * Lout * 4 if epi else 0
+        return Bc * Hb * (2 * Wpad + Lout) * itemsize + extra + Kp4
+    if tiled_lt is not None:
+        return Bc * Hb * 3 * tiled_lt * itemsize + Kp4
+    return Bc * Hb * (Wpad + d.L) * itemsize
+
+
+def is_legal(path, variant, d, itemsize=4, hw=None, block_h=8, block_t=512,
+             batch_chunk=128, epilogue="none") -> Tuple[bool, str]:
+    if min(block_h, block_t, batch_chunk) < 1:
+        return False, "tiling knobs must be positive"
+    if variant in _KNOBLESS:
+        return True, "ok"
+    Hb, Lt, Bc, Lout = _effective_tiles_raw(block_h, block_t, batch_chunk, d)
+    if path in ("fwd", "bwd_in"):
+        if variant in ("naive", "lane") and Lt % LANE != 0:
+            return False, f"Lt={Lt} not lane-aligned (Lt % {LANE} != 0)"
+        if variant == "block" and Lt < d.K - 1:
+            return False, f"halo K-1={d.K - 1} does not fit tile Lt={Lt}"
+    if hw is not None and hw.vmem_bytes:
+        need = vmem_working_set_bytes(path, variant, d, itemsize, block_h,
+                                      block_t, batch_chunk, epilogue)
+        if need > hw.vmem_bytes:
+            return False, f"VMEM working set {need}B > {int(hw.vmem_bytes)}B"
+    return True, "ok"

@@ -1,0 +1,290 @@
+"""Golden equivalence: schedule-derived numbers == pre-refactor formulas.
+
+The declarative ``repro.perfmodel`` refactor (PR 5) replaced four
+hand-maintained copies of the analytical model — traffic byte formulas in
+``analysis/traffic.py``, VMEM/legality predicates in ``tuning/space.py``,
+the tuner's stage-1 cost in ``tuning/cost.py``, and the tile geometry in
+``kernels/ops.py`` — with derivations from one registered
+:class:`~repro.perfmodel.KernelSchedule` per kernel configuration.
+
+This suite pins the refactor: every derived traffic/VMEM/legality/cost
+number must agree *exactly* (integer-byte equality, no tolerances) with
+the frozen pre-refactor implementations in ``tests/golden_legacy_model.py``
+over a parameterized (B, H, L, K, variant, block_h, block_t, batch_chunk,
+epilogue) grid that includes the paper's study shape, the long-sequence
+shape (tiled halo charges + partials accounting), and every epilogue
+configuration.
+"""
+from __future__ import annotations
+
+import pytest
+
+import golden_legacy_model as legacy
+from repro import perfmodel
+from repro.analysis import traffic
+from repro.analysis.hw import P100, TPU_V5E
+from repro.kernels import ops
+from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import EPILOGUE_KEYS
+from repro.tuning import cost, space
+
+# The grid: paper study shape, CPU-reduced paper shape, the long-sequence
+# shape (PR 3's time-tiled regime), a causal non-divisible shape, and a
+# deliberately ragged small shape (H % Hb != 0, L % LANE != 0).
+SHAPES = [
+    DWConvDims(B=16384, H=128, L=48, K=48),        # paper
+    DWConvDims(B=64, H=128, L=48, K=48),           # paper, CPU batch
+    DWConvDims(B=8, H=64, L=16384, K=4),           # long sequence (tiled)
+    DWConvDims(B=4, H=24, L=100, K=5, padding="causal"),
+    DWConvDims(B=3, H=17, L=300, K=7),             # ragged
+]
+TILINGS = [
+    (8, 512, 128),     # defaults
+    (4, 128, 16),      # small tiles: tiled bwd regime on long L
+    (16, 1024, 64),
+    (12, 300, 100),    # off-lattice knobs (clamping paths)
+]
+ITEMSIZES = [4, 2]
+EPILOGUES = list(EPILOGUE_KEYS)
+
+FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
+BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
+BWD_FUSED_VARIANTS = ("fused", "fused_partials", "split")
+
+
+def _assert_estimates_equal(old, new, tag):
+    for f in ("flops", "bytes_read", "bytes_written", "transactions",
+              "aligned", "reliable"):
+        assert getattr(old, f) == getattr(new, f), (
+            f"{tag}: field {f!r} diverged: "
+            f"legacy={getattr(old, f)!r} derived={getattr(new, f)!r}")
+
+
+@pytest.mark.parametrize("d", SHAPES, ids=str)
+@pytest.mark.parametrize("tiling", TILINGS, ids=str)
+@pytest.mark.parametrize("itemsize", ITEMSIZES)
+def test_golden_traffic_all_paths(d, tiling, itemsize):
+    """Old-vs-derived traffic agrees exactly on every (path, variant)."""
+    bh, bt, bc = tiling
+    for v in FWD_VARIANTS:
+        _assert_estimates_equal(
+            legacy.fwd_traffic(d, v, itemsize, block_h=bh, block_t=bt),
+            traffic.fwd_traffic(d, v, itemsize, block_h=bh, block_t=bt),
+            f"fwd/{v}")
+    for v in BWDK_VARIANTS:
+        _assert_estimates_equal(
+            legacy.bwdk_traffic(d, v, itemsize, block_h=bh, block_t=bt,
+                                batch_chunk=bc),
+            traffic.bwdk_traffic(d, v, itemsize, block_h=bh, block_t=bt,
+                                 batch_chunk=bc),
+            f"bwd_k/{v}")
+    for v in BWD_FUSED_VARIANTS:
+        _assert_estimates_equal(
+            legacy.bwd_fused_traffic(d, v, itemsize, block_h=bh, block_t=bt,
+                                     batch_chunk=bc),
+            traffic.bwd_fused_traffic(d, v, itemsize, block_h=bh, block_t=bt,
+                                      batch_chunk=bc),
+            f"bwd_fused/{v}")
+    _assert_estimates_equal(
+        legacy.bwd_split_traffic(d, itemsize, block_h=bh, block_t=bt,
+                                 batch_chunk=bc),
+        traffic.bwd_split_traffic(d, itemsize, block_h=bh, block_t=bt,
+                                  batch_chunk=bc),
+        "bwd_split")
+
+
+@pytest.mark.parametrize("d", SHAPES, ids=str)
+@pytest.mark.parametrize("epi", EPILOGUES)
+def test_golden_traffic_epilogue(d, epi):
+    """Epilogue accounting (fused, unfused-composition, recompute-split,
+    whole-block) agrees exactly, itemsize 4 and 2, tiled and untiled."""
+    for bh, bt, bc in ((8, 512, 128), (4, 128, 16)):
+        for itemsize in ITEMSIZES:
+            for fused in (True, False):
+                _assert_estimates_equal(
+                    legacy.epilogue_fwd_traffic(
+                        d, "row", itemsize, epilogue=epi, fused=fused,
+                        block_h=bh, block_t=bt),
+                    traffic.epilogue_fwd_traffic(
+                        d, "row", itemsize, epilogue=epi, fused=fused,
+                        block_h=bh, block_t=bt),
+                    f"epilogue_fwd/{epi}/fused={fused}")
+                _assert_estimates_equal(
+                    legacy.epilogue_block_traffic(
+                        d, itemsize, epilogue=epi, fused=fused, block_h=bh,
+                        block_t=bt, batch_chunk=bc),
+                    traffic.epilogue_block_traffic(
+                        d, itemsize, epilogue=epi, fused=fused, block_h=bh,
+                        block_t=bt, batch_chunk=bc),
+                    f"epilogue_block/{epi}/fused={fused}")
+            for v in BWD_FUSED_VARIANTS:
+                _assert_estimates_equal(
+                    legacy.epilogue_bwd_traffic(
+                        d, v, itemsize, epilogue=epi, block_h=bh, block_t=bt,
+                        batch_chunk=bc),
+                    traffic.epilogue_bwd_traffic(
+                        d, v, itemsize, epilogue=epi, block_h=bh, block_t=bt,
+                        batch_chunk=bc),
+                    f"epilogue_bwd/{v}/{epi}")
+            _assert_estimates_equal(
+                legacy.epilogue_unfused_bwd_traffic(
+                    d, itemsize, epilogue=epi, block_h=bh, block_t=bt,
+                    batch_chunk=bc),
+                traffic.epilogue_unfused_bwd_traffic(
+                    d, itemsize, epilogue=epi, block_h=bh, block_t=bt,
+                    batch_chunk=bc),
+                f"epilogue_unfused/{epi}")
+
+
+@pytest.mark.parametrize("d", SHAPES, ids=str)
+@pytest.mark.parametrize("variant", ("naive", "gmc", "shared", "warp"))
+def test_golden_traffic_paper_mode(d, variant):
+    for itemsize in ITEMSIZES:
+        _assert_estimates_equal(
+            legacy.paper_fwd_traffic(d, variant, itemsize),
+            traffic.paper_fwd_traffic(d, variant, itemsize),
+            f"paper_fwd/{variant}")
+        _assert_estimates_equal(
+            legacy.paper_bwdk_traffic(d, variant, itemsize),
+            traffic.paper_bwdk_traffic(d, variant, itemsize),
+            f"paper_bwdk/{variant}")
+
+
+@pytest.mark.parametrize("d", SHAPES, ids=str)
+@pytest.mark.parametrize("tiling", TILINGS, ids=str)
+@pytest.mark.parametrize("itemsize", ITEMSIZES)
+def test_golden_vmem_working_set(d, tiling, itemsize):
+    """Per-grid-cell VMEM footprints agree exactly for every staged
+    (path, variant), trivial and epilogue, tiled and untiled."""
+    bh, bt, bc = tiling
+    cases = [("fwd", v) for v in ("naive", "lane", "block", "row")]
+    cases += [("bwd_in", v) for v in ("naive", "lane", "block", "row")]
+    cases += [("bwd_k", v) for v in ("naive", "twostage", "accum")]
+    cases += [("bwd_fused", v) for v in ("fused", "fused_partials")]
+    for path, v in cases:
+        epis = EPILOGUES if path in ("fwd", "bwd_fused") else ("none",)
+        for epi in epis:
+            c = space.Candidate(path, v, bh, bt, bc)
+            old = legacy.vmem_working_set_bytes(
+                path, v, d, itemsize, block_h=bh, block_t=bt,
+                batch_chunk=bc, epilogue=epi)
+            new = space._vmem_working_set_bytes(c, d, itemsize, epi)
+            assert old == new, (
+                f"VMEM diverged for {path}/{v}/{epi} on {d} "
+                f"bh={bh} bt={bt} bc={bc} itemsize={itemsize}: "
+                f"legacy={old} derived={new}")
+
+
+@pytest.mark.parametrize("d", SHAPES, ids=str)
+@pytest.mark.parametrize("tiling", TILINGS + [(8, 300, 128), (8, 4, 128)],
+                         ids=str)
+@pytest.mark.parametrize("hw", [TPU_V5E, P100], ids=lambda h: h.name)
+def test_golden_legality_verdicts(d, tiling, hw):
+    """(ok, reason) verdicts agree exactly — including the lane-alignment
+    and halo-fit rejections and the VMEM bound (P100's 64 KiB shared-memory
+    model exercises the VMEM branch on most staged candidates)."""
+    bh, bt, bc = tiling
+    for path in space.PATHS:
+        for v in space._space_variants(path):
+            epis = EPILOGUES if path in ("fwd", "bwd_fused") else ("none",)
+            for epi in epis:
+                c = space.Candidate(path, v, bh, bt, bc)
+                old = legacy.is_legal(path, v, d, itemsize=4, hw=hw,
+                                      block_h=bh, block_t=bt, batch_chunk=bc,
+                                      epilogue=epi)
+                new = space.is_legal(c, d, itemsize=4, hw=hw, epilogue=epi)
+                assert old == new, (
+                    f"legality diverged for {path}/{v}/{epi} on {d} "
+                    f"bh={bh} bt={bt} bc={bc} hw={hw.name}: "
+                    f"legacy={old} derived={new}")
+
+
+@pytest.mark.parametrize("d", SHAPES, ids=str)
+@pytest.mark.parametrize("tiling", TILINGS, ids=str)
+def test_golden_stage1_cost(d, tiling):
+    """The tuner's stage-1 analytical time (roofline bound + DMA overhead)
+    agrees exactly with the legacy formula on every tuning path."""
+    bh, bt, bc = tiling
+    for path in space.PATHS:
+        for v in space._space_variants(path):
+            epis = ("none", "bias+gelu") if path in ("fwd", "bwd_fused") \
+                else ("none",)
+            for epi in epis:
+                c = space.Candidate(path, v, bh, bt, bc)
+                if path == "fwd":
+                    est = legacy.epilogue_fwd_traffic(
+                        d, v, 4, epilogue=epi, fused=True,
+                        block_h=bh, block_t=bt)
+                elif path == "bwd_in":
+                    est = legacy.fwd_traffic(d, v, 4, block_h=bh, block_t=bt)
+                elif path == "bwd_fused":
+                    est = legacy.epilogue_bwd_traffic(
+                        d, v, 4, epilogue=epi, block_h=bh, block_t=bt,
+                        batch_chunk=bc)
+                else:
+                    est = legacy.bwdk_traffic(d, v, 4, block_h=bh,
+                                              block_t=bt, batch_chunk=bc)
+                old = (max(est.flops / TPU_V5E.peak_flops_f32,
+                           est.bytes_moved / TPU_V5E.hbm_bw)
+                       + est.transactions * legacy_dma_overhead())
+                new = cost.analytical_time_s(c, d, itemsize=4, hw=TPU_V5E,
+                                             epilogue=epi)
+                assert old == new, (
+                    f"stage-1 cost diverged for {path}/{v}/{epi}: "
+                    f"legacy={old!r} derived={new!r}")
+
+
+def legacy_dma_overhead() -> float:
+    return 1e-7  # pre-refactor cost.DMA_OVERHEAD_S
+
+
+# --------------------------------------------------------------------------
+# geometry dedup: ops.py re-exports are the shared perfmodel functions
+# --------------------------------------------------------------------------
+
+
+def test_geometry_shared_single_source():
+    """``kernels/ops.py`` and the schedule model read the *same* geometry
+    functions (identity, not just equality), so runtime tiling and the
+    analytical model cannot drift."""
+    assert ops.unified_wpad is perfmodel.unified_wpad
+    assert ops.bwd_fused_wpad is perfmodel.bwd_fused_wpad
+    assert ops.bwdk_time_tile is perfmodel.bwdk_time_tile
+    assert ops.epilogue_time_tile is perfmodel.epilogue_time_tile
+
+
+@pytest.mark.parametrize("L", [48, 100, 300, 4096, 16384])
+@pytest.mark.parametrize("K", [3, 4, 5, 7, 48, 80])
+@pytest.mark.parametrize("bt", [4, 128, 300, 512, 2048, 1 << 30])
+def test_golden_geometry(L, K, bt):
+    assert ops.unified_wpad(L, K, bt) == legacy.unified_wpad(L, K, bt)
+    assert ops.bwd_fused_wpad(L, K) == legacy.bwd_fused_wpad(L, K)
+    for v in ("accum", "twostage", "fused", "fused_partials", "naive", "xla"):
+        assert ops.bwdk_time_tile(L, K, bt, v) == legacy.bwdk_time_tile(L, K, bt, v)
+        assert ops.epilogue_time_tile(L, K, bt, v) == legacy.epilogue_time_tile(L, K, bt, v)
+
+
+# --------------------------------------------------------------------------
+# typed contract: the historical TrafficEstimate is the perfmodel one
+# --------------------------------------------------------------------------
+
+
+def test_traffic_estimate_is_shared_type():
+    assert traffic.TrafficEstimate is perfmodel.TrafficEstimate
+    est = traffic.fwd_traffic(DWConvDims(B=2, H=8, L=48, K=4), "row")
+    assert isinstance(est, perfmodel.TrafficEstimate)
+    assert est.bytes_moved == est.bytes_read + est.bytes_written
+
+
+def test_schedule_operand_sums_are_the_estimate():
+    """The derived estimate is literally the sum of the spec's operands —
+    the decomposition the report prints is the traffic, not a restatement."""
+    d = DWConvDims(B=8, H=64, L=16384, K=4)
+    s = perfmodel.schedule_for("bwd_fused", "fused", d, 4, block_t=128)
+    est = perfmodel.derive_traffic(s)
+    assert est.bytes_read == sum(o.hbm_bytes for o in s.reads())
+    assert est.bytes_written == sum(o.hbm_bytes for o in s.writes())
+    assert est.transactions == sum(o.transactions for o in s.operands)
+    # the tiled schedule names the haloed staged slabs
+    names = {o.name for o in s.operands}
+    assert {"x_pad", "dy_pad", "dx", "dk"} <= names

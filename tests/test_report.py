@@ -1,0 +1,157 @@
+"""Counter-free report: payload structure, CLI, and benchmark agreement.
+
+Acceptance for PR 5's report half: ``python -m repro.launch.report`` runs
+clean, and its roofline rows are the same computation
+``benchmarks/paper_roofline.py`` renders.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro import perfmodel
+from repro.analysis.hw import P100, TPU_V5E
+from repro.analysis.paper_data import PAPER_DIMS, TABLE2_MS
+from repro.analysis.report import (
+    counter_free_markdown,
+    counter_free_report,
+    paper_roofline_points,
+)
+from repro.kernels.common import DWConvDims
+from repro.launch import report as report_cli
+
+D_SMALL = DWConvDims(B=8, H=16, L=48, K=4)
+
+
+def test_payload_structure_and_derivation():
+    payload = counter_free_report(D_SMALL, hw=TPU_V5E)
+    assert payload["hw"] == "tpu-v5e"
+    assert payload["decomposition"] and payload["roofline"]
+    assert len(payload["decomposition"]) == len(payload["roofline"])
+    for rec in payload["decomposition"]:
+        # decomposition rows are sums of their own operand breakdowns
+        reads = sum(o["bytes"] for o in rec["operands"] if o["role"] == "read")
+        writes = sum(o["bytes"] for o in rec["operands"] if o["role"] == "write")
+        assert rec["bytes_read"] == reads
+        assert rec["bytes_written"] == writes
+        assert rec["bytes_moved"] == reads + writes
+    # every reliable kernel point of this memory-bound operator is below the knee
+    for r in payload["roofline"]:
+        if r["regime"] is not None:
+            assert r["regime"] == "memory-bound"
+    # epilogue fusion always saves bytes
+    for r in payload["epilogue"]:
+        assert r["ratio"] < 1.0
+
+
+def test_markdown_renders_all_sections():
+    payload = counter_free_report(D_SMALL, hw=TPU_V5E)
+    md = counter_free_markdown(payload)
+    for section in ("Execution-path decomposition", "Roofline placement",
+                    "Paper-mode rows", "Epilogue fusion"):
+        assert section in md
+    assert "N/A" in md  # the naive proxy rows
+
+
+def test_paper_points_match_paper_roofline_benchmark():
+    """The CLI's paper-mode roofline rows and the benchmark's rows are one
+    computation: identical runtimes, AI, achieved GFLOP/s, and regimes."""
+    paper_roofline = pytest.importorskip(
+        "benchmarks.paper_roofline",
+        reason="benchmarks namespace package needs repo root on sys.path")
+    points = paper_roofline_points()
+    rows = [r for r in paper_roofline.run()
+            if not r.name.endswith("/summary")]
+    assert len(points) == len(rows) == 3 * len(TABLE2_MS)
+    for p, row in zip(points, rows):
+        assert row.name == f"paper_roofline/{p.variant}/{p.path}"
+        assert row.us_per_call == pytest.approx(p.runtime_s * 1e6)
+        assert f"achieved={p.achieved_gflops:.0f}GFLOP/s" in row.derived
+        if p.reliable:
+            assert f"AI={p.arithmetic_intensity:.2f}FLOP/B" in row.derived
+            assert p.regime in row.derived
+        else:
+            assert "AI=N/A" in row.derived
+
+
+def test_paper_points_use_published_runtimes():
+    points = paper_roofline_points()
+    by_key = {(p.variant, p.path): p for p in points}
+    for variant, (fwd_ms, bin_ms, bk_ms, _, _) in TABLE2_MS.items():
+        assert by_key[(variant, "fwd")].runtime_s == pytest.approx(fwd_ms / 1e3)
+        assert by_key[(variant, "bwd_in")].runtime_s == pytest.approx(bin_ms / 1e3)
+        assert by_key[(variant, "bwd_k")].runtime_s == pytest.approx(bk_ms / 1e3)
+        # Fig. 10 headline: everything memory-bound on the P100 roofline
+        for path in ("fwd", "bwd_in", "bwd_k"):
+            p = by_key[(variant, path)]
+            if p.reliable:
+                assert p.regime == "memory-bound"
+                assert p.knee == pytest.approx(P100.peak_flops_f32 / P100.hbm_bw)
+
+
+def test_paper_section_pins_f32_charging():
+    """The paper-mode rows divide by *published float32* runtimes, so a
+    bfloat16 report must not halve their bytes (which would flip gmc rows
+    past the P100 knee into compute-bound)."""
+    bf16 = counter_free_report(PAPER_DIMS, hw=TPU_V5E, itemsize=2)
+    f32 = counter_free_report(PAPER_DIMS, hw=TPU_V5E, itemsize=4)
+    assert bf16["paper"] == f32["paper"]
+    for r in bf16["paper"]:
+        if r["regime"] is not None:
+            assert r["regime"] == "memory-bound"
+
+
+def test_cli_runs_clean_and_writes_artifacts(tmp_path):
+    out_md = tmp_path / "REPORT.md"
+    out_json = tmp_path / "BENCH_report.json"
+    rc = report_cli.main([
+        "--shapes", "paper", "--out", str(out_md), "--json", str(out_json)])
+    assert rc == 0
+    md = out_md.read_text()
+    assert "# Counter-free performance report" in md
+    assert "16384" in md  # the paper shape made it in
+    payload = json.loads(out_json.read_text())
+    assert payload["dims"] == {"B": PAPER_DIMS.B, "H": PAPER_DIMS.H,
+                               "L": PAPER_DIMS.L, "K": PAPER_DIMS.K,
+                               "padding": "same"}
+    assert payload["roofline"] and payload["paper"] and payload["epilogue"]
+
+
+def test_cli_shape_and_hw_flags(tmp_path, capsys):
+    rc = report_cli.main(["--shapes", "8x16x48x4", "--hw", "p100",
+                          "--no-paper", "--no-epilogue"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "hardware=p100" in out
+    assert "Paper-mode rows" not in out
+
+
+def test_cli_rejects_bad_shape():
+    with pytest.raises(SystemExit):
+        report_cli.main(["--shapes", "not-a-shape"])
+
+
+def test_dtype_itemsize_convention():
+    assert perfmodel.dtype_itemsize("float32") == 4
+    assert perfmodel.dtype_itemsize("bfloat16") == 2
+    with pytest.raises(ValueError):
+        perfmodel.dtype_itemsize("int8")
+    # bf16 charging halves operand bytes but keeps f32 partials at 4
+    d = DWConvDims(B=8, H=64, L=16384, K=4)
+    f32 = perfmodel.derive_traffic(
+        perfmodel.schedule_for("bwd_k", "twostage", d, 4, block_t=128))
+    bf16 = perfmodel.derive_traffic(
+        perfmodel.schedule_for("bwd_k", "twostage", d, 2, block_t=128))
+    partials = next(
+        o.hbm_bytes
+        for o in perfmodel.schedule_for("bwd_k", "twostage", d, 2,
+                                        block_t=128).operands
+        if o.name == "dk_partials" and o.role == "write")
+    # operand slabs halve; the partials term is identical in both charges
+    assert bf16.bytes_read < f32.bytes_read
+    assert partials == next(
+        o.hbm_bytes
+        for o in perfmodel.schedule_for("bwd_k", "twostage", d, 4,
+                                        block_t=128).operands
+        if o.name == "dk_partials" and o.role == "write")
