@@ -17,6 +17,10 @@ no longer hard-codes any row-parsing regex.
 A module may signal a soft failure by emitting a row whose ``derived``
 contains ``FAILED`` (e.g. the e2e convergence check): the remaining rows
 still print, but the harness exits nonzero.
+
+Every ``--json`` run also appends its numeric top-level metrics to the
+perf-trajectory ledger (``repro.obs.ledger``; opt out with ``--no-ledger``),
+so ``python -m repro.launch.perf --check`` can gate regressions across runs.
 """
 from __future__ import annotations
 
@@ -57,6 +61,8 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write machine-readable results (BENCH_kernels.json)")
+    ap.add_argument("--no-ledger", action="store_true",
+                    help="do not append --json metrics to the perf ledger")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -78,6 +84,10 @@ def main() -> None:
             hook = getattr(mod, "top_level_metrics", None)
             if hook is not None:
                 metrics.update(hook(rows))
+            else:
+                print(f"# note: benchmarks.{name} exports no top_level_metrics "
+                      f"hook — its rows are not promoted to the --json payload "
+                      f"or the perf ledger", file=sys.stderr)
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", file=sys.stdout)
@@ -89,6 +99,19 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
+        if not args.no_ledger:
+            # best-effort: a broken ledger must never fail the benchmark run
+            try:
+                from repro.obs.ledger import append_entry, numeric_metrics
+
+                nums = numeric_metrics(payload)
+                if nums:
+                    entry = append_entry(nums, source=f"benchmarks/run.py"
+                                         f"{' --only ' + args.only if args.only else ''}")
+                    print(f"# ledger: appended {len(nums)} metrics @ {entry.sha}",
+                          file=sys.stderr)
+            except Exception as e:
+                print(f"# ledger: append skipped ({e})", file=sys.stderr)
     if failures:
         sys.exit(1)
 

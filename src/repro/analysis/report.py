@@ -179,6 +179,8 @@ def counter_free_report(
     batch_chunk: int = 128,
     include_paper: bool = True,
     include_epilogue: bool = True,
+    calibration=None,
+    measured: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
     """The paper's full counter-free analysis as one JSON-able payload.
 
@@ -189,7 +191,13 @@ def counter_free_report(
         effective bandwidth at the modeled bound vs the ``hw`` peaks;
       * ``paper``         — the P100 paper-mode rows against the published
         Table II runtimes (Fig. 10 / Table III analogues);
-      * ``epilogue``      — fused-vs-unfused whole-block bytes per epilogue.
+      * ``epilogue``      — fused-vs-unfused whole-block bytes per epilogue;
+      * ``calibration`` / ``calibrated_roofline`` — when a
+        :class:`~repro.obs.calibrate.CalibratedHardware` overlay is given,
+        the measured achievable roofs and each kernel's placement against
+        them (the denominator this runner can actually reach);
+      * ``measured``      — per-kernel modeled-vs-measured rows (built by
+        ``launch/report.py``, which owns the measurement), passed through.
     """
     kw = dict(block_h=block_h, block_t=block_t, batch_chunk=batch_chunk)
     schedules = study_schedules(d, itemsize, **kw)
@@ -214,6 +222,34 @@ def counter_free_report(
             for study, s in schedules
         ],
     }
+    if calibration is not None:
+        cal_hw = calibration.hardware_model(hw)
+        payload["calibration"] = {
+            "fingerprint": calibration.fingerprint,
+            "base": hw.name,
+            "hbm_bw": calibration.hbm_bw,
+            "copy_bw": calibration.copy_bw,
+            "flops_f32": calibration.flops_f32,
+            "dispatch_overhead_s": calibration.dispatch_overhead_s,
+            "bw_overhead_s": calibration.bw_overhead_s,
+            "bw_r2": calibration.bw_r2,
+            "flops_r2": calibration.flops_r2,
+            "created": calibration.created,
+            "bw_fraction_of_peak": calibration.hbm_bw / hw.hbm_bw,
+            "flops_fraction_of_peak": calibration.flops_f32 / hw.peak_flops_f32,
+        }
+        # The same kernels, re-placed against the *achievable* roofs: the
+        # knee moves, regimes can flip, and bandwidth utilization is now
+        # relative to what a microbenchmark proved this runner reaches.
+        payload["calibrated_roofline"] = [
+            dict(perfmodel.roofline_point(
+                s, cal_hw,
+                runtime_s=calibration.analytical_time_s(s, hw)).to_dict(),
+                 study=study, runtime_modeled=True)
+            for study, s in schedules
+        ]
+    if measured is not None:
+        payload["measured"] = measured
     if include_paper:
         # Always float32 charging here: the section divides modeled bytes by
         # the paper's *published* Table II runtimes, which are f32 runs — a
@@ -290,6 +326,74 @@ def counter_free_markdown(payload: Dict[str, Any]) -> str:
               else f"{100 * r['bandwidth_utilization']:.1f}%"]
              for r in payload["roofline"]]),
     ]
+    if payload.get("calibration"):
+        c = payload["calibration"]
+        lines += [
+            "",
+            "## Hardware calibration (this runner)",
+            "",
+            f"Device `{c['fingerprint']}`, microbenchmarked "
+            f"{c['created'] or 'previously'}: the *achievable* roofs below "
+            "replace the datasheet peaks as the effective-bandwidth",
+            "denominator (fit: `time = overhead + bytes/bandwidth` over the "
+            "sweep; see `repro.obs.calibrate`).",
+            "",
+            markdown_table(
+                ["quantity", "measured", "datasheet", "achieved"],
+                [["triad bandwidth", fmt_si(c["hbm_bw"], "B/s"),
+                  fmt_si(payload["hbm_peak_bytes_per_s"], "B/s"),
+                  f"{100 * c['bw_fraction_of_peak']:.1f}%"],
+                 ["copy bandwidth", fmt_si(c["copy_bw"], "B/s"), "—", "—"],
+                 ["f32 FLOP/s", fmt_si(c["flops_f32"], "FLOP/s"),
+                  fmt_si(payload["peak_flops_f32"], "FLOP/s"),
+                  f"{100 * c['flops_fraction_of_peak']:.1f}%"],
+                 ["dispatch floor", fmt_s(c["dispatch_overhead_s"]), "—", "—"],
+                 ["launch overhead (bw fit)", fmt_s(c["bw_overhead_s"]),
+                  "—", f"r²={c['bw_r2']:.3f}"]]),
+        ]
+    if payload.get("calibrated_roofline"):
+        lines += [
+            "",
+            "## Roofline placement — calibrated (achievable) roofs",
+            "",
+            markdown_table(
+                ["study", "path", "kernel", "AI (FLOP/B)", "regime",
+                 "calibrated time", "eff. BW", "BW util (achievable)"],
+                [[r["study"], r["path"], r["variant"],
+                  _fmt_ai(r["arithmetic_intensity"]),
+                  r["regime"] or "N/A",
+                  fmt_s(r["runtime_s"]),
+                  "N/A" if r["effective_bandwidth"] is None
+                  else fmt_si(r["effective_bandwidth"], "B/s"),
+                  "N/A" if r["bandwidth_utilization"] is None
+                  else f"{100 * r['bandwidth_utilization']:.1f}%"]
+                 for r in payload["calibrated_roofline"]]),
+        ]
+    if payload.get("measured"):
+        m = payload["measured"]
+        md = m["dims"]
+        lines += [
+            "",
+            "## Modeled vs measured (per-kernel error bars)",
+            "",
+            f"Kernels metered at (B, H, L, K) = ({md['B']}, {md['H']}, "
+            f"{md['L']}, {md['K']}), dtype={m['dtype']}, "
+            f"{m['iters']} iterations; measured is the median ±1σ "
+            "(paper §III-F protocol).  `x model` divides measured time by "
+            "the calibrated analytical bound — the per-kernel error bar on "
+            "the counter-free model itself.",
+            "",
+            markdown_table(
+                ["path", "kernel", "modeled (datasheet)",
+                 "modeled (calibrated)", "measured ±1σ", "x model"],
+                [[r["path"], r["variant"], fmt_s(r["modeled_s"]),
+                  "N/A" if r.get("modeled_calibrated_s") is None
+                  else fmt_s(r["modeled_calibrated_s"]),
+                  f"{fmt_s(r['measured_s'])} ±{fmt_s(r['measured_std_s'])}",
+                  "N/A" if r.get("error_ratio") is None
+                  else f"{r['error_ratio']:.2f}x"]
+                 for r in m["rows"]]),
+        ]
     if payload.get("paper"):
         lines += [
             "",

@@ -1,0 +1,71 @@
+"""Hardware-calibration CLI: measure this runner's achievable roofs.
+
+  PYTHONPATH=src python -m repro.launch.calibrate
+  PYTHONPATH=src python -m repro.launch.calibrate --fast \\
+      --out results/calibration/ci-calibration.json
+
+Runs the counter-free microbenchmark suite (HBM copy/triad sweep, f32
+matmul sweep, dispatch-overhead floor), fits the achievable-roof overlay
+(``repro.obs.calibrate``), persists it keyed by the device fingerprint,
+and prints the calibrated-vs-datasheet summary.  ``launch/report.py``
+consumes the persisted JSON to put calibrated denominators under its
+effective-bandwidth rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.hw import HARDWARE, TPU_V5E
+from repro.obs.calibrate import (
+    default_calibration_path,
+    run_calibration,
+    save_calibration,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--hw", default=TPU_V5E.name, choices=sorted(HARDWARE),
+                    help="datasheet base model the overlay applies to")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller size ladders + fewer iterations (CI)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timing iterations per microbenchmark point")
+    ap.add_argument("--out", default="",
+                    help="output JSON (default: the device-fingerprint path)")
+    args = ap.parse_args(argv)
+
+    base = HARDWARE[args.hw]
+    cal = run_calibration(base=base, fast=args.fast, iters=args.iters)
+    path = save_calibration(cal, args.out or None)
+
+    def pct(measured: float, peak: float) -> str:
+        return f"{100.0 * measured / peak:.1f}% of datasheet" if peak else "n/a"
+
+    print(f"[calibrate] device      : {cal.fingerprint}")
+    print(f"[calibrate] base model  : {base.name}")
+    print(f"[calibrate] triad BW    : {cal.hbm_bw / 1e9:.2f} GB/s "
+          f"({pct(cal.hbm_bw, base.hbm_bw)}, fit r2={cal.bw_r2:.3f}, "
+          f"launch overhead {cal.bw_overhead_s * 1e6:.1f}us)")
+    print(f"[calibrate] copy BW     : {cal.copy_bw / 1e9:.2f} GB/s")
+    print(f"[calibrate] f32 FLOP/s  : {cal.flops_f32 / 1e9:.2f} GFLOP/s "
+          f"({pct(cal.flops_f32, base.peak_flops_f32)}, r2={cal.flops_r2:.3f})")
+    print(f"[calibrate] dispatch    : {cal.dispatch_overhead_s * 1e6:.2f} us/call")
+    print(f"[calibrate] wrote {path}")
+    if cal.hbm_bw > base.hbm_bw or cal.flops_f32 > base.peak_flops_f32:
+        # Measuring above the datasheet roof means the benchmark hit a cache
+        # (sizes too small for this memory system) — say so rather than
+        # silently persisting an impossible roof.
+        print("[calibrate] warning: measured rate exceeds the datasheet peak; "
+              "sweep sizes are likely cache-resident for this device",
+              file=sys.stderr)
+    if default_calibration_path(cal.fingerprint) != path:
+        print(f"[calibrate] note: report auto-load looks at "
+              f"{default_calibration_path(cal.fingerprint)}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Perf-trajectory CLI: append to, inspect, and gate on the bench ledger.
+
+  PYTHONPATH=src python -m repro.launch.perf                  # show trajectory
+  PYTHONPATH=src python -m repro.launch.perf --append BENCH_kernels.json
+  PYTHONPATH=src python -m repro.launch.perf --check          # regression gate
+
+``benchmarks/run.py --json`` appends its top-level metrics automatically;
+``--append`` ingests an existing BENCH_*.json by hand.  ``--check`` gates
+the newest entry against the rolling median of the last ``--window``
+entries recorded on the same device fingerprint, with a noise-aware
+tolerance (see ``repro.obs.ledger``): exit 1 on regression, 0 otherwise —
+wire it as a CI step so "raw speed" claims are enforced, not asserted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.ledger import (
+    append_entry,
+    check_regression,
+    ledger_path,
+    metric_direction,
+    numeric_metrics,
+    read_ledger,
+)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    return f"{v:.4g}"
+
+
+def _show(entries) -> None:
+    if not entries:
+        print(f"[perf] ledger {ledger_path()} is empty")
+        return
+    names = sorted({m for e in entries for m in e.metrics})
+    print(f"[perf] {len(entries)} entries in {ledger_path()}")
+    header = ["ts", "sha", "fingerprint", "source"] + names
+    print(" | ".join(header))
+    for e in entries:
+        row = [e.ts[:19], e.sha, e.fingerprint, e.source]
+        row += [_fmt(e.metrics.get(n)) for n in names]
+        print(" | ".join(row))
+
+
+def _check(entries, args) -> int:
+    ok, verdicts = check_regression(
+        entries, window=args.window, rel_tol=args.rel_tol,
+        noise_mult=args.noise_mult,
+        metrics=args.metrics.split(",") if args.metrics else None)
+    if not verdicts:
+        print("[perf] --check: ledger empty — nothing to gate (pass)")
+        return 0
+    arrow = {+1: "higher-better", -1: "lower-better", 0: "informational"}
+    print("metric | status | current | baseline(median) | tolerance | n | direction")
+    for v in verdicts:
+        print(f"{v.metric} | {v.status} | {_fmt(v.current)} | "
+              f"{_fmt(v.baseline)} | {_fmt(v.tolerance)} | {v.n_history} | "
+              f"{arrow[v.direction]}")
+    if ok:
+        print("[perf] --check: PASS")
+        return 0
+    bad = ", ".join(v.metric for v in verdicts if v.gate_failed)
+    print(f"[perf] --check: REGRESSED ({bad})")
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--ledger", default="",
+                    help="ledger path (default $REPRO_PERF_LEDGER or "
+                         "results/perf/ledger.jsonl)")
+    ap.add_argument("--append", default="", metavar="BENCH_JSON",
+                    help="append the top-level metrics of a benchmarks/run.py "
+                         "--json payload")
+    ap.add_argument("--source", default="launch.perf",
+                    help="source label recorded with --append")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the newest entry vs the rolling baseline; "
+                         "exit 1 on regression")
+    ap.add_argument("--show", action="store_true",
+                    help="print the trajectory (default when no other action)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="rolling-baseline window (entries)")
+    ap.add_argument("--rel-tol", type=float, default=0.05,
+                    help="relative tolerance floor")
+    ap.add_argument("--noise-mult", type=float, default=3.0,
+                    help="MAD-sigma multiplier for the noise band")
+    ap.add_argument("--metrics", default="",
+                    help="comma-separated metric subset to gate on")
+    args = ap.parse_args(argv)
+
+    path = args.ledger or None
+    if args.append:
+        with open(args.append) as f:
+            payload = json.load(f)
+        metrics = numeric_metrics(payload)
+        if not metrics:
+            print(f"[perf] {args.append} has no numeric top-level metrics",
+                  file=sys.stderr)
+            return 2
+        entry = append_entry(metrics, source=args.source, path=path)
+        gated = [m for m in metrics if metric_direction(m) != 0]
+        print(f"[perf] appended {len(metrics)} metrics "
+              f"({len(gated)} gate-able: {', '.join(sorted(gated)) or 'none'}) "
+              f"from {args.append} @ {entry.sha}")
+
+    if args.check:
+        return _check(read_ledger(path), args)
+    if args.show or not args.append:
+        _show(read_ledger(path))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

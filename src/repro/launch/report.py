@@ -20,15 +20,22 @@ from __future__ import annotations
 
 import argparse
 import sys
-from typing import List
+from typing import List, Optional, Sequence
 
-from repro.analysis.hw import HARDWARE, TPU_V5E
+from repro.analysis.hw import HARDWARE, TPU_V5E, HardwareModel
 from repro.analysis.report import (
     counter_free_markdown,
     counter_free_report,
     dump_json,
 )
 from repro.kernels.common import DWConvDims
+from repro.obs.calibrate import (
+    CalibratedHardware,
+    load_calibration,
+    load_for_device,
+    run_calibration,
+    save_calibration,
+)
 from repro.perfmodel import dtype_itemsize
 
 
@@ -55,6 +62,94 @@ def parse_shapes(spec: str) -> List[DWConvDims]:
     return out
 
 
+def measured_error_rows(
+    d: DWConvDims,
+    *,
+    hw: HardwareModel,
+    calibration: Optional[CalibratedHardware] = None,
+    itemsize: int = 4,
+    dtype: str = "float32",
+    iters: int = 3,
+    warmup: int = 1,
+    paths: Sequence[str] = ("fwd", "bwd_fused"),
+) -> List[dict]:
+    """Per-kernel modeled-vs-measured rows at a *metered* shape.
+
+    For each unique (path x study variant) the study table carries, run the
+    candidate through the tuner's measurable (paper §III-F protocol:
+    explicit sync, warm-up excluded, median + σ over repeats) and put the
+    measured time next to the analytical bound — datasheet and calibrated.
+    ``error_ratio`` (measured / calibrated bound) is the per-kernel error
+    bar the counter-free claims inherit.
+    """
+    from repro.analysis.timer import time_fn
+    from repro.core.variant import REGISTRY
+    from repro.obs import trace as obs_trace
+    from repro.tuning import cost, space
+
+    wanted = []
+    for spec in REGISTRY.values():
+        if spec.fwd == "auto":
+            continue
+        pairs = [("fwd", spec.fwd), ("bwd_in", spec.bwd_in),
+                 ("bwd_k", spec.bwd_k)]
+        if spec.bwd == "fused":
+            pairs.append(("bwd_fused", spec.bwd_fused))
+        for path, variant in pairs:
+            if path in paths and (path, variant) not in wanted:
+                wanted.append((path, variant))
+    if "bwd_fused" in paths and ("bwd_fused", "split") not in wanted:
+        wanted.append(("bwd_fused", "split"))
+
+    tracer = obs_trace.get_tracer()
+    rows = []
+    for path, variant in wanted:
+        c = space.normalize(space.Candidate(path, variant, 8, 512, 128), d)
+        s = space._schedule(c, d, itemsize, "none")
+        fn, args = cost.build_measurable(c, d, dtype=dtype)
+        with tracer.span("report/measure", path=path, variant=variant) as sp:
+            t = time_fn(fn, *args, warmup=warmup, iters=iters)
+            sp.tag(measured_s=t.median_s)
+            sp.attach("kernel", s, hw=hw, runtime_s=t.median_s)
+        from repro import perfmodel
+
+        modeled = perfmodel.analytical_time_s(s, hw)
+        modeled_cal = (calibration.analytical_time_s(s, hw)
+                       if calibration is not None else None)
+        denom = modeled_cal if modeled_cal else modeled
+        est = perfmodel.derive_traffic(s)
+        rows.append({
+            "path": path,
+            "variant": variant,
+            "modeled_s": modeled,
+            "modeled_calibrated_s": modeled_cal,
+            "measured_s": t.median_s,
+            "measured_std_s": t.std_s,
+            "error_ratio": (t.median_s / denom) if denom else None,
+            "modeled_bytes": est.bytes_moved,
+            "effective_bandwidth": (est.bytes_moved / t.median_s
+                                    if est.reliable and t.median_s > 0 else None),
+        })
+    return rows
+
+
+def resolve_calibration(spec: str, hw: HardwareModel) -> Optional[CalibratedHardware]:
+    """``none`` | ``auto`` (load for this device, else run fast + persist)
+    | an explicit JSON path."""
+    if spec == "none":
+        return None
+    if spec != "auto":
+        return load_calibration(spec)
+    cal = load_for_device()
+    if cal is None:
+        print("[report] no calibration for this device — running the fast "
+              "microbenchmark suite (persisting for reuse)", file=sys.stderr)
+        cal = run_calibration(base=hw, fast=True)
+        path = save_calibration(cal)
+        print(f"[report] calibration written to {path}", file=sys.stderr)
+    return cal
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -77,10 +172,34 @@ def main(argv=None) -> int:
                     help="write the markdown report here (default: stdout)")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write the machine-readable payload (BENCH_report.json)")
+    ap.add_argument("--calibration", default="auto", metavar="PATH|auto|none",
+                    help="calibrated-roof overlay: 'auto' loads (or runs + "
+                         "persists) this device's microbenchmark fit; 'none' "
+                         "keeps datasheet peaks only")
+    ap.add_argument("--no-measure", dest="measure", action="store_false",
+                    default=True,
+                    help="skip the per-kernel modeled-vs-measured section")
+    ap.add_argument("--measure-shape", default="8x32x48x48",
+                    help="BxHxLxK the error-bar kernels are metered at "
+                         "(small: interpret mode runs kernel bodies in Python)")
+    ap.add_argument("--measure-iters", type=int, default=3)
+    ap.add_argument("--measure-paths", default="fwd,bwd_fused",
+                    help="comma-separated execution paths to meter")
     args = ap.parse_args(argv)
 
     hw = HARDWARE[args.hw]
     itemsize = dtype_itemsize(args.dtype)
+    calibration = resolve_calibration(args.calibration, hw)
+    measured = None
+    if args.measure:
+        dm = parse_shapes(args.measure_shape)[0]
+        rows = measured_error_rows(
+            dm, hw=hw, calibration=calibration, itemsize=itemsize,
+            dtype=args.dtype, iters=args.measure_iters,
+            paths=tuple(p for p in args.measure_paths.split(",") if p))
+        measured = {"dims": {"B": dm.B, "H": dm.H, "L": dm.L, "K": dm.K},
+                    "dtype": args.dtype, "iters": args.measure_iters,
+                    "rows": rows}
     payloads = []
     chunks = []
     for d in parse_shapes(args.shapes):
@@ -90,6 +209,8 @@ def main(argv=None) -> int:
             batch_chunk=args.batch_chunk,
             include_paper=not args.no_paper,
             include_epilogue=not args.no_epilogue,
+            calibration=calibration,
+            measured=measured,
         )
         payloads.append(payload)
         chunks.append(counter_free_markdown(payload))

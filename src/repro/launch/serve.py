@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ from repro.distributed import sharding as shd
 from repro.distributed.stepfn import build_serve_step
 from repro.launch.mesh import make_mesh
 from repro.models.api import get_model, make_demo_batch
+from repro.obs import trace as obs_trace
 
 
 def main(argv=None) -> int:
@@ -30,9 +30,20 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write the span trace (JSONL) here; phase timings "
+                         "are read from the spans either way")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    # The prefill/decode numbers below are the spans' own measurements
+    # (event-style: block_until_ready before the span closes, perf_counter
+    # clock) — with --trace they are additionally persisted as JSONL.
+    if args.trace:
+        tracer = obs_trace.configure(args.trace, meta={"launcher": "serve",
+                                                       "arch": cfg.name})
+    else:
+        tracer = obs_trace.Tracer(enabled=True)
     model = get_model(cfg)
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))
@@ -74,23 +85,31 @@ def main(argv=None) -> int:
 
         # prefill by teacher-forcing the prompt token by token (robust across
         # families); production prefill path is exercised by the dry-run.
-        t0 = time.time()
-        for i in range(args.prompt_len - 1):
-            _, cache = serve_step(params, cache, {"tokens": batch["tokens"][:, i : i + 1]})
-        jax.block_until_ready(cache)
-        t_prefill = time.time() - t0
+        with tracer.span("serve/prefill", tokens=args.prompt_len - 1) as sp_pre:
+            for i in range(args.prompt_len - 1):
+                # unsynced: per-token prefill spans time the *enqueue* (the
+                # dispatch floor); the phase span syncs and owns execution.
+                with tracer.span("serve/prefill/token", pos=i):
+                    _, cache = serve_step(
+                        params, cache, {"tokens": batch["tokens"][:, i : i + 1]})
+            sp_pre.sync(cache)
+        t_prefill = sp_pre.dur_s
 
         # Decode continues from the *last* prompt token (tokens 0..P-2 are
         # already in the cache; feeding token P-1 predicts position P).
         tok = batch["tokens"][:, -1:]
-        t0 = time.time()
         generated = []
-        for _ in range(args.gen):
-            nxt, cache = serve_step(params, cache, {"tokens": tok})
-            tok = nxt[:, None]
-            generated.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
+        with tracer.span("serve/decode", tokens=args.gen) as sp_dec:
+            for pos in range(args.gen):
+                with tracer.span("serve/decode/token", pos=pos) as sp_tok:
+                    nxt, cache = serve_step(params, cache, {"tokens": tok})
+                    tok = nxt[:, None]
+                    # np.asarray devices-to-host copies, which blocks on the
+                    # step — the per-token span time is the real step latency.
+                    generated.append(np.asarray(tok))
+                    sp_tok.sync(tok)
+            sp_dec.sync(tok)
+        t_decode = sp_dec.dur_s
     # --gen 0 is a legitimate prefill-only measurement: keep shapes valid.
     gen = (np.concatenate(generated, axis=1) if generated
            else np.zeros((args.batch, 0), np.int64))
@@ -102,6 +121,10 @@ def main(argv=None) -> int:
     print(f"[serve] decode {gen.shape[1]} tok/seq in {t_decode:.2f}s "
           f"({decode_toks / max(t_decode, 1e-9):.1f} tok/s)")
     print("[serve] sample token ids:", gen[0].tolist())
+    if args.trace:
+        tracer.close()
+        print(f"[serve] trace written to {args.trace} "
+              f"({len(tracer.records)} records)")
     return 0
 
 

@@ -23,6 +23,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_config, list_archs
 from repro.data.lm import LMStreamConfig, LMTokenStream
 from repro.distributed import sharding as shd
+from repro.obs import trace as obs_trace
 from repro.distributed.stepfn import (
     batch_shardings,
     build_train_step,
@@ -53,6 +54,10 @@ def parse_args(argv=None):
     ap.add_argument("--heartbeat", default="")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a span trace (JSONL) here: per-step data/step/"
+                         "checkpoint spans, with schedule-derived modeled "
+                         "bytes attached to the paper-operator kernels")
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="test hook: crash the process at this step")
     return ap.parse_args(argv)
@@ -62,6 +67,24 @@ def main(argv=None) -> int:
     args = parse_args(argv)
     cfg = get_config(args.arch, smoke=args.smoke)
     model_axes = None
+
+    tracer = (obs_trace.configure(args.trace, meta={"launcher": "train",
+                                                    "arch": cfg.name})
+              if args.trace else obs_trace.get_tracer())
+    step_attachments = ()
+    attach_hw = None
+    if tracer.enabled:
+        # Paper-operator kernels this arch runs per step: each step span
+        # carries their schedule-derived modeled bytes, so the trace reports
+        # per-span effective bandwidth with no counters.  Roofs come from
+        # this runner's calibration when one exists.
+        from repro.analysis.hw import TPU_V5E
+        from repro.obs.calibrate import load_for_device
+
+        cal = load_for_device()
+        attach_hw = cal.hardware_model(TPU_V5E) if cal is not None else TPU_V5E
+        step_attachments = tuple(obs_trace.dwconv_step_schedules(
+            cfg, args.batch, args.seq))
 
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))
@@ -111,14 +134,19 @@ def main(argv=None) -> int:
         jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
         losses = []
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(start_step, args.steps):
             if args.fail_at_step == step:
                 print(f"[train] simulated failure at step {step}", flush=True)
                 sys.exit(17)
-            batch_np = stream.next_batch()
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            with tracer.span("train/data", step=step):
+                batch_np = stream.next_batch()
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            with tracer.span("train/step", step=step) as sp:
+                params, opt_state, metrics = jit_step(params, opt_state, batch)
+                sp.sync(metrics)
+                for kname, sched, count in step_attachments:
+                    sp.attach(kname, sched, hw=attach_hw, count=count)
             loss = float(metrics["loss"])
             losses.append(loss)
             if hb is not None:
@@ -126,16 +154,22 @@ def main(argv=None) -> int:
             if args.log_every and step % args.log_every == 0:
                 print(f"[train] step={step} loss={loss:.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
-                      f"({(time.time() - t0):.1f}s)", flush=True)
+                      f"({(time.perf_counter() - t0):.1f}s)", flush=True)
             if mgr is not None and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-                mgr.save_async(step + 1, params=params, opt_state=opt_state,
-                               data_state=stream.state_dict())
+                with tracer.span("train/checkpoint", step=step + 1, async_save=True):
+                    mgr.save_async(step + 1, params=params, opt_state=opt_state,
+                                   data_state=stream.state_dict())
         if mgr is not None:
-            mgr.wait()
-            mgr.save(args.steps, params=params, opt_state=opt_state,
-                     data_state=stream.state_dict())
+            with tracer.span("train/checkpoint", step=args.steps, final=True):
+                mgr.wait()
+                mgr.save(args.steps, params=params, opt_state=opt_state,
+                         data_state=stream.state_dict())
         print(f"[train] done: first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}",
               flush=True)
+        if args.trace:
+            tracer.close()
+            print(f"[train] trace written to {args.trace} "
+                  f"({len(tracer.records)} records)", flush=True)
         return 0
 
 

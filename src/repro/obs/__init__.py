@@ -1,0 +1,37 @@
+"""Counter-free observability: span tracer, hardware calibration, perf ledger.
+
+Three legs, all built from the paper's §III-F apparatus (explicit
+synchronization + wall-clock + analytical byte models — no hardware
+counters):
+
+  * :mod:`repro.obs.trace`     — hierarchical span tracer whose span close
+    performs ``block_until_ready`` (the JAX analogue of CUDA-event timing);
+    kernel spans attach schedule-derived modeled bytes/flops so every span
+    carries measured time *plus* modeled traffic.
+  * :mod:`repro.obs.calibrate` — microbenchmark suite (HBM copy/triad sweep,
+    matmul FLOP/s, dispatch floor) fitting a :class:`CalibratedHardware`
+    overlay on the static ``analysis/hw.py`` datasheet peaks, persisted per
+    device fingerprint.
+  * :mod:`repro.obs.ledger`    — append-only perf-trajectory ledger with a
+    rolling-baseline, noise-aware regression gate for CI.
+"""
+from repro.obs.ledger import (
+    LedgerEntry,
+    MetricVerdict,
+    append_entry,
+    check_regression,
+    read_ledger,
+)
+from repro.obs.trace import Span, Tracer, configure, get_tracer, read_trace
+
+__all__ = [
+    "LedgerEntry",
+    "MetricVerdict",
+    "Span",
+    "Tracer",
+    "append_entry",
+    "check_regression",
+    "configure",
+    "get_tracer",
+    "read_trace",
+]

@@ -1,0 +1,299 @@
+"""Hardware calibration: fit *achievable* roofs from microbenchmarks.
+
+``analysis/hw.py`` carries datasheet peaks.  The counter-free methodology's
+headline quantity — effective bandwidth = modeled bytes / measured time —
+is only credible against a roof this runner can actually reach ("Fast
+convolution kernels on Pascal GPU with high memory efficiency", arXiv
+2212.00404, makes the same move: achievable copy bandwidth, not the spec
+sheet, is the denominator).  This module measures three floors:
+
+  * **HBM sweep** — jitted copy and triad kernels across a size ladder;
+    each point is ``(bytes_moved, median seconds)``.  A least-squares fit of
+    ``time = overhead + bytes / bandwidth`` recovers the *asymptotic
+    achievable bandwidth* (the slope) and the per-launch overhead (the
+    intercept) — noise-aware, because one descheduled iteration moves a
+    point, not the slope.
+  * **MXU/VPU matmul sweep** — f32 ``n x n`` matmuls; the same linear fit
+    in FLOPs recovers achievable FLOP/s.
+  * **dispatch floor** — a jitted identity on a scalar: the fixed cost of
+    one device round-trip, charged by the calibrated analytical model as a
+    per-call constant.
+
+The result is a :class:`CalibratedHardware` overlay keyed by a device
+fingerprint and persisted as JSON (``results/calibration/`` by default, or
+``$REPRO_CALIBRATION``).  ``CalibratedHardware.hardware_model()`` projects
+it back onto :class:`~repro.analysis.hw.HardwareModel`, so every existing
+derivation (`analytical_time_s`, `roofline_point`) runs unchanged against
+calibrated roofs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import json
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.hw import HARDWARE, TPU_V5E, HardwareModel
+
+CALIBRATION_ENV = "REPRO_CALIBRATION"
+DEFAULT_CALIBRATION_DIR = os.path.join("results", "calibration")
+
+# size ladders (bytes of the swept operand / matmul edge length)
+BW_SIZES_FULL = (1 << 20, 4 << 20, 16 << 20, 64 << 20)
+BW_SIZES_FAST = (1 << 18, 1 << 20, 4 << 20)
+MM_SIZES_FULL = (128, 256, 512, 1024)
+MM_SIZES_FAST = (64, 128, 256)
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One microbenchmark point: ``work`` units (bytes or FLOPs) done in
+    ``time_s`` median seconds."""
+    work: float
+    time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearFit:
+    """``time = overhead_s + work / rate`` least-squares fit."""
+    rate: float          # bytes/s or FLOP/s (1 / slope)
+    overhead_s: float    # fixed per-launch cost (intercept, clamped >= 0)
+    r2: float
+
+    def time_s(self, work: float) -> float:
+        return self.overhead_s + work / self.rate
+
+
+def fit_linear_time(points: Sequence[SweepPoint]) -> LinearFit:
+    """Fit ``time = a + work/rate`` by least squares over the sweep.
+
+    Falls back to the best single-point rate (overhead 0) when the sweep is
+    degenerate — fewer than two distinct sizes, or a non-positive slope
+    (pure noise): the calibration must never report a negative or infinite
+    roof.
+    """
+    import numpy as np
+
+    if not points:
+        raise ValueError("fit_linear_time needs at least one sweep point")
+    w = np.asarray([p.work for p in points], dtype=np.float64)
+    t = np.asarray([p.time_s for p in points], dtype=np.float64)
+    best_rate = float(np.max(w / np.maximum(t, 1e-12)))
+    if len(set(w.tolist())) < 2:
+        return LinearFit(rate=best_rate, overhead_s=0.0, r2=0.0)
+    slope, intercept = np.polyfit(w, t, 1)
+    if slope <= 0:
+        return LinearFit(rate=best_rate, overhead_s=0.0, r2=0.0)
+    pred = intercept + slope * w
+    ss_res = float(np.sum((t - pred) ** 2))
+    ss_tot = float(np.sum((t - np.mean(t)) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return LinearFit(rate=float(1.0 / slope),
+                     overhead_s=float(max(intercept, 0.0)), r2=r2)
+
+
+# ---------------------------------------------------------------------------
+# microbenchmarks
+# ---------------------------------------------------------------------------
+
+def device_fingerprint() -> str:
+    """Stable identity of the runner this calibration describes."""
+    import jax
+
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "unknown") or "unknown"
+    return f"{jax.default_backend()}:{kind}:x{jax.device_count()}"
+
+
+def _timer(fn, *args, iters: int, warmup: int) -> float:
+    from repro.analysis.timer import time_fn
+
+    return time_fn(fn, *args, warmup=warmup, iters=iters).median_s
+
+
+def measure_bandwidth_sweep(sizes_bytes: Sequence[int], *, op: str = "triad",
+                            iters: int = 5, warmup: int = 2) -> List[SweepPoint]:
+    """Copy (2 crossings/element) or triad (3 crossings/element) ladder."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if op == "copy":
+        fn = jax.jit(lambda x: x * np.float32(1.0000001))
+        n_arrays, crossings = 1, 2
+    elif op == "triad":
+        fn = jax.jit(lambda b, c: b + np.float32(0.5) * c)
+        n_arrays, crossings = 2, 3
+    else:
+        raise ValueError(f"unknown bandwidth op {op!r}; use 'copy' or 'triad'")
+    points = []
+    for nbytes in sizes_bytes:
+        n = max(int(nbytes) // 4, 128)
+        args = tuple(jnp.asarray(np.random.default_rng(i).standard_normal(n),
+                                 jnp.float32) for i in range(n_arrays))
+        t = _timer(fn, *args, iters=iters, warmup=warmup)
+        points.append(SweepPoint(work=float(crossings * n * 4), time_s=t))
+    return points
+
+
+def measure_matmul_sweep(sizes: Sequence[int], *, iters: int = 5,
+                         warmup: int = 2) -> List[SweepPoint]:
+    """f32 ``n x n`` matmul ladder; work is 2·n³ FLOPs."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    fn = jax.jit(lambda a, b: a @ b)
+    points = []
+    for n in sizes:
+        rng = np.random.default_rng(n)
+        a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        t = _timer(fn, a, b, iters=iters, warmup=warmup)
+        points.append(SweepPoint(work=float(2 * n ** 3), time_s=t))
+    return points
+
+
+def measure_dispatch_floor(*, iters: int = 30, warmup: int = 5) -> float:
+    """Median seconds for one jitted no-op round-trip: the floor under
+    every per-call time this runner can report."""
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(lambda x: x + 1)
+    return _timer(fn, jnp.float32(0.0), iters=iters, warmup=warmup)
+
+
+# ---------------------------------------------------------------------------
+# the calibrated overlay
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedHardware:
+    """Measured achievable roofs overlaying one ``hw.py`` base model."""
+
+    base: str                    # HardwareModel name the overlay applies to
+    fingerprint: str             # device identity the numbers describe
+    hbm_bw: float                # achievable bytes/s (triad fit slope)
+    copy_bw: float               # achievable bytes/s (copy fit slope)
+    flops_f32: float             # achievable f32 FLOP/s (matmul fit slope)
+    dispatch_overhead_s: float   # jitted no-op round-trip floor
+    bw_overhead_s: float         # per-launch overhead from the triad fit
+    bw_r2: float
+    flops_r2: float
+    created: str = ""
+    sweeps: Dict[str, List[Tuple[float, float]]] = dataclasses.field(
+        default_factory=dict)   # raw (work, time_s) points per microbenchmark
+
+    def hardware_model(self, base: Optional[HardwareModel] = None) -> HardwareModel:
+        """The base model with its roofs replaced by the measured ones —
+        a drop-in for every ``perfmodel.derive`` entry point."""
+        hw = base if base is not None else HARDWARE[self.base]
+        return dataclasses.replace(
+            hw, name=f"{hw.name}+calibrated", hbm_bw=self.hbm_bw,
+            peak_flops_f32=self.flops_f32,
+            peak_flops=min(hw.peak_flops, self.flops_f32 * (
+                hw.peak_flops / max(hw.peak_flops_f32, 1.0))))
+
+    def analytical_time_s(self, schedule, base: Optional[HardwareModel] = None) -> float:
+        """Calibrated roofline bound + the measured dispatch floor."""
+        from repro import perfmodel
+
+        est = perfmodel.derive_traffic(schedule)
+        hw = self.hardware_model(base)
+        return max(est.flops / hw.peak_flops_f32,
+                   est.bytes_moved / hw.hbm_bw) + self.dispatch_overhead_s
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, obj: Dict) -> "CalibratedHardware":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in obj.items() if k in fields}
+        kw["sweeps"] = {k: [tuple(p) for p in v]
+                        for k, v in (kw.get("sweeps") or {}).items()}
+        return cls(**kw)
+
+
+def run_calibration(*, base: HardwareModel = TPU_V5E, fast: bool = False,
+                    iters: Optional[int] = None,
+                    bw_sizes: Optional[Sequence[int]] = None,
+                    mm_sizes: Optional[Sequence[int]] = None) -> CalibratedHardware:
+    """Run the full microbenchmark suite and fit the overlay."""
+    iters = iters if iters is not None else (3 if fast else 7)
+    bw_sizes = tuple(bw_sizes if bw_sizes is not None
+                     else (BW_SIZES_FAST if fast else BW_SIZES_FULL))
+    mm_sizes = tuple(mm_sizes if mm_sizes is not None
+                     else (MM_SIZES_FAST if fast else MM_SIZES_FULL))
+    triad = measure_bandwidth_sweep(bw_sizes, op="triad", iters=iters)
+    copy = measure_bandwidth_sweep(bw_sizes, op="copy", iters=iters)
+    mm = measure_matmul_sweep(mm_sizes, iters=iters)
+    triad_fit = fit_linear_time(triad)
+    copy_fit = fit_linear_time(copy)
+    mm_fit = fit_linear_time(mm)
+    return CalibratedHardware(
+        base=base.name,
+        fingerprint=device_fingerprint(),
+        hbm_bw=triad_fit.rate,
+        copy_bw=copy_fit.rate,
+        flops_f32=mm_fit.rate,
+        dispatch_overhead_s=measure_dispatch_floor(),
+        bw_overhead_s=triad_fit.overhead_s,
+        bw_r2=triad_fit.r2,
+        flops_r2=mm_fit.r2,
+        created=datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        sweeps={
+            "triad": [(p.work, p.time_s) for p in triad],
+            "copy": [(p.work, p.time_s) for p in copy],
+            "matmul": [(p.work, p.time_s) for p in mm],
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# persistence (JSON keyed by device fingerprint)
+# ---------------------------------------------------------------------------
+
+def default_calibration_path(fingerprint: Optional[str] = None) -> str:
+    env = os.environ.get(CALIBRATION_ENV)
+    if env:
+        return env
+    fp = fingerprint if fingerprint is not None else device_fingerprint()
+    safe = re.sub(r"[^A-Za-z0-9_.-]+", "-", fp)
+    return os.path.join(DEFAULT_CALIBRATION_DIR, f"{safe}.json")
+
+
+def save_calibration(cal: CalibratedHardware, path: Optional[str] = None) -> str:
+    path = path or default_calibration_path(cal.fingerprint)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cal.to_dict(), f, indent=1)
+    return path
+
+
+def load_calibration(path: str) -> CalibratedHardware:
+    with open(path) as f:
+        return CalibratedHardware.from_dict(json.load(f))
+
+
+def load_for_device(path: Optional[str] = None) -> Optional[CalibratedHardware]:
+    """The persisted calibration for *this* runner, or ``None`` when missing
+    or recorded on different hardware (a stale file must not lend its roofs
+    to a machine it never measured)."""
+    path = path or default_calibration_path()
+    if not os.path.exists(path):
+        return None
+    try:
+        cal = load_calibration(path)
+    except (json.JSONDecodeError, TypeError, KeyError, ValueError):
+        return None
+    return cal if cal.fingerprint == device_fingerprint() else None

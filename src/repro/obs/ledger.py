@@ -1,0 +1,213 @@
+"""Append-only perf-trajectory ledger + noise-aware regression gate.
+
+Every ``benchmarks/run.py --json`` run promotes a handful of top-level
+metrics (fused-vs-split speedup, epilogue fusion speedup, ...).  Before
+this module they vanished into CI artifact storage; now each run appends
+one :class:`LedgerEntry` — git SHA, device fingerprint, timestamp, metrics
+— to a JSONL ledger (``results/perf/ledger.jsonl`` or
+``$REPRO_PERF_LEDGER``), and ``python -m repro.launch.perf --check`` gates
+on the trajectory.
+
+The gate is deliberately *noise-aware*: shared cloud runners have no
+hardware counters to disqualify a descheduled iteration (the counter-free
+premise), so the baseline is the rolling **median** of the last ``window``
+entries on the same device fingerprint, and the tolerance widens with the
+trajectory's own robust spread (MAD).  A metric regresses only when it
+falls outside ``max(rel_tol · |baseline|, noise_mult · MAD-sigma)`` in its
+bad direction — a jittery-but-flat history never trips the gate, a clean
+20% drop always does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import json
+import os
+import statistics
+import subprocess
+from typing import Dict, List, Optional, Sequence, Tuple
+
+LEDGER_ENV = "REPRO_PERF_LEDGER"
+DEFAULT_LEDGER = os.path.join("results", "perf", "ledger.jsonl")
+
+# Direction conventions for gate-able metric names; anything unmatched is
+# informational (tracked, never gated) — a gate must not guess.
+_HIGHER_SUFFIXES = ("_speedup", "_per_s", "_throughput", "_bandwidth",
+                    "_gflops", "_tok_s")
+_LOWER_SUFFIXES = ("_us", "_ms", "_s", "_seconds", "_time", "_latency",
+                   "_failures", "_bytes")
+_LOWER_EXACT = ("failures",)
+
+
+def ledger_path(path: Optional[str] = None) -> str:
+    return path or os.environ.get(LEDGER_ENV) or DEFAULT_LEDGER
+
+
+def git_sha(default: str = "unknown") -> str:
+    """Short SHA of HEAD; CI env fallback; never raises."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    env = os.environ.get("GITHUB_SHA", "")
+    return env[:12] if env else default
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerEntry:
+    ts: str                      # ISO-8601 UTC
+    sha: str                     # git revision the numbers describe
+    fingerprint: str             # device identity (obs.calibrate convention)
+    source: str                  # who appended (bench module, CLI, ...)
+    metrics: Dict[str, float]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, obj: Dict) -> "LedgerEntry":
+        return cls(ts=obj.get("ts", ""), sha=obj.get("sha", "unknown"),
+                   fingerprint=obj.get("fingerprint", "unknown"),
+                   source=obj.get("source", ""),
+                   metrics={k: float(v) for k, v in (obj.get("metrics") or {}).items()
+                            if isinstance(v, (int, float))})
+
+
+def numeric_metrics(payload: Dict) -> Dict[str, float]:
+    """The gate-able projection of a ``benchmarks/run.py --json`` payload:
+    finite top-level numbers only (rows, nulls, and strings stay behind)."""
+    import math
+
+    out = {}
+    for k, v in payload.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        if isinstance(v, float) and not math.isfinite(v):
+            continue
+        out[k] = float(v)
+    return out
+
+
+def append_entry(metrics: Dict[str, float], *, source: str,
+                 path: Optional[str] = None, sha: Optional[str] = None,
+                 fingerprint: Optional[str] = None,
+                 ts: Optional[str] = None) -> LedgerEntry:
+    """Append one entry (creating the ledger and its directory on first use)."""
+    if fingerprint is None:
+        from repro.obs.calibrate import device_fingerprint
+
+        fingerprint = device_fingerprint()
+    entry = LedgerEntry(
+        ts=ts or datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        sha=sha if sha is not None else git_sha(),
+        fingerprint=fingerprint,
+        source=source,
+        metrics={k: float(v) for k, v in metrics.items()},
+    )
+    p = ledger_path(path)
+    parent = os.path.dirname(p)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(p, "a") as f:
+        f.write(json.dumps(entry.to_dict()) + "\n")
+    return entry
+
+
+def read_ledger(path: Optional[str] = None) -> List[LedgerEntry]:
+    p = ledger_path(path)
+    if not os.path.exists(p):
+        return []
+    out: List[LedgerEntry] = []
+    with open(p) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(LedgerEntry.from_dict(json.loads(line)))
+            except (json.JSONDecodeError, TypeError):
+                continue  # a torn concurrent write must not sink the gate
+    return out
+
+
+def metric_direction(name: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 informational."""
+    if name.endswith(_HIGHER_SUFFIXES):  # before _s/_bytes: "*_tok_s" is a rate
+        return +1
+    if name in _LOWER_EXACT or name.endswith(_LOWER_SUFFIXES):
+        return -1
+    return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricVerdict:
+    metric: str
+    status: str                  # ok | improved | regressed | no-baseline | informational
+    current: float
+    baseline: Optional[float]    # rolling median (None without history)
+    tolerance: Optional[float]   # absolute band the gate applied
+    n_history: int
+    direction: int
+
+    @property
+    def gate_failed(self) -> bool:
+        return self.status == "regressed"
+
+
+def _mad_sigma(values: Sequence[float], center: float) -> float:
+    """Robust sigma: 1.4826 x the median absolute deviation."""
+    if len(values) < 2:
+        return 0.0
+    return 1.4826 * statistics.median(abs(v - center) for v in values)
+
+
+def check_regression(
+    entries: Sequence[LedgerEntry],
+    *,
+    window: int = 5,
+    rel_tol: float = 0.05,
+    noise_mult: float = 3.0,
+    metrics: Optional[Sequence[str]] = None,
+) -> Tuple[bool, List[MetricVerdict]]:
+    """Gate the newest entry against the rolling baseline of its own device.
+
+    Returns ``(ok, verdicts)``.  A fresh ledger (no prior entries for the
+    current fingerprint + metric) passes: a gate with no baseline has
+    nothing to defend yet.
+    """
+    if not entries:
+        return True, []
+    current = entries[-1]
+    history = [e for e in entries[:-1] if e.fingerprint == current.fingerprint]
+    verdicts: List[MetricVerdict] = []
+    names = list(metrics) if metrics is not None else sorted(current.metrics)
+    for name in names:
+        if name not in current.metrics:
+            continue
+        cur = current.metrics[name]
+        direction = metric_direction(name)
+        if direction == 0:
+            verdicts.append(MetricVerdict(name, "informational", cur, None,
+                                          None, 0, 0))
+            continue
+        past = [e.metrics[name] for e in history if name in e.metrics][-window:]
+        if not past:
+            verdicts.append(MetricVerdict(name, "no-baseline", cur, None,
+                                          None, 0, direction))
+            continue
+        baseline = statistics.median(past)
+        tol = max(rel_tol * abs(baseline), noise_mult * _mad_sigma(past, baseline))
+        delta = (cur - baseline) * direction   # >0 means better
+        if delta < -tol:
+            status = "regressed"
+        elif delta > tol:
+            status = "improved"
+        else:
+            status = "ok"
+        verdicts.append(MetricVerdict(name, status, cur, baseline, tol,
+                                      len(past), direction))
+    ok = not any(v.gate_failed for v in verdicts)
+    return ok, verdicts

@@ -1,0 +1,380 @@
+"""Hierarchical span tracer — event-style timing as a persistent trace.
+
+The paper times kernels with CUDA events: enqueue, synchronize, read the
+elapsed wall time (§III-F).  The JAX analogue is ``block_until_ready``, and
+``analysis/timer.py`` already uses it for one-shot benchmarks.  This module
+turns the same protocol into a *structured* trace: nested spans (context
+manager or decorator), each closed by an explicit sync on the values it
+produced, emitted as JSONL records.
+
+The counter-free twist: a span may *attach* one or more
+:class:`~repro.perfmodel.KernelSchedule` specs.  Each attachment is emitted
+as a child ``kind="kernel"`` record carrying the schedule's derived modeled
+bytes/flops next to the span's measured wall time — so every kernel span
+reports an effective bandwidth (modeled bytes / measured seconds) and its
+roofline placement, exactly the paper's Tables II/III quantity, with no
+hardware counters.  When the enclosing span measured more than the kernel
+alone (e.g. a whole jitted train step), the record says so
+(``time_scope="enclosing-span"``) and the effective bandwidth is the
+*attributable* lower bound.
+
+Disabled tracing is near-free: ``span()`` returns a shared no-op context
+manager without allocating, and no file is ever touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import IO, Any, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "configure",
+    "dwconv_step_schedules",
+    "get_tracer",
+    "read_trace",
+]
+
+
+def _block_until_ready(value) -> None:
+    import jax
+
+    jax.block_until_ready(value)
+
+
+@dataclasses.dataclass
+class _Attachment:
+    name: str
+    schedule: Any                      # perfmodel.KernelSchedule
+    hw: Any = None                     # analysis.hw.HardwareModel | None
+    count: int = 1                     # e.g. layers running this kernel
+    runtime_s: Optional[float] = None  # per-kernel measured time override
+
+
+class Span:
+    """One open span.  Created by :meth:`Tracer.span`; closes on ``__exit__``
+    by syncing every value registered with :meth:`sync` *before* reading the
+    end timestamp (the CUDA-event protocol)."""
+
+    __slots__ = ("_tracer", "name", "id", "parent_id", "path", "tags",
+                 "_sync_values", "_attachments", "t_start", "dur_s")
+
+    def __init__(self, tracer: "Tracer", name: str, span_id: int,
+                 parent_id: Optional[int], path: str, tags: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.id = span_id
+        self.parent_id = parent_id
+        self.path = path
+        self.tags = tags
+        self._sync_values: List[Any] = []
+        self._attachments: List[_Attachment] = []
+        self.t_start = 0.0
+        self.dur_s = 0.0
+
+    def tag(self, **kw) -> "Span":
+        """Add/overwrite tags on the open span."""
+        self.tags.update(kw)
+        return self
+
+    def sync(self, value) -> "Span":
+        """Register a value to ``block_until_ready`` at span close, so the
+        span's wall time covers the async work that produced it."""
+        self._sync_values.append(value)
+        return self
+
+    def attach(self, name: str, schedule, *, hw=None, count: int = 1,
+               runtime_s: Optional[float] = None) -> "Span":
+        """Attach a kernel schedule: emitted at close as a ``kind="kernel"``
+        child record with modeled bytes/flops and effective bandwidth.
+
+        ``count`` multiplies the schedule's traffic (e.g. ``n_layers``
+        identical convs per step); ``runtime_s`` supplies a per-kernel
+        measured time when one exists (otherwise the enclosing span's wall
+        time is used and the record is marked ``time_scope="enclosing-span"``).
+        """
+        self._attachments.append(_Attachment(name, schedule, hw, count, runtime_s))
+        return self
+
+    # -- context manager ----------------------------------------------------
+    def __enter__(self) -> "Span":
+        self._tracer._open(self)
+        self.t_start = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if self._sync_values:
+            _block_until_ready(self._sync_values)
+        self.dur_s = time.perf_counter() - self.t_start
+        self._tracer._close(self, error=exc_type is not None)
+
+
+class _NullSpan:
+    """Shared no-op span: the disabled-tracer fast path allocates nothing."""
+
+    __slots__ = ()
+    id = None
+    dur_s = 0.0
+    tags: Dict[str, Any] = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return None
+
+    def tag(self, **kw):
+        return self
+
+    def sync(self, value):
+        return self
+
+    def attach(self, *a, **kw):
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Span tracer writing JSONL records (and keeping them in ``records``).
+
+    ``Tracer(path)`` writes to ``path``; ``Tracer(enabled=True)`` traces
+    in-memory only (``records``); the default ``Tracer()`` is disabled and
+    near-free.  Single-threaded by design — the launchers, the tuner, and
+    the benchmark harness all trace from one thread.
+    """
+
+    def __init__(self, path: Optional[str] = None, *,
+                 enabled: Optional[bool] = None, meta: Optional[Dict] = None):
+        self.path = path or None
+        self.enabled = bool(path) if enabled is None else bool(enabled)
+        self.records: List[Dict[str, Any]] = []
+        self._stack: List[Span] = []
+        self._next_id = 1
+        self._fh: Optional[IO[str]] = None
+        self._epoch = time.perf_counter()
+        self.meta = dict(meta or {})
+
+    # -- public API ---------------------------------------------------------
+    def span(self, name: str, *, sync=None, **tags):
+        """Open a span.  Usage::
+
+            with tracer.span("train/step", step=i) as sp:
+                out = jit_step(...)
+                sp.sync(out)
+        """
+        if not self.enabled:
+            return _NULL_SPAN
+        parent = self._stack[-1] if self._stack else None
+        sp = Span(self, name, self._next_id,
+                  parent.id if parent is not None else None,
+                  f"{parent.path}/{name}" if parent is not None else name,
+                  dict(tags))
+        self._next_id += 1
+        if sync is not None:
+            sp.sync(sync)
+        return sp
+
+    def traced(self, name: Optional[str] = None, **tags):
+        """Decorator form: spans the call and syncs on its return value."""
+        def deco(fn):
+            import functools
+
+            span_name = name or getattr(fn, "__name__", "fn")
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                if not self.enabled:
+                    return fn(*a, **kw)
+                with self.span(span_name, **tags) as sp:
+                    out = fn(*a, **kw)
+                    sp.sync(out)
+                    return out
+            return wrapper
+        return deco
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- span plumbing ------------------------------------------------------
+    def _open(self, sp: Span) -> None:
+        self._stack.append(sp)
+
+    def _close(self, sp: Span, *, error: bool = False) -> None:
+        # tolerate out-of-order exits (exceptions unwinding several spans)
+        while self._stack and self._stack[-1] is not sp:
+            self._stack.pop()
+        if self._stack:
+            self._stack.pop()
+        rec: Dict[str, Any] = {
+            "kind": "span", "id": sp.id, "parent": sp.parent_id,
+            "name": sp.name, "path": sp.path,
+            "t_start_s": sp.t_start - self._epoch, "dur_s": sp.dur_s,
+        }
+        if error:
+            rec["error"] = True
+        if sp.tags:
+            rec["tags"] = _jsonable(sp.tags)
+        self._emit(rec)
+        for att in sp._attachments:
+            self._emit(self._kernel_record(sp, att))
+
+    def _kernel_record(self, sp: Span, att: _Attachment) -> Dict[str, Any]:
+        from repro import perfmodel
+
+        est = perfmodel.derive_traffic(att.schedule)
+        n = max(int(att.count), 1)
+        bytes_moved = est.bytes_moved * n
+        flops = est.flops * n
+        own_time = att.runtime_s is not None
+        runtime = att.runtime_s if own_time else sp.dur_s
+        rec: Dict[str, Any] = {
+            "kind": "kernel", "id": self._next_id, "parent": sp.id,
+            "name": att.name, "path": f"{sp.path}/{att.name}",
+            "dur_s": runtime,
+            "time_scope": "kernel" if own_time else "enclosing-span",
+            "count": n,
+            "schedule": {"path": att.schedule.path,
+                         "variant": att.schedule.variant,
+                         "epilogue": att.schedule.epilogue},
+            "modeled_bytes": bytes_moved,
+            "modeled_flops": flops,
+            "reliable": est.reliable,
+        }
+        self._next_id += 1
+        if runtime and runtime > 0:
+            # modeled bytes / measured time: the paper's effective bandwidth.
+            # Under time_scope="enclosing-span" this is the *attributable*
+            # lower bound (the span measured more than this kernel alone).
+            rec["effective_bandwidth"] = bytes_moved / runtime
+            rec["achieved_gflops"] = flops / runtime / 1e9
+        if est.reliable and bytes_moved > 0:
+            rec["arithmetic_intensity"] = flops / bytes_moved
+        if att.hw is not None:
+            rec["hw"] = att.hw.name
+            knee = att.hw.peak_flops_f32 / att.hw.hbm_bw
+            rec["roofline_knee"] = knee
+            ai = rec.get("arithmetic_intensity")
+            if ai is not None:
+                rec["regime"] = "memory-bound" if ai < knee else "compute-bound"
+            bw = rec.get("effective_bandwidth")
+            if bw is not None:
+                rec["bandwidth_utilization"] = bw / att.hw.hbm_bw
+        return rec
+
+    def _emit(self, rec: Dict[str, Any]) -> None:
+        self.records.append(rec)
+        if self.path is not None:
+            if self._fh is None:
+                import os
+
+                parent = os.path.dirname(self.path)
+                if parent:
+                    os.makedirs(parent, exist_ok=True)
+                self._fh = open(self.path, "a")
+                if self.meta:
+                    header = {"kind": "meta", **_jsonable(self.meta)}
+                    self._fh.write(json.dumps(header) + "\n")
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+
+def _jsonable(obj):
+    """Best-effort plain-JSON projection of tag values."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    try:
+        return float(obj)
+    except (TypeError, ValueError):
+        return str(obj)
+
+
+# ---------------------------------------------------------------------------
+# global tracer (launchers and the tuner share one)
+# ---------------------------------------------------------------------------
+
+_GLOBAL = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _GLOBAL
+
+
+def configure(path: Optional[str] = None, *, enabled: bool = True,
+              meta: Optional[Dict] = None) -> Tracer:
+    """Install (and return) the process-global tracer."""
+    global _GLOBAL
+    _GLOBAL.close()
+    _GLOBAL = Tracer(path, enabled=enabled, meta=meta)
+    return _GLOBAL
+
+
+def read_trace(path: str) -> List[Dict[str, Any]]:
+    """Load a JSONL trace back into a list of records."""
+    out: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# arch introspection: which paper-operator kernels run inside one train step?
+# ---------------------------------------------------------------------------
+
+def dwconv_step_schedules(cfg, batch: int, seq: int, *, itemsize: int = 4,
+                          training: bool = True) -> List[Tuple[str, Any, int]]:
+    """``(name, schedule, count)`` attachments for the depthwise-conv kernels
+    one jitted train/serve step of ``cfg`` executes.
+
+    SSM archs run one causal conv over ``(x, B, C)`` (width
+    ``expand*d_model + 2*d_state``) per layer; RG-LRU/hybrid archs run one
+    over ``lru_width`` per recurrent block.  Attention-only archs return
+    ``[]`` — their steps carry no paper-operator span.  Training steps
+    attach the fused backward alongside the forward.
+    """
+    from repro.kernels.common import DWConvDims
+    from repro.perfmodel import registered_variants, schedule_for
+    from repro.tuning.space import Candidate, normalize
+
+    specs: List[Tuple[int, int, str, int]] = []  # (channels, K, variant, count)
+    ssm = getattr(cfg, "ssm", None)
+    if ssm is not None:
+        conv_dim = ssm.expand * cfg.d_model + 2 * ssm.d_state
+        specs.append((conv_dim, ssm.d_conv, ssm.conv_variant, cfg.n_layers))
+    rglru = getattr(cfg, "rglru", None)
+    if rglru is not None:
+        pattern = rglru.block_pattern
+        n_blocks = (cfg.n_layers // len(pattern)) * pattern.count("rec") \
+            + pattern[: cfg.n_layers % len(pattern)].count("rec")
+        specs.append((rglru.lru_width, rglru.d_conv, rglru.conv_variant,
+                      max(n_blocks, 1)))
+
+    out: List[Tuple[str, Any, int]] = []
+    for conv_dim, K, variant, count in specs:
+        d = DWConvDims(B=batch, H=conv_dim, L=seq, K=K, padding="causal")
+        fwd_variant = variant if variant in registered_variants("fwd") else "row"
+        c = normalize(Candidate("fwd", fwd_variant, 8, 512, 128), d)
+        out.append(("dwconv_fwd", schedule_for(
+            "fwd", fwd_variant, d, itemsize, block_h=c.block_h,
+            block_t=c.block_t, batch_chunk=c.batch_chunk,
+            epilogue="bias+silu"), count))
+        if training:
+            cb = normalize(Candidate("bwd_fused", "fused", 8, 512, 128), d,
+                           epilogue="bias+silu")
+            out.append(("dwconv_bwd_fused", schedule_for(
+                "bwd_fused", "fused", d, itemsize, block_h=cb.block_h,
+                block_t=cb.block_t, batch_chunk=cb.batch_chunk,
+                epilogue="bias+silu"), count))
+    return out

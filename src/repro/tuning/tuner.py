@@ -30,6 +30,7 @@ import jax
 
 from repro.analysis.hw import TPU_V5E, HardwareModel
 from repro.kernels.common import DWConvDims
+from repro.obs import trace as obs_trace
 from repro.tuning import cost, space
 from repro.tuning.cache import ShapeKey, TuneEntry, TuningCache, default_cache
 from repro.tuning.space import Candidate
@@ -126,10 +127,21 @@ def tune_path(
     analytical: Dict[Candidate, float] = dict(ranked)
 
     measured: Dict[Candidate, float] = {}
+    tracer = obs_trace.get_tracer()
 
     def meter(c: Candidate) -> float:
         if c not in measured:
-            measured[c] = measure_fn(c, d)
+            with tracer.span("tune/candidate", path=c.path, variant=c.variant,
+                             block_h=c.block_h, block_t=c.block_t,
+                             batch_chunk=c.batch_chunk) as sp:
+                measured[c] = measure_fn(c, d)
+                sp.tag(measured_s=measured[c],
+                       analytical_s=analytical.get(c))
+                if tracer.enabled:
+                    # each candidate's schedule rides along, so the tuning
+                    # trace shows modeled bytes / effective bandwidth per try
+                    sp.attach("kernel", space._schedule(c, d, itemsize, epilogue),
+                              hw=hw, runtime_s=measured[c])
             if verbose:
                 print(f"  [tune] {c.path}/{c.variant} bh={c.block_h} bt={c.block_t} "
                       f"bc={c.batch_chunk}: {measured[c] * 1e6:.1f}us "

@@ -1,0 +1,362 @@
+"""Tests for the counter-free observability stack (repro.obs).
+
+Three legs: the span tracer (trace.py), the hardware-calibration
+microbenchmark fits (calibrate.py), and the perf-trajectory ledger with
+its noise-aware regression gate (ledger.py).
+"""
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hw import TPU_V5E
+from repro.kernels.common import DWConvDims
+from repro.obs import ledger as L
+from repro.obs import trace as T
+from repro.obs.calibrate import (
+    CalibratedHardware,
+    SweepPoint,
+    device_fingerprint,
+    fit_linear_time,
+    load_calibration,
+    load_for_device,
+    run_calibration,
+    save_calibration,
+)
+from repro.perfmodel import derive_traffic, schedule_for
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_parents(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    tr = T.Tracer(p, meta={"launcher": "test"})
+    with tr.span("outer", step=0) as outer:
+        with tr.span("inner") as inner:
+            pass
+    tr.close()
+    assert inner.parent_id == outer.id
+    recs = T.read_trace(p)
+    kinds = [r["kind"] for r in recs]
+    assert kinds[0] == "meta" and kinds.count("span") == 2
+    by_name = {r["name"]: r for r in recs if r["kind"] == "span"}
+    assert by_name["inner"]["parent"] == by_name["outer"]["id"]
+    assert by_name["inner"]["path"] == "outer/inner"
+    assert by_name["outer"]["tags"] == {"step": 0}
+    # inner closes first: JSONL order is close order
+    assert recs[1]["name"] == "inner"
+
+
+def test_disabled_tracer_is_nullspan_and_touches_no_file(tmp_path):
+    tr = T.Tracer()  # default: disabled
+    assert not tr.enabled
+    s1 = tr.span("a")
+    s2 = tr.span("b", step=1)
+    assert s1 is s2  # shared singleton — no per-span allocation
+    with s1 as sp:
+        sp.tag(x=1).sync(object()).attach("k", None)
+    assert tr.records == []
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_span_sync_blocks_on_jax_values():
+    tr = T.Tracer(enabled=True)
+    with tr.span("compute") as sp:
+        out = jnp.ones((64, 64)) @ jnp.ones((64, 64))
+        sp.sync(out)
+    assert sp.dur_s > 0
+    assert tr.records[0]["dur_s"] == sp.dur_s
+
+
+def test_attach_emits_kernel_record_with_model_and_roofline():
+    d = DWConvDims(B=4, H=8, L=64, K=4, padding="causal")
+    s = schedule_for("fwd", "row", d, 4)
+    est = derive_traffic(s)
+    tr = T.Tracer(enabled=True)
+    with tr.span("step") as sp:
+        sp.attach("dwconv_fwd", s, hw=TPU_V5E, count=3)
+    span_rec, k = tr.records
+    assert k["kind"] == "kernel"
+    assert k["parent"] == span_rec["id"]
+    assert k["modeled_bytes"] == est.bytes_moved * 3
+    assert k["time_scope"] == "enclosing-span"
+    assert k["dur_s"] == span_rec["dur_s"]
+    assert k["effective_bandwidth"] == pytest.approx(
+        k["modeled_bytes"] / span_rec["dur_s"])
+    assert k["regime"] in ("memory-bound", "compute-bound")
+    assert 0 < k["bandwidth_utilization"]
+
+
+def test_attach_runtime_override_is_kernel_scoped():
+    d = DWConvDims(B=4, H=8, L=64, K=4)
+    s = schedule_for("fwd", "row", d, 4)
+    tr = T.Tracer(enabled=True)
+    with tr.span("measure") as sp:
+        sp.attach("kernel", s, hw=TPU_V5E, runtime_s=1e-3)
+    k = tr.records[1]
+    assert k["time_scope"] == "kernel"
+    assert k["dur_s"] == 1e-3
+    assert k["effective_bandwidth"] == pytest.approx(
+        derive_traffic(s).bytes_moved / 1e-3)
+
+
+def test_traced_decorator():
+    tr = T.Tracer(enabled=True)
+
+    @tr.traced("fn/add", kind="unit")
+    def add(a, b):
+        return a + b
+
+    assert add(2, 3) == 5
+    rec = tr.records[0]
+    assert rec["name"] == "fn/add" and rec["tags"]["kind"] == "unit"
+
+
+def test_configure_installs_global(tmp_path):
+    old = T.get_tracer()
+    try:
+        tr = T.configure(str(tmp_path / "g.jsonl"), meta={"m": 1})
+        assert T.get_tracer() is tr and tr.enabled
+    finally:
+        T.configure(None, enabled=False)
+        assert not T.get_tracer().enabled
+
+
+def test_dwconv_step_schedules_ssm_and_attention():
+    from repro.configs.registry import get_config
+
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    atts = T.dwconv_step_schedules(cfg, batch=2, seq=32)
+    assert [a[0] for a in atts] == ["dwconv_fwd", "dwconv_bwd_fused"]
+    for _, sched, count in atts:
+        assert count == cfg.n_layers
+        assert derive_traffic(sched).bytes_moved > 0
+        assert sched.epilogue == "bias+silu"
+    # serving: forward only
+    assert [a[0] for a in T.dwconv_step_schedules(cfg, 2, 32, training=False)] \
+        == ["dwconv_fwd"]
+    # attention-only archs carry no paper-operator kernel
+    qwen = get_config("qwen2-0.5b", smoke=True)
+    assert T.dwconv_step_schedules(qwen, 2, 32) == []
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_fit_linear_time_exact():
+    rate, overhead = 2e9, 5e-6
+    pts = [SweepPoint(w, overhead + w / rate) for w in (1e6, 4e6, 16e6, 64e6)]
+    fit = fit_linear_time(pts)
+    assert fit.rate == pytest.approx(rate, rel=1e-6)
+    assert fit.overhead_s == pytest.approx(overhead, rel=1e-4)
+    assert fit.r2 > 0.999999
+
+
+def test_fit_linear_time_noisy():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    rate, overhead = 8e11, 2e-5
+    pts = [SweepPoint(w, (overhead + w / rate) * float(rng.uniform(0.97, 1.03)))
+           for w in np.geomspace(1e6, 256e6, 12)]
+    fit = fit_linear_time(pts)
+    assert fit.rate == pytest.approx(rate, rel=0.15)
+    assert fit.r2 > 0.99
+
+
+def test_fit_linear_time_degenerate_single_point():
+    fit = fit_linear_time([SweepPoint(1e6, 1e-3)])
+    assert fit.rate == pytest.approx(1e9)
+
+
+def test_run_calibration_and_roundtrip(tmp_path):
+    cal = run_calibration(base=TPU_V5E, fast=True, iters=1)
+    assert cal.fingerprint == device_fingerprint()
+    assert cal.hbm_bw > 0 and cal.flops_f32 > 0
+    assert cal.dispatch_overhead_s >= 0
+    p = str(tmp_path / "cal.json")
+    save_calibration(cal, p)
+    back = load_calibration(p)
+    assert back.fingerprint == cal.fingerprint
+    assert back.hbm_bw == pytest.approx(cal.hbm_bw)
+    # overlayed hardware model keeps datasheet identity but measured roofs
+    hwm = back.hardware_model(TPU_V5E)
+    assert hwm.hbm_bw == pytest.approx(back.hbm_bw)
+    assert hwm.peak_flops_f32 == pytest.approx(back.flops_f32)
+    assert hwm.name.endswith("+calibrated")
+
+
+def test_calibrated_analytical_time_adds_dispatch_floor(tmp_path):
+    cal = run_calibration(base=TPU_V5E, fast=True, iters=1)
+    d = DWConvDims(B=8, H=16, L=256, K=4)
+    s = schedule_for("fwd", "row", d, 4)
+    t = cal.analytical_time_s(s, TPU_V5E)
+    assert t >= cal.dispatch_overhead_s
+    est = derive_traffic(s)
+    assert t >= est.bytes_moved / cal.hbm_bw
+
+
+def test_load_for_device_fingerprint_mismatch(tmp_path, monkeypatch):
+    cal = run_calibration(base=TPU_V5E, fast=True, iters=1)
+    other = CalibratedHardware(**{**cal.__dict__, "fingerprint": "gpu:h100:x8"})
+    p = str(tmp_path / "cal.json")
+    save_calibration(other, p)
+    monkeypatch.setenv("REPRO_CALIBRATION", p)
+    assert load_for_device() is None          # wrong device
+    save_calibration(cal, p)
+    assert load_for_device() is not None      # right device
+    with open(p, "w") as f:
+        f.write("{corrupt")
+    assert load_for_device() is None          # corrupt file -> None, no raise
+
+
+# ---------------------------------------------------------------------------
+# ledger + regression gate
+# ---------------------------------------------------------------------------
+
+def _entry(metrics, i=0, fp="cpu:cpu:x1"):
+    return L.LedgerEntry(ts=f"2026-08-0{i % 9 + 1}T00:00:00+00:00",
+                         sha=f"sha{i}", fingerprint=fp, source="test",
+                         metrics=metrics)
+
+
+def test_ledger_append_read_roundtrip(tmp_path):
+    p = str(tmp_path / "ledger.jsonl")
+    e1 = L.append_entry({"a_speedup": 2.0, "failures": 0}, source="t", path=p)
+    L.append_entry({"a_speedup": 2.1, "failures": 0}, source="t", path=p)
+    entries = L.read_ledger(p)
+    assert len(entries) == 2
+    assert entries[0].metrics == e1.metrics
+    assert entries[0].fingerprint == device_fingerprint()
+    # torn trailing line is skipped, not fatal
+    with open(p, "a") as f:
+        f.write('{"truncat')
+    assert len(L.read_ledger(p)) == 2
+
+
+def test_ledger_env_var_path(tmp_path, monkeypatch):
+    p = str(tmp_path / "env.jsonl")
+    monkeypatch.setenv(L.LEDGER_ENV, p)
+    assert L.ledger_path() == p
+    L.append_entry({"x_per_s": 1.0}, source="t")
+    assert os.path.exists(p)
+
+
+def test_numeric_metrics_filters():
+    payload = {"a_speedup": 2.0, "failures": 0, "results": [1, 2],
+               "name": "x", "flag": True, "bad": float("nan"), "none": None}
+    nums = L.numeric_metrics(payload)
+    assert nums == {"a_speedup": 2.0, "failures": 0.0}
+
+
+def test_metric_direction_suffix_priority():
+    # rates ending in _s must classify higher-better, not time-like
+    assert L.metric_direction("decode_tok_s") == +1
+    assert L.metric_direction("prefill_per_s") == +1
+    assert L.metric_direction("fused_vs_split_backward_speedup") == +1
+    assert L.metric_direction("kernel_time_us") == -1
+    assert L.metric_direction("step_ms") == -1
+    assert L.metric_direction("failures") == -1
+    assert L.metric_direction("report_memory_bound_fraction") == 0
+
+
+def test_check_regression_fresh_ledger_passes():
+    ok, verdicts = L.check_regression([])
+    assert ok and verdicts == []
+    ok, verdicts = L.check_regression([_entry({"a_speedup": 2.0})])
+    assert ok
+    assert verdicts[0].status == "no-baseline"
+
+
+def test_check_regression_improving_passes():
+    entries = [_entry({"a_speedup": 2.0 + 0.05 * i}, i) for i in range(6)]
+    ok, verdicts = L.check_regression(entries)
+    assert ok
+    v = {x.metric: x for x in verdicts}["a_speedup"]
+    assert v.status in ("ok", "improved")
+
+
+def test_check_regression_twenty_percent_drop_fails():
+    entries = [_entry({"a_speedup": 2.0}, i) for i in range(5)]
+    entries.append(_entry({"a_speedup": 1.6}, 5))  # -20%
+    ok, verdicts = L.check_regression(entries)
+    assert not ok
+    v = {x.metric: x for x in verdicts}["a_speedup"]
+    assert v.status == "regressed" and v.gate_failed
+
+
+def test_check_regression_noisy_flat_passes():
+    import numpy as np
+
+    rng = np.random.default_rng(1)
+    entries = [_entry({"t_us": 100.0 * float(rng.uniform(0.9, 1.1))}, i)
+               for i in range(8)]
+    ok, _ = L.check_regression(entries, noise_mult=3.0)
+    assert ok
+
+
+def test_check_regression_ignores_other_fingerprints():
+    entries = [_entry({"a_speedup": 9.0}, i, fp="gpu:p100:x1") for i in range(5)]
+    entries.append(_entry({"a_speedup": 2.0}, 6, fp="cpu:cpu:x1"))
+    ok, verdicts = L.check_regression(entries)
+    assert ok  # no same-fingerprint history -> no-baseline, not regressed
+    assert verdicts[0].status == "no-baseline"
+
+
+def test_check_regression_lower_better_metric():
+    entries = [_entry({"step_ms": 10.0}, i) for i in range(5)]
+    entries.append(_entry({"step_ms": 14.0}, 5))  # +40% time
+    ok, verdicts = L.check_regression(entries)
+    assert not ok
+    entries[-1] = _entry({"step_ms": 8.0}, 5)
+    ok, verdicts = L.check_regression(entries)
+    assert ok
+    assert verdicts[0].status == "improved"
+
+
+# ---------------------------------------------------------------------------
+# CLIs
+# ---------------------------------------------------------------------------
+
+def test_perf_cli_gate_exit_codes(tmp_path, monkeypatch, capsys):
+    from repro.launch.perf import main as perf_main
+
+    p = str(tmp_path / "ledger.jsonl")
+    monkeypatch.setenv(L.LEDGER_ENV, p)
+    assert perf_main(["--check"]) == 0  # empty ledger: pass
+    for v in (2.0, 2.02, 1.98, 2.01):
+        L.append_entry({"a_speedup": v, "failures": 0}, source="t", path=p)
+    assert perf_main(["--check"]) == 0
+    L.append_entry({"a_speedup": 1.4, "failures": 0}, source="t", path=p)
+    assert perf_main(["--check"]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "a_speedup" in out
+
+
+def test_perf_cli_append_and_show(tmp_path, capsys):
+    from repro.launch.perf import main as perf_main
+
+    bench = tmp_path / "BENCH.json"
+    bench.write_text(json.dumps({"epilogue_fused_speedup": 2.5, "failures": 0,
+                                 "results": []}))
+    p = str(tmp_path / "ledger.jsonl")
+    assert perf_main(["--append", str(bench), "--ledger", p]) == 0
+    entries = L.read_ledger(p)
+    assert entries[0].metrics["epilogue_fused_speedup"] == 2.5
+    assert perf_main(["--show", "--ledger", p]) == 0
+    assert "epilogue_fused_speedup" in capsys.readouterr().out
+
+
+def test_calibrate_cli(tmp_path, capsys):
+    from repro.launch.calibrate import main as cal_main
+
+    out = str(tmp_path / "cal.json")
+    assert cal_main(["--fast", "--iters", "1", "--out", out]) == 0
+    assert load_calibration(out).fingerprint == device_fingerprint()
+    text = capsys.readouterr().out
+    assert device_fingerprint() in text and "triad" in text
