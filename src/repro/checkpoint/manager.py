@@ -2,8 +2,17 @@
 
 Design goals (assignment: checkpoint/restart, node failures, elastic):
 
-  * **atomic**: write to ``step_<n>.tmp/`` then rename — a crash mid-save
-    never corrupts the latest checkpoint;
+  * **atomic AND durable**: write to ``step_<n>.tmp/`` then rename, with
+    every payload file *and* the directories fsynced before the publish —
+    a crash mid-save never corrupts the latest checkpoint, and a published
+    checkpoint cannot be hollowed out by a post-rename power loss;
+  * **validated restore**: ``restore()`` cross-checks the manifest against
+    the on-disk ``.npz`` payloads; when the latest checkpoint is corrupt it
+    falls back to the previous step (with a recorded degradation) instead
+    of crashing the restart loop — an explicitly requested step still
+    raises :class:`~repro.resilience.faults.CheckpointIOError`;
+  * **retrying save**: one transient ``OSError`` per save is retried once
+    (recorded as a degradation) before surfacing;
   * **mesh-independent**: arrays are saved as host numpy with their logical
     param paths; a restart may load onto a *different* mesh/device count
     (elastic re-mesh) because shardings are re-derived from the rule table
@@ -23,11 +32,15 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.resilience import faults
+from repro.resilience.guard import record_degradation
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -65,20 +78,43 @@ class CheckpointManager:
         self._last_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
+    @staticmethod
+    def _fsync_dir(path: Path) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
     def _write(self, step: int, trees: Dict[str, Any], extra: Dict[str, Any]):
+        faults.fire("ckpt/write", faults.CheckpointIOError,
+                    f"injected checkpoint write failure at step {step}")
         tmp = self.dir / f"step_{step:010d}.tmp"
         final = self.dir / f"step_{step:010d}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
+        # fsync every payload before the rename publishes it: os.rename is
+        # atomic in the namespace but says nothing about the *data* — on a
+        # power loss a renamed-but-unsynced checkpoint can come back as the
+        # latest step with hollow .npz files, which restore() would then
+        # have to reject.  Durability belongs on the write side.
         for name, tree in trees.items():
             flat = _flatten(tree)
-            np.savez(tmp / f"{name}.npz", **flat)
-        (tmp / "manifest.json").write_text(json.dumps(
-            {"step": step, "trees": sorted(trees), "extra": extra}, indent=1))
+            with open(tmp / f"{name}.npz", "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump({"step": step, "trees": sorted(trees), "extra": extra},
+                      f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        self._fsync_dir(tmp)
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
+        self._fsync_dir(self.dir)  # persist the rename itself
         self._gc()
 
     def _gc(self):
@@ -96,7 +132,16 @@ class CheckpointManager:
             meta["data_state"] = data_state
         if rng is not None:
             meta["rng"] = np.asarray(jax.device_get(rng)).tolist()
-        self._write(step, trees, meta)
+        try:
+            self._write(step, trees, meta)
+        except OSError as e:
+            # One transient I/O failure (full/flaky NFS, injected
+            # ckpt/write) is retried before surfacing: losing a training
+            # run to a single EIO is worse than one duplicate write.
+            record_degradation("ckpt/write", step=step,
+                               error=f"{type(e).__name__}: {e}",
+                               action="retry once")
+            self._write(step, trees, meta)
 
     def save_async(self, step: int, **kw) -> None:
         """Snapshot to host synchronously, write in a background thread."""
@@ -136,6 +181,21 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _read_manifest(self, d: Path) -> Dict:
+        """Manifest of checkpoint dir ``d``, cross-checked against the
+        on-disk payloads; raises :class:`CheckpointIOError` on any gap."""
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise faults.CheckpointIOError(
+                f"{d.name}: unreadable manifest ({type(e).__name__}: {e})") from e
+        for name in manifest.get("trees", []):
+            npz = d / f"{name}.npz"
+            if not npz.exists():
+                raise faults.CheckpointIOError(
+                    f"{d.name}: manifest lists {name!r} but {npz.name} is missing")
+        return manifest
+
     def restore(
         self,
         step: Optional[int] = None,
@@ -146,24 +206,47 @@ class CheckpointManager:
         opt_shardings=None,
     ) -> Tuple[int, Any, Any, Dict]:
         """Load a checkpoint.  ``shardings`` (same tree structure as params)
-        re-places arrays for the *current* mesh — elastic re-mesh on load."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        re-places arrays for the *current* mesh — elastic re-mesh on load.
+
+        With ``step=None`` a corrupt/incomplete latest checkpoint degrades
+        to the previous step (recorded + warned) — the restart loop must
+        never die to a half-written directory.  An explicit ``step`` is a
+        statement of intent and raises :class:`CheckpointIOError` instead.
+        """
+        explicit = step is not None
+        candidates = [step] if explicit else self.all_steps()[::-1]
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        last_exc: Optional[BaseException] = None
+        for s in candidates:
+            d = self.dir / f"step_{s:010d}"
+            try:
+                manifest = self._read_manifest(d)
 
-        def load_tree(name, template, shard_tree):
-            with np.load(d / f"{name}.npz") as z:
-                flat = {k: z[k] for k in z.files}
-            tree = _unflatten_into(template, flat)
-            if shard_tree is not None:
-                tree = jax.tree.map(
-                    lambda a, s: jax.device_put(a, s), tree, shard_tree)
-            return tree
+                def load_tree(name, template, shard_tree):
+                    with np.load(d / f"{name}.npz") as z:
+                        flat = {k: z[k] for k in z.files}
+                    tree = _unflatten_into(template, flat)
+                    if shard_tree is not None:
+                        tree = jax.tree.map(
+                            lambda a, sh: jax.device_put(a, sh), tree, shard_tree)
+                    return tree
 
-        params = load_tree("params", params_template, shardings)
-        opt_state = None
-        if opt_state_template is not None and (d / "opt_state.npz").exists():
-            opt_state = load_tree("opt_state", opt_state_template, opt_shardings)
-        return step, params, opt_state, manifest.get("extra", {})
+                params = load_tree("params", params_template, shardings)
+                opt_state = None
+                if opt_state_template is not None and (d / "opt_state.npz").exists():
+                    opt_state = load_tree("opt_state", opt_state_template,
+                                          opt_shardings)
+                return s, params, opt_state, manifest.get("extra", {})
+            except (faults.CheckpointIOError, OSError, KeyError, ValueError,
+                    zipfile.BadZipFile) as e:
+                if explicit:
+                    raise faults.CheckpointIOError(
+                        f"requested checkpoint step {s} is unreadable: {e}") from e
+                record_degradation("ckpt/restore", step=s,
+                                   error=f"{type(e).__name__}: {e}",
+                                   action="fall back to previous step")
+                last_exc = e
+        raise faults.CheckpointIOError(
+            f"no readable checkpoint in {self.dir} "
+            f"(tried steps {candidates})") from last_exc

@@ -92,9 +92,13 @@ def _dwconv_bwd_rule(padding, variant, opts, res, dy):
     fused_v, fused_opts = _resolve_bwd_fused(spec, opts, B=B, H=H, L=L, K=K,
                                              dtype=xr.dtype, padding=padding)
     if fused_v is not None:
-        fwd_v, _ = ops.resolve_variant("fwd", spec.fwd, opts, B=B, H=H, L=L,
-                                       K=K, dtype=xr.dtype, padding=padding)
-        xp_saved = fwd_v != "xla"  # Pallas forwards saved the padded buffer
+        # The fwd rule saved either the raw x (shape == dy.shape) or the
+        # padded unified-Wpad buffer (strictly wider).  Detect which by
+        # SHAPE, not by re-resolving the forward variant: guarded dispatch
+        # (repro.resilience.guard) may have degraded the forward mid-trace,
+        # so a re-resolution can disagree with what the fwd rule actually
+        # saved.  The residual's own geometry cannot lie.
+        xp_saved = xr.shape != dy.shape
         dx, dk = ops.dwconv_bwd_fused_op(
             None if xp_saved else xr, dy, k, padding, fused_v, fused_opts,
             xp=xr if xp_saved else None)
@@ -174,10 +178,10 @@ def _dwconv_act_bwd_rule(padding, act, variant, opts, res, dy):
                                              dtype=xr.dtype, padding=padding,
                                              epilogue=epi)
     if fused_v is not None:
-        fwd_v, _ = ops.resolve_variant("fwd", spec.fwd, opts, B=B, H=H, L=L,
-                                       K=K, dtype=xr.dtype, padding=padding,
-                                       epilogue=epi)
-        xp_saved = fwd_v != "xla"  # Pallas forwards saved the padded buffer
+        # Shape-based residual detection — see _dwconv_bwd_rule: re-resolving
+        # the forward variant can disagree with what the fwd rule saved when
+        # guarded dispatch degraded the forward mid-trace.
+        xp_saved = xr.shape != dy.shape
         dx, dk, dbias = ops.dwconv_bwd_fused_act_op(
             None if xp_saved else xr, dy, k, bias, padding, fused_v,
             fused_opts, act=act, xp=xr if xp_saved else None)

@@ -22,6 +22,13 @@ padding + dtype + backend) and dispatches the cached winner — implementation v
 with ``DEFAULT_OPTS``) when no entry exists.  Resolution happens at trace
 time from static shapes, so jitted callers pay a dict lookup once per
 compilation, never per step.
+
+Every Pallas dispatch below runs through ``repro.resilience.guard`` — a
+lowering/compile/resource failure degrades (at trace time) down the chain
+chosen variant -> conservative default -> XLA reference, quarantining the
+tuning-cache entry that picked the broken configuration.  With no failure
+the guard is one ``try`` frame per compilation and the dispatched
+computation is bit-identical to unguarded dispatch.
 """
 from __future__ import annotations
 
@@ -54,6 +61,8 @@ from repro.perfmodel.geometry import (  # noqa: F401  (re-exports)
     epilogue_time_tile,
     unified_wpad,
 )
+from repro.resilience import faults
+from repro.resilience import guard as _guard
 
 FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
 BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
@@ -163,6 +172,32 @@ def _prep_bias(bias: Optional[jnp.ndarray], Hp: int) -> Optional[jnp.ndarray]:
     return jnp.pad(bias[:, None], ((0, Hp - bias.shape[0]), (0, LANE - 1)))
 
 
+def _poison(y: jnp.ndarray) -> jnp.ndarray:
+    """``kernel/nan`` fault site: bake NaN into the traced output (a silent
+    numerical corruption the degradation chain *cannot* see — only the
+    train-loop :class:`~repro.resilience.guard.NumericsGuard` catches it)."""
+    if faults.should_fire("kernel/nan"):
+        return jnp.full_like(y, jnp.nan)
+    return y
+
+
+def _residual_input(x: Optional[jnp.ndarray], xp: Optional[jnp.ndarray],
+                    B: int, H: int, L: int, K: int,
+                    padding: Padding) -> jnp.ndarray:
+    """The raw input for the split backward: ``x`` when the caller still has
+    it, otherwise sliced back out of the forward's unified-``Wpad`` residual
+    — the guard can land on the split path mid-VJP, where only ``xp``
+    survived as the saved residual."""
+    if x is not None:
+        return x
+    if xp is None:
+        raise ValueError(
+            "bwd_fused variant 'split' needs the unpadded input x "
+            "or the padded residual xp")
+    p_left, _ = pad_widths(K, padding)
+    return xp[:B, :H, p_left:p_left + L]
+
+
 def _fwd_impl(
     x: jnp.ndarray,
     k: jnp.ndarray,
@@ -175,6 +210,8 @@ def _fwd_impl(
 ):
     B, H, L = x.shape
     _, K = k.shape
+    faults.fire("kernel/lower", faults.KernelLoweringError,
+                f"injected lowering failure (fwd-family/{variant})")
     interpret = opts.resolved_interpret()
     Hb = min(opts.block_h, H)
     Lout = round_up(L, LANE)
@@ -218,13 +255,22 @@ def dwconv_fwd_op(
     ``"xla"`` runs the reference."""
     B, H, L = x.shape
     K = k.shape[-1]
+    requested = variant
+    epi = epilogue_key(bias is not None, act)
     variant, opts = resolve_variant(
         "fwd", variant, opts, B=B, H=H, L=L, K=K, dtype=x.dtype,
-        padding=padding, epilogue=epilogue_key(bias is not None, act))
+        padding=padding, epilogue=epi)
     if variant == "xla":
-        return ref.dwconv_act_ref(x, k, bias=bias, act=act, padding=padding)
+        return _poison(ref.dwconv_act_ref(x, k, bias=bias, act=act,
+                                          padding=padding))
     p_left, _ = pad_widths(K, padding)
-    return _fwd_impl(x, k, p_left, variant, opts, bias=bias, act=act)
+    return _poison(_guard.run_guarded(
+        "fwd", shape=(B, H, L, K), dtype=jnp.dtype(x.dtype).name,
+        padding=padding, epilogue=epi, requested=requested,
+        attempts=[(variant, opts), (AUTO_FALLBACK["fwd"], DEFAULT_OPTS)],
+        run=lambda v, o: _fwd_impl(x, k, p_left, v, o, bias=bias, act=act),
+        run_reference=lambda: ref.dwconv_act_ref(x, k, bias=bias, act=act,
+                                                 padding=padding)))
 
 
 def dwconv_fwd_op_res(
@@ -244,14 +290,24 @@ def dwconv_fwd_op_res(
     recomputes the pre-activation from this same buffer in-register."""
     B, H, L = x.shape
     K = k.shape[-1]
+    requested = variant
+    epi = epilogue_key(bias is not None, act)
     variant, opts = resolve_variant(
         "fwd", variant, opts, B=B, H=H, L=L, K=K, dtype=x.dtype,
-        padding=padding, epilogue=epilogue_key(bias is not None, act))
+        padding=padding, epilogue=epi)
     if variant == "xla":
-        return ref.dwconv_act_ref(x, k, bias=bias, act=act, padding=padding), None
+        return _poison(ref.dwconv_act_ref(x, k, bias=bias, act=act,
+                                          padding=padding)), None
     p_left, _ = pad_widths(K, padding)
-    return _fwd_impl(x, k, p_left, variant, opts, return_padded=True,
-                     bias=bias, act=act)
+    y, xp = _guard.run_guarded(
+        "fwd", shape=(B, H, L, K), dtype=jnp.dtype(x.dtype).name,
+        padding=padding, epilogue=epi, requested=requested,
+        attempts=[(variant, opts), (AUTO_FALLBACK["fwd"], DEFAULT_OPTS)],
+        run=lambda v, o: _fwd_impl(x, k, p_left, v, o, return_padded=True,
+                                   bias=bias, act=act),
+        run_reference=lambda: (ref.dwconv_act_ref(x, k, bias=bias, act=act,
+                                                  padding=padding), None))
+    return _poison(y), xp
 
 
 def dwconv_bwd_input_op(
@@ -265,12 +321,18 @@ def dwconv_bwd_input_op(
     the forward path — the structural symmetry the paper exploits)."""
     B, H, L = dy.shape
     K = k.shape[-1]
+    requested = variant
     variant, opts = resolve_variant("bwd_in", variant, opts, B=B, H=H, L=L, K=K,
                                     dtype=dy.dtype, padding=padding)
     if variant == "xla":
         return ref.dwconv_bwd_input_ref(dy, k, padding)
     p_left, _ = adjoint_pad_widths(K, padding)
-    return _fwd_impl(dy, k[:, ::-1], p_left, variant, opts)
+    return _guard.run_guarded(
+        "bwd_in", shape=(B, H, L, K), dtype=jnp.dtype(dy.dtype).name,
+        padding=padding, requested=requested,
+        attempts=[(variant, opts), (AUTO_FALLBACK["bwd_in"], DEFAULT_OPTS)],
+        run=lambda v, o: _fwd_impl(dy, k[:, ::-1], p_left, v, o),
+        run_reference=lambda: ref.dwconv_bwd_input_ref(dy, k, padding))
 
 
 def _bwdk_impl(
@@ -282,6 +344,8 @@ def _bwdk_impl(
     opts: KernelOptions,
 ) -> jnp.ndarray:
     B, H, L = x.shape
+    faults.fire("kernel/lower", faults.KernelLoweringError,
+                f"injected lowering failure (bwd_k/{variant})")
     interpret = opts.resolved_interpret()
     Hb = min(opts.block_h, H)
     Bc = min(opts.batch_chunk, B)
@@ -329,11 +393,17 @@ def dwconv_bwd_kernel_op(
     cache winner flipping variants never changes gradient dtype under bf16
     training; callers cast to the param dtype."""
     B, H, L = x.shape
+    requested = variant
     variant, opts = resolve_variant("bwd_k", variant, opts, B=B, H=H, L=L, K=K,
                                     dtype=x.dtype, padding=padding)
     if variant == "xla":
         return ref.dwconv_bwd_kernel_ref(x, dy, K, padding)
-    return _bwdk_impl(x, dy, K, padding, variant, opts)
+    return _guard.run_guarded(
+        "bwd_k", shape=(B, H, L, K), dtype=jnp.dtype(x.dtype).name,
+        padding=padding, requested=requested,
+        attempts=[(variant, opts), (AUTO_FALLBACK["bwd_k"], DEFAULT_OPTS)],
+        run=lambda v, o: _bwdk_impl(x, dy, K, padding, v, o),
+        run_reference=lambda: ref.dwconv_bwd_kernel_ref(x, dy, K, padding))
 
 
 def _bwd_fused_impl(
@@ -349,6 +419,8 @@ def _bwd_fused_impl(
 ):
     B, H, L = dy.shape
     K = k.shape[-1]
+    faults.fire("kernel/lower", faults.KernelLoweringError,
+                f"injected lowering failure (bwd_fused/{variant})")
     trivial = is_trivial(bias, act)
     interpret = opts.resolved_interpret()
     Hb = min(opts.block_h, H)
@@ -431,15 +503,24 @@ def dwconv_bwd_fused_op(
     B, H, L = dy.shape
     K = k.shape[-1]
     caller_opts = opts
+    requested = variant
     variant, opts = resolve_variant("bwd_fused", variant, opts, B=B, H=H, L=L,
                                     K=K, dtype=dy.dtype, padding=padding)
-    if variant == "split":
-        if x is None:
-            raise ValueError("bwd_fused variant 'split' needs the unpadded input x")
+
+    def run_split():
+        xs = _residual_input(x, xp, B, H, L, K, padding)
         dx = dwconv_bwd_input_op(dy, k, padding, "auto", caller_opts)
-        dk = dwconv_bwd_kernel_op(x, dy, K, padding, "auto", caller_opts)
+        dk = dwconv_bwd_kernel_op(xs, dy, K, padding, "auto", caller_opts)
         return dx, dk
-    return _bwd_fused_impl(x, dy, k, padding, variant, opts, xp=xp)
+
+    if variant == "split":
+        return run_split()
+    return _guard.run_guarded(
+        "bwd_fused", shape=(B, H, L, K), dtype=jnp.dtype(dy.dtype).name,
+        padding=padding, requested=requested,
+        attempts=[(variant, opts)],
+        run=lambda v, o: _bwd_fused_impl(x, dy, k, padding, v, o, xp=xp),
+        run_reference=run_split, reference_name="split")
 
 
 def dwconv_bwd_fused_act_op(
@@ -473,25 +554,34 @@ def dwconv_bwd_fused_act_op(
         dx, dk = dwconv_bwd_fused_op(x, dy, k, padding, variant, opts, xp=xp)
         return dx, dk, None
     caller_opts = opts
+    requested = variant
     epi = epilogue_key(bias is not None, act)
     variant, opts = resolve_variant("bwd_fused", variant, opts, B=B, H=H, L=L,
                                     K=K, dtype=dy.dtype, padding=padding,
                                     epilogue=epi)
-    if variant == "split":
-        if x is None:
-            raise ValueError("bwd_fused variant 'split' needs the unpadded input x")
+
+    def run_split():
         # Activation-recompute split path: one standalone pre-activation
         # pass (conv + bias, no act), then the ordinary split backward on
         # the effective gradient.
-        pre = dwconv_fwd_op(x, k, padding, "auto", caller_opts, bias=bias)
+        xs = _residual_input(x, xp, B, H, L, K, padding)
+        pre = dwconv_fwd_op(xs, k, padding, "auto", caller_opts, bias=bias)
         dy_eff32 = dy.astype(jnp.float32) * act_grad(pre.astype(jnp.float32), act)
         dy_eff = dy_eff32.astype(dy.dtype)
         dx = dwconv_bwd_input_op(dy_eff, k, padding, "auto", caller_opts)
-        dk = dwconv_bwd_kernel_op(x, dy_eff, K, padding, "auto", caller_opts)
+        dk = dwconv_bwd_kernel_op(xs, dy_eff, K, padding, "auto", caller_opts)
         dbias = jnp.sum(dy_eff32, axis=(0, 2)) if bias is not None else None
         return dx, dk, dbias
-    return _bwd_fused_impl(x, dy, k, padding, variant, opts, xp=xp,
-                           bias=bias, act=act)
+
+    if variant == "split":
+        return run_split()
+    return _guard.run_guarded(
+        "bwd_fused", shape=(B, H, L, K), dtype=jnp.dtype(dy.dtype).name,
+        padding=padding, epilogue=epi, requested=requested,
+        attempts=[(variant, opts)],
+        run=lambda v, o: _bwd_fused_impl(x, dy, k, padding, v, o, xp=xp,
+                                         bias=bias, act=act),
+        run_reference=run_split, reference_name="split")
 
 
 @functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))

@@ -31,6 +31,8 @@ import time
 from pathlib import Path
 from typing import List, Optional, Sequence
 
+from repro.resilience import faults
+
 
 @dataclasses.dataclass
 class SupervisorConfig:
@@ -60,6 +62,11 @@ class Heartbeat:
         self._ewma: Optional[float] = None
 
     def beat(self, step: int) -> None:
+        if faults.should_fire("heartbeat/stall"):
+            # Injected stall: the loop *thinks* it beat but nothing reaches
+            # the supervisor — exactly what a hung filesystem or a wedged
+            # writer thread looks like from the watchdog's side.
+            return
         now = time.time()
         dt = (now - self._last_t) if self._last_t is not None else 0.0
         self._last_t = now
@@ -110,8 +117,9 @@ class Supervisor:
             env.update(extra_env or {})
             env["REPRO_RESTART_COUNT"] = str(self.restarts)
             self._log(f"launching attempt {self.restarts + 1}: {' '.join(self.cfg.cmd)}")
+            launched_at = time.time()
             proc = subprocess.Popen(list(self.cfg.cmd), env=env)
-            rc = self._watch(proc)
+            rc = self._watch(proc, launched_at)
             if rc == 0:
                 self._log("child exited cleanly")
                 return 0
@@ -124,7 +132,7 @@ class Supervisor:
             time.sleep(backoff)
             backoff = min(backoff * 2, self.cfg.backoff_max_s)
 
-    def _watch(self, proc: subprocess.Popen) -> int:
+    def _watch(self, proc: subprocess.Popen, launched_at: float) -> int:
         hb = self.cfg.heartbeat_path
         while True:
             try:
@@ -132,9 +140,17 @@ class Supervisor:
             except subprocess.TimeoutExpired:
                 pass
             beat = Heartbeat.read(hb)
-            if beat is not None:
-                stale = time.time() - beat.get("t", 0)
-                if stale > self.cfg.heartbeat_timeout_s:
-                    self._log(f"heartbeat stale {stale:.0f}s (hung step?) — killing child")
-                    proc.send_signal(signal.SIGKILL)
-                    return proc.wait() or 1
+            # A beat older than this child's launch belongs to a *previous*
+            # incarnation: judging the fresh child by it would SIGKILL every
+            # restart whose predecessor hung (the stale file just sits
+            # there), turning one hang into an unrecoverable kill loop.  The
+            # fresh child's own silence is covered by the same timeout,
+            # measured from launch.
+            if beat is not None and beat.get("t", 0) < launched_at:
+                beat = None
+            ref_t = beat.get("t", launched_at) if beat is not None else launched_at
+            stale = time.time() - ref_t
+            if stale > self.cfg.heartbeat_timeout_s:
+                self._log(f"heartbeat stale {stale:.0f}s (hung step?) — killing child")
+                proc.send_signal(signal.SIGKILL)
+                return proc.wait() or 1

@@ -12,6 +12,7 @@ atomic/async checkpoints -> auto-resume.  Runs identically on 1 CPU device
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -20,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.resilience import NonFiniteOutputError, NumericsGuard
+from repro.resilience import guard as resilience_guard
 from repro.configs.registry import get_config, list_archs
 from repro.data.lm import LMStreamConfig, LMTokenStream
 from repro.distributed import sharding as shd
@@ -60,13 +63,63 @@ def parse_args(argv=None):
                          "bytes attached to the paper-operator kernels")
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="test hook: crash the process at this step")
+    ap.add_argument("--conv-variant", default="",
+                    help="override the config's depthwise-conv kernel variant "
+                         "(e.g. 'row', 'auto', 'xla') on every SSM/RG-LRU "
+                         "block — the chaos CI uses this to drive the "
+                         "Pallas/auto dispatch paths from smoke configs")
+    ap.add_argument("--guard", action="store_true",
+                    help="per-step finite check on loss/grad_norm: a "
+                         "nonfinite step skips the update (previous params "
+                         "kept); after --guard-max-skips consecutive skips "
+                         "the process exits 21 for the supervisor")
+    ap.add_argument("--guard-max-skips", type=int, default=3,
+                    help="consecutive nonfinite steps tolerated under "
+                         "--guard before aborting (default 3)")
     return ap.parse_args(argv)
+
+
+# Exit code for a numerics abort under --guard: distinct from a crash so the
+# supervisor's report (and the chaos CI) can tell "diverged, aborted
+# gracefully" from "blew up with a traceback".
+GUARD_ABORT_EXIT = 21
+
+
+def _override_conv_variant(cfg, variant: str):
+    """Rebuild ``cfg`` with every depthwise-conv study axis forced to
+    ``variant`` (SSM and RG-LRU blocks; other families carry no conv)."""
+    if cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, conv_variant=variant))
+    if cfg.rglru is not None:
+        cfg = dataclasses.replace(
+            cfg, rglru=dataclasses.replace(cfg.rglru, conv_variant=variant))
+    return cfg
+
+
+def _finish_trace(tracer, args) -> None:
+    """Close the trace and surface what degraded (normal exit and guard
+    abort share this — an aborted run's trace must still be complete)."""
+    events = resilience_guard.degradation_events()
+    if events:
+        by_site = {}
+        for e in events:
+            by_site[e["site"]] = by_site.get(e["site"], 0) + 1
+        summary = ", ".join(f"{s}: {n}" for s, n in sorted(by_site.items()))
+        print(f"[train] degradations absorbed: {summary}", flush=True)
+    if args.trace:
+        tracer.close()
+        print(f"[train] trace written to {args.trace} "
+              f"({len(tracer.records)} records)", flush=True)
 
 
 def main(argv=None) -> int:
     args = parse_args(argv)
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.conv_variant:
+        cfg = _override_conv_variant(cfg, args.conv_variant)
     model_axes = None
+    nguard = NumericsGuard(args.guard_max_skips) if args.guard else None
 
     tracer = (obs_trace.configure(args.trace, meta={"launcher": "train",
                                                     "arch": cfg.name})
@@ -131,7 +184,10 @@ def main(argv=None) -> int:
             opt_state = jax.jit(opt.init, out_shardings=o_shard)(params)
 
         ba = {"tokens": ("act_batch", None), "labels": ("act_batch", None)}
-        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        # Under --guard a skipped step must keep the *previous* params, so
+        # the inputs cannot be donated to the step function.
+        jit_step = (jax.jit(step_fn) if nguard is not None
+                    else jax.jit(step_fn, donate_argnums=(0, 1)))
 
         losses = []
         t0 = time.perf_counter()
@@ -143,10 +199,31 @@ def main(argv=None) -> int:
                 batch_np = stream.next_batch()
                 batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
             with tracer.span("train/step", step=step) as sp:
-                params, opt_state, metrics = jit_step(params, opt_state, batch)
+                new_params, new_opt_state, metrics = jit_step(params, opt_state, batch)
                 sp.sync(metrics)
                 for kname, sched, count in step_attachments:
                     sp.attach(kname, sched, hw=attach_hw, count=count)
+            if nguard is not None:
+                try:
+                    ok = nguard.check(step, loss=metrics["loss"],
+                                      grad_norm=metrics["grad_norm"])
+                except NonFiniteOutputError as e:
+                    print(f"[train] numerics guard abort: {e}", flush=True)
+                    if mgr is not None:
+                        try:
+                            mgr.wait()  # don't orphan an in-flight checkpoint
+                        except Exception as ce:
+                            print(f"[train] in-flight checkpoint failed during "
+                                  f"abort: {ce}", flush=True)
+                    _finish_trace(tracer, args)
+                    return GUARD_ABORT_EXIT
+                if ok:
+                    params, opt_state = new_params, new_opt_state
+                else:
+                    print(f"[train] step={step} skipped (nonfinite metrics; "
+                          f"{nguard.consecutive} consecutive)", flush=True)
+            else:
+                params, opt_state = new_params, new_opt_state
             loss = float(metrics["loss"])
             losses.append(loss)
             if hb is not None:
@@ -166,10 +243,10 @@ def main(argv=None) -> int:
                          data_state=stream.state_dict())
         print(f"[train] done: first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}",
               flush=True)
-        if args.trace:
-            tracer.close()
-            print(f"[train] trace written to {args.trace} "
-                  f"({len(tracer.records)} records)", flush=True)
+        if nguard is not None and nguard.total_skipped:
+            print(f"[train] guard: skipped {nguard.total_skipped} nonfinite "
+                  f"step(s)", flush=True)
+        _finish_trace(tracer, args)
         return 0
 
 

@@ -196,6 +196,22 @@ class Tracer:
             return wrapper
         return deco
 
+    def event(self, kind: str, **fields) -> None:
+        """Emit a standalone (span-less) record of ``kind`` — e.g. the
+        resilience layer's ``kind="degradation"`` records.  Parented to the
+        innermost open span so a degradation lands inside the step that
+        absorbed it; a no-op when tracing is disabled."""
+        if not self.enabled:
+            return
+        rec: Dict[str, Any] = {
+            "kind": kind, "id": self._next_id,
+            "parent": self._stack[-1].id if self._stack else None,
+            "t_s": time.perf_counter() - self._epoch,
+        }
+        self._next_id += 1
+        rec.update(_jsonable(fields))
+        self._emit(rec)
+
     def close(self) -> None:
         if self._fh is not None:
             self._fh.close()

@@ -1,0 +1,29 @@
+"""Guarded kernel execution for restricted cloud environments.
+
+``faults``  — error taxonomy + deterministic seeded fault injection
+              (:class:`FaultPlan` / ``REPRO_FAULTS``, named sites wired into
+              kernels, tuning cache, checkpoints, heartbeat, tuner);
+``guard``   — degradation-chain dispatch (chosen variant -> conservative
+              default -> XLA reference) with failure memoization, tuning-
+              cache quarantine, ``kind="degradation"`` trace records, and
+              the train-loop :class:`NumericsGuard`;
+``report``  — CLI collecting degradation events + quarantined cache entries
+              into one JSON artifact (the chaos CI job uploads it).
+"""
+from repro.resilience.faults import (  # noqa: F401
+    CheckpointIOError,
+    CorruptCacheEntryError,
+    FaultPlan,
+    FaultRule,
+    KernelLoweringError,
+    KernelResourceError,
+    NonFiniteOutputError,
+    ResilienceError,
+    SITES,
+)
+from repro.resilience.guard import (  # noqa: F401
+    NumericsGuard,
+    degradation_events,
+    record_degradation,
+    run_guarded,
+)

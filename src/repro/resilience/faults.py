@@ -1,0 +1,291 @@
+"""Error taxonomy + deterministic, seeded fault-injection harness.
+
+Running a controlled kernel study in a *restricted cloud environment* means
+every layer of the stack must treat failure as an input, not an accident: a
+tuning-cache entry written by another device fingerprint, a VMEM overflow on
+an untested shape, a preempted host mid-checkpoint.  This module gives those
+failures two first-class representations:
+
+  1. an **error taxonomy** (:class:`ResilienceError` and friends) the
+     degradation machinery (``resilience/guard.py``) can catch by type
+     instead of pattern-matching messages;
+  2. a **deterministic fault-injection harness**: named *sites* compiled
+     into the production code paths (``kernels/ops.py``,
+     ``tuning/cache.py``, ``checkpoint/manager.py``, the supervisor
+     heartbeat, the tuner) ask :func:`should_fire` whether to misbehave.
+     With no plan installed the check is a module-global ``None`` test —
+     the harness costs nothing in production.
+
+Plans are activated either programmatically::
+
+    with FaultPlan.parse("kernel/lower*2,ckpt/write"):
+        run_training()
+
+or from the environment (read once, lazily)::
+
+    REPRO_FAULTS="kernel/lower,cache/read@skip=1,kernel/nan@p=0.5@seed=7"
+
+Spec grammar (comma-separated rules)::
+
+    site[*count][@skip=N][@p=F][@seed=N]
+
+``count`` firings (default 1, ``*`` alone = unlimited) after ``skip``
+eligible hits are passed through; ``p`` makes each eligible hit fire with
+probability ``F`` drawn from a per-rule ``random.Random(seed)`` — still
+fully deterministic for a given seed.  Unknown site names are rejected at
+parse time so a typo cannot silently disable a chaos run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+import threading
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "CheckpointIOError",
+    "CorruptCacheEntryError",
+    "FaultPlan",
+    "FaultRule",
+    "KernelLoweringError",
+    "KernelResourceError",
+    "NonFiniteOutputError",
+    "ResilienceError",
+    "SITES",
+    "fire",
+    "active_plan",
+    "reset",
+    "should_fire",
+]
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+
+
+class ResilienceError(RuntimeError):
+    """Base for every failure the degradation machinery knows how to absorb."""
+
+
+class KernelLoweringError(ResilienceError):
+    """A Pallas kernel failed to lower/compile (Mosaic ``NotImplementedError``,
+    BlockSpec mismatch, backend rejection).  Recoverable: fall down the
+    degradation chain to a conservative tiling or the XLA reference."""
+
+
+class KernelResourceError(ResilienceError):
+    """The kernel's staged working set exceeded on-chip memory (VMEM
+    overflow / XLA ``RESOURCE_EXHAUSTED``).  Recoverable the same way."""
+
+
+class NonFiniteOutputError(ResilienceError):
+    """A kernel or train step produced NaN/Inf.  The train-loop numerics
+    guard skips the update; persistent nonfiniteness aborts nonzero so the
+    supervisor's crash-restart path takes over."""
+
+
+class CorruptCacheEntryError(ResilienceError):
+    """A tuning-cache file or entry could not be parsed.  Recoverable: the
+    file is preserved aside (never silently overwritten) and readable
+    entries are salvaged."""
+
+
+class CheckpointIOError(ResilienceError, OSError):
+    """Checkpoint write/read failed at the filesystem layer.  Saves retry;
+    restores fall back to the previous intact step."""
+
+
+# ---------------------------------------------------------------------------
+# injection sites
+# ---------------------------------------------------------------------------
+
+# Every site compiled into the codebase.  Keep in sync with the README
+# fault-site table.
+SITES: Tuple[str, ...] = (
+    "kernel/lower",          # kernels/ops.py: Pallas impl raises KernelLoweringError
+    "kernel/nan",            # kernels/ops.py: forward output replaced with NaN
+    "cache/read",            # tuning/cache.py: reading the DB raises OSError
+    "cache/torn-write",      # tuning/cache.py: save writes a truncated file in place
+    "ckpt/write",            # checkpoint/manager.py: _write raises CheckpointIOError
+    "heartbeat/stall",       # launch/supervisor.py: Heartbeat.beat silently no-ops
+    "tuner/slow-candidate",  # tuning/tuner.py: measured time inflated 1000x
+)
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One armed site.  ``count`` firings (-1 = unlimited) after ``skip``
+    eligible hits; each eligible hit fires with probability ``p`` drawn from
+    a per-rule seeded RNG (deterministic given ``seed``)."""
+
+    site: str
+    count: int = 1
+    skip: int = 0
+    p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r}; known: {', '.join(SITES)}")
+        if not (0.0 <= self.p <= 1.0):
+            raise ValueError(f"fault probability must be in [0, 1], got {self.p}")
+
+
+class FaultPlan:
+    """A set of armed :class:`FaultRule`\\ s with per-site hit/fire counters.
+
+    Context manager: entering installs the plan process-globally (stacking
+    over any previous plan, including one parsed from ``REPRO_FAULTS``);
+    exiting restores the previous plan.  All counting is thread-safe and
+    deterministic: the n-th hit of a site fires iff the rule says so.
+    """
+
+    def __init__(self, rules: List[FaultRule]):
+        self.rules: Dict[str, FaultRule] = {}
+        for r in rules:
+            if r.site in self.rules:
+                raise ValueError(f"duplicate fault rule for site {r.site!r}")
+            self.rules[r.site] = r
+        self._hits: Dict[str, int] = {s: 0 for s in self.rules}
+        self._fired: Dict[str, int] = {s: 0 for s in self.rules}
+        self._rng: Dict[str, random.Random] = {
+            s: random.Random(r.seed) for s, r in self.rules.items()}
+        self._lock = threading.Lock()
+        self._previous: Optional[Optional["FaultPlan"]] = None
+
+    # ------------------------------------------------------------- parsing
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse the ``REPRO_FAULTS`` grammar (see module docstring)."""
+        rules: List[FaultRule] = []
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            head, *mods = tok.split("@")
+            site, star, count_s = head.partition("*")
+            kw: Dict[str, object] = {"site": site.strip()}
+            if star:
+                kw["count"] = -1 if not count_s.strip() else int(count_s)
+            for m in mods:
+                k, eq, v = m.partition("=")
+                k = k.strip()
+                if not eq or k not in ("skip", "p", "seed"):
+                    raise ValueError(
+                        f"bad fault modifier {m!r} in {tok!r}: expected "
+                        f"@skip=N, @p=F, or @seed=N")
+                kw[k] = float(v) if k == "p" else int(v)
+            rules.append(FaultRule(**kw))  # type: ignore[arg-type]
+        return cls(rules)
+
+    def spec(self) -> str:
+        out = []
+        for r in self.rules.values():
+            s = r.site + ("" if r.count == 1 else "*" if r.count < 0 else f"*{r.count}")
+            if r.skip:
+                s += f"@skip={r.skip}"
+            if r.p < 1.0:
+                s += f"@p={r.p}@seed={r.seed}"
+            out.append(s)
+        return ",".join(out)
+
+    # ------------------------------------------------------------ counting
+    def should_fire(self, site: str) -> bool:
+        rule = self.rules.get(site)
+        if rule is None:
+            return False
+        with self._lock:
+            hit = self._hits[site]
+            self._hits[site] = hit + 1
+            if hit < rule.skip:
+                return False
+            if rule.count >= 0 and self._fired[site] >= rule.count:
+                return False
+            if rule.p < 1.0 and self._rng[site].random() >= rule.p:
+                return False
+            self._fired[site] += 1
+            return True
+
+    def hits(self, site: str) -> int:
+        with self._lock:
+            return self._hits.get(site, 0)
+
+    def fired(self, site: str) -> int:
+        with self._lock:
+            return self._fired.get(site, 0)
+
+    def summary(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {s: {"hits": self._hits[s], "fired": self._fired[s]}
+                    for s in self.rules}
+
+    # ---------------------------------------------------- global installing
+    def __enter__(self) -> "FaultPlan":
+        global _PLAN, _ENV_LOADED
+        with _GLOBAL_LOCK:
+            _ENV_LOADED = True  # an explicit plan overrides the env plan
+            self._previous = _PLAN
+            _PLAN = self
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        global _PLAN
+        with _GLOBAL_LOCK:
+            _PLAN = self._previous
+            self._previous = None
+
+
+# ---------------------------------------------------------------------------
+# process-global plan (explicit FaultPlan context > REPRO_FAULTS env > none)
+# ---------------------------------------------------------------------------
+
+FAULTS_ENV_VAR = "REPRO_FAULTS"
+
+_PLAN: Optional[FaultPlan] = None
+_ENV_LOADED = False
+_GLOBAL_LOCK = threading.Lock()
+
+
+def _load_env_plan() -> None:
+    global _PLAN, _ENV_LOADED
+    with _GLOBAL_LOCK:
+        if _ENV_LOADED:
+            return
+        _ENV_LOADED = True
+        spec = os.environ.get(FAULTS_ENV_VAR, "").strip()
+        if spec:
+            _PLAN = FaultPlan.parse(spec)
+
+
+def active_plan() -> Optional[FaultPlan]:
+    """The installed plan, if any (lazily reading ``REPRO_FAULTS`` once)."""
+    if not _ENV_LOADED:
+        _load_env_plan()
+    return _PLAN
+
+
+def should_fire(site: str) -> bool:
+    """True when ``site`` must misbehave now.  The no-plan fast path is a
+    single global ``None`` test — safe to leave in production code."""
+    if not _ENV_LOADED:
+        _load_env_plan()
+    p = _PLAN
+    return p is not None and p.should_fire(site)
+
+
+def fire(site: str, exc_type: type, message: str) -> None:
+    """Raise ``exc_type(message)`` when ``site`` fires (the raising sites'
+    one-liner; value-corrupting sites call :func:`should_fire` directly)."""
+    if should_fire(site):
+        raise exc_type(f"[fault-injection:{site}] {message}")
+
+
+def reset() -> None:
+    """Drop any installed plan and forget the env read (tests)."""
+    global _PLAN, _ENV_LOADED
+    with _GLOBAL_LOCK:
+        _PLAN = None
+        _ENV_LOADED = False

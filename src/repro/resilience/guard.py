@@ -1,0 +1,256 @@
+"""Guarded kernel dispatch: the degradation chain, failure memoization,
+cache quarantine, and the train-loop numerics guard.
+
+Every Pallas dispatch in ``kernels/ops.py`` runs through
+:func:`run_guarded`, which executes a **degradation chain**::
+
+    chosen (variant, tiling)  ->  conservative default  ->  XLA reference
+
+A lowering/compile/VMEM failure (or an unknown-variant / illegal-tiling
+``ValueError`` from a corrupt or foreign tuning-cache entry) is caught, the
+failing configuration is **memoized** per (path, shape, dtype, padding,
+epilogue, variant, tiling) so a broken variant is never re-attempted (or
+re-compiled) on later steps, the offending tuning-cache entry is
+**quarantined** (``tuning/cache.py`` schema v6), and the event is emitted as
+a ``kind="degradation"`` record through the ``repro.obs.trace`` tracer plus
+an in-process ledger (:func:`degradation_events`) — so the counter-free
+report can always say what *actually* ran.
+
+The no-failure path costs one ``try`` frame at trace time (once per jit
+compilation, never per step) and is bit-identical to unguarded dispatch.
+
+:class:`NumericsGuard` is the train-loop half: a per-step finite check on
+loss/grad that skips the optimizer update on nonfinite values and raises
+:class:`~repro.resilience.faults.NonFiniteOutputError` after N *consecutive*
+skips, converting silent divergence into the supervisor's crash-restart
+contract.
+"""
+from __future__ import annotations
+
+import math
+import sys
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.obs import trace as obs_trace
+from repro.resilience.faults import (
+    KernelLoweringError,
+    KernelResourceError,
+    NonFiniteOutputError,
+)
+
+__all__ = [
+    "NumericsGuard",
+    "clear",
+    "degradation_events",
+    "failed_configs",
+    "guardable_exceptions",
+    "record_degradation",
+    "run_guarded",
+]
+
+
+# ---------------------------------------------------------------------------
+# which exceptions the chain may absorb
+# ---------------------------------------------------------------------------
+
+_GUARDABLE: Optional[Tuple[type, ...]] = None
+
+
+def guardable_exceptions() -> Tuple[type, ...]:
+    """Exception types the degradation chain absorbs: the resilience
+    taxonomy, Mosaic's ``NotImplementedError`` lowering rejections, XLA
+    runtime failures (``RESOURCE_EXHAUSTED`` surfaces here on hardware), and
+    ``ValueError`` — which is what the kernel wrappers raise when a corrupt
+    or foreign cache entry supplies an unknown variant or illegal tiling.
+    Anything else (``TypeError``, ``KeyboardInterrupt``, ...) propagates."""
+    global _GUARDABLE
+    if _GUARDABLE is None:
+        excs: List[type] = [KernelLoweringError, KernelResourceError,
+                            NotImplementedError, ValueError]
+        try:  # the XLA runtime error type moved across jax versions
+            from jax._src.lib import xla_client  # type: ignore
+
+            excs.append(xla_client.XlaRuntimeError)
+        except Exception:  # pragma: no cover - defensive across jax versions
+            pass
+        try:
+            from jax.errors import JaxRuntimeError  # type: ignore
+
+            excs.append(JaxRuntimeError)
+        except Exception:
+            pass
+        _GUARDABLE = tuple(excs)
+    return _GUARDABLE
+
+
+# ---------------------------------------------------------------------------
+# failure memo + degradation ledger
+# ---------------------------------------------------------------------------
+
+_LOCK = threading.Lock()
+_FAILED: Dict[Tuple, str] = {}
+_EVENTS: List[Dict[str, Any]] = []
+
+
+def _fail_key(path: str, shape: Tuple[int, int, int, int], dtype: str,
+              padding: str, epilogue: str, variant: str, opts) -> Tuple:
+    return (path, *shape, dtype, padding, epilogue, variant,
+            opts.block_h, opts.block_t, opts.batch_chunk)
+
+
+def failed_configs() -> Dict[Tuple, str]:
+    """Snapshot of the memoized broken configurations (key -> error)."""
+    with _LOCK:
+        return dict(_FAILED)
+
+
+def degradation_events() -> List[Dict[str, Any]]:
+    """Snapshot of every degradation this process has absorbed."""
+    with _LOCK:
+        return list(_EVENTS)
+
+
+def clear() -> None:
+    """Forget memoized failures and recorded events (tests)."""
+    with _LOCK:
+        _FAILED.clear()
+        _EVENTS.clear()
+
+
+def record_degradation(site: str, **fields) -> Dict[str, Any]:
+    """Record one absorbed failure: append to the in-process ledger, emit a
+    ``kind="degradation"`` record through the global tracer, and warn on
+    stderr (the only place a non-traced run surfaces it)."""
+    rec = {"site": site, **fields}
+    with _LOCK:
+        _EVENTS.append(rec)
+    obs_trace.get_tracer().event("degradation", site=site, **fields)
+    detail = " ".join(f"{k}={v}" for k, v in fields.items())
+    print(f"[resilience] degradation at {site}: {detail}",
+          file=sys.stderr, flush=True)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# the degradation chain
+# ---------------------------------------------------------------------------
+
+
+def run_guarded(
+    path: str,
+    *,
+    shape: Tuple[int, int, int, int],
+    dtype: str,
+    padding: str,
+    epilogue: str = "none",
+    requested: str,
+    attempts: Sequence[Tuple[str, Any]],
+    run: Callable[[str, Any], Any],
+    run_reference: Callable[[], Any],
+    reference_name: str = "xla",
+):
+    """Execute ``run(variant, opts)`` down the degradation chain.
+
+    ``attempts`` is the ordered chain of (variant, opts) to try —
+    typically ``[(chosen, chosen_opts), (conservative, DEFAULT_OPTS)]`` —
+    deduplicated here; ``run_reference`` is the terminal fallback that must
+    always succeed (named ``reference_name`` in degradation records: "xla",
+    or "split" on the fused-backward path whose terminal delegates to the
+    per-path ops, themselves guarded down to XLA).  ``requested`` is the
+    caller's *pre-resolution* variant name: when it is ``"auto"``, a failing
+    first attempt quarantines the tuning-cache entry that selected it.
+    """
+    seen = set()
+    chain: List[Tuple[str, Any, Tuple]] = []
+    for v, o in attempts:
+        kk = _fail_key(path, shape, dtype, padding, epilogue, v, o)
+        if kk not in seen:
+            seen.add(kk)
+            chain.append((v, o, kk))
+
+    for i, (v, o, kk) in enumerate(chain):
+        with _LOCK:
+            if kk in _FAILED:
+                continue
+        try:
+            return run(v, o)
+        except guardable_exceptions() as e:
+            err = f"{type(e).__name__}: {e}"
+            with _LOCK:
+                _FAILED[kk] = err
+            nxt = next((cv for cv, _, ck in chain[i + 1:]
+                        if ck not in _FAILED), reference_name)
+            if i == 0 and requested == "auto":
+                _quarantine(path, shape, dtype, padding, epilogue, v, err)
+            record_degradation(
+                "kernel/dispatch", path=path,
+                B=shape[0], H=shape[1], L=shape[2], K=shape[3],
+                dtype=dtype, padding=padding, epilogue=epilogue,
+                from_variant=v, to_variant=nxt, requested=requested,
+                error=err)
+    return run_reference()
+
+
+def _quarantine(path: str, shape, dtype: str, padding: str, epilogue: str,
+                variant: str, error: str) -> None:
+    """Quarantine the cache entry whose decision just failed (no-op when the
+    shape is untuned or a different variant is cached)."""
+    try:
+        import jax
+
+        from repro.tuning import cache as tuning_cache  # deferred: cache imports ops
+
+        key = tuning_cache.ShapeKey(
+            path=path, B=shape[0], H=shape[1], L=shape[2], K=shape[3],
+            dtype=dtype, backend=jax.default_backend(), padding=padding,
+            epilogue=epilogue)
+        if tuning_cache.default_cache().quarantine(key, variant=variant,
+                                                   reason=error):
+            record_degradation("cache/quarantine", key=key.encode(),
+                               variant=variant, error=error)
+    except Exception as e:  # quarantine is best-effort: never mask the fallback
+        print(f"[resilience] quarantine failed for {path}/{shape}: {e}",
+              file=sys.stderr, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# train-loop numerics guard
+# ---------------------------------------------------------------------------
+
+
+class NumericsGuard:
+    """Per-step finite sentinel for the training loop (``train.py --guard``).
+
+    ``check(step, loss=..., grad_norm=...)`` returns True when every value
+    is finite (apply the update, reset the streak).  On a nonfinite value it
+    records a degradation, returns False (skip the update, keep the previous
+    params), and after ``max_consecutive`` consecutive skips raises
+    :class:`NonFiniteOutputError` — the launcher converts that into a
+    nonzero exit so the supervisor's crash-restart path takes over.
+    """
+
+    def __init__(self, max_consecutive: int = 3):
+        if max_consecutive < 1:
+            raise ValueError(f"max_consecutive must be >= 1, got {max_consecutive}")
+        self.max_consecutive = max_consecutive
+        self.consecutive = 0
+        self.total_skipped = 0
+
+    def check(self, step: int, **values) -> bool:
+        vals = {k: float(v) for k, v in values.items()}
+        bad = {k: v for k, v in vals.items() if not math.isfinite(v)}
+        if not bad:
+            self.consecutive = 0
+            return True
+        self.consecutive += 1
+        self.total_skipped += 1
+        record_degradation("train/nonfinite", step=step,
+                           values={k: repr(v) for k, v in bad.items()},
+                           consecutive=self.consecutive,
+                           total_skipped=self.total_skipped)
+        if self.consecutive >= self.max_consecutive:
+            raise NonFiniteOutputError(
+                f"{self.consecutive} consecutive nonfinite train steps "
+                f"(latest step {step}: {bad}); aborting for the supervisor")
+        return False

@@ -1,0 +1,102 @@
+"""Resilience report CLI — what degraded, and what is quarantined.
+
+  PYTHONPATH=src python -m repro.resilience.report \\
+      --trace CHAOS_train.jsonl --cache results/tuning/cache.json \\
+      --out CHAOS_report.json
+
+Collects (1) every ``kind="degradation"`` record from one or more span
+traces (``repro.obs.trace`` JSONL), (2) the quarantined entries of a tuning
+cache (schema v6), and (3) the current process's in-memory ledger when run
+programmatically, into a single JSON artifact.  The chaos CI job uploads it
+next to the degradation-event JSONL so a failed run is diagnosable from
+artifacts alone.  ``--fail-on-quarantine`` exits nonzero when quarantined
+entries exist (for gating a cache artifact before fleet export).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+
+def build_report(trace_paths: List[str], cache_path: Optional[str],
+                 include_process_ledger: bool = False) -> Dict[str, Any]:
+    from repro.obs.trace import read_trace
+
+    degradations: List[Dict[str, Any]] = []
+    for tp in trace_paths:
+        try:
+            records = read_trace(tp)
+        except OSError as e:
+            print(f"[resilience.report] cannot read trace {tp}: {e}",
+                  file=sys.stderr, flush=True)
+            continue
+        for rec in records:
+            if rec.get("kind") == "degradation":
+                degradations.append({"trace": tp, **rec})
+
+    if include_process_ledger:
+        from repro.resilience import guard
+
+        degradations.extend({"trace": "<in-process>", **e}
+                            for e in guard.degradation_events())
+
+    quarantined: List[Dict[str, Any]] = []
+    cache_entries = 0
+    if cache_path:
+        from repro.tuning.cache import TuningCache
+
+        cache = TuningCache(cache_path)
+        for key, entry in cache.items().items():
+            cache_entries += 1
+            if entry.quarantined:
+                quarantined.append({"key": key.encode(),
+                                    "variant": entry.variant,
+                                    "reason": entry.quarantine_reason})
+
+    by_site: Dict[str, int] = {}
+    for d in degradations:
+        by_site[d.get("site", "?")] = by_site.get(d.get("site", "?"), 0) + 1
+    return {
+        "degradations": degradations,
+        "degradations_by_site": dict(sorted(by_site.items())),
+        "quarantined": quarantined,
+        "cache_entries": cache_entries,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", action="append", default=[],
+                    help="span-trace JSONL to scan for degradation records "
+                         "(repeatable)")
+    ap.add_argument("--cache", default="",
+                    help="tuning-cache JSON to scan for quarantined entries")
+    ap.add_argument("--out", default="",
+                    help="write the full report JSON here")
+    ap.add_argument("--fail-on-quarantine", action="store_true",
+                    help="exit 1 when any cache entry is quarantined")
+    args = ap.parse_args(argv)
+
+    rep = build_report(args.trace, args.cache or None)
+    print(f"[resilience.report] {len(rep['degradations'])} degradation "
+          f"event(s) across {len(args.trace)} trace(s); "
+          f"{len(rep['quarantined'])}/{rep['cache_entries']} cache entries "
+          f"quarantined", flush=True)
+    for site, n in rep["degradations_by_site"].items():
+        print(f"  {site}: {n}", flush=True)
+    for q in rep["quarantined"]:
+        print(f"  quarantined: {q['key']} ({q['variant']}): {q['reason']}",
+              flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=1)
+        print(f"[resilience.report] wrote {args.out}", flush=True)
+    if args.fail_on_quarantine and rep["quarantined"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

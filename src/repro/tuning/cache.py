@@ -16,7 +16,18 @@ selected it.  Design points:
     the tuner's writes and auto-dispatch reads (cluster jobs point it at a
     shared artifact; tests point it at a tmpdir);
   * **atomic**: writes go to ``<path>.tmp`` then ``os.replace`` so a crashed
-    tuning run never corrupts the database.
+    tuning run never corrupts the database;
+  * **salvaging**: an unreadable/corrupt database is *preserved* — renamed
+    to ``<path>.corrupt-<pid>`` (with a stderr warning) before the next
+    save rewrites the path, and a readable file with some broken entries
+    keeps every entry that still parses — a torn write or a bad entry can
+    never silently destroy every tuned decision;
+  * **quarantinable** (schema v6): ``variant="auto"`` dispatch that fails to
+    execute a cached decision (see ``repro.resilience.guard``) marks the
+    entry ``quarantined`` instead of deleting it — :func:`lookup` then skips
+    it (dispatch falls back to the defaults) while the tuner still sees it,
+    excludes the broken configuration from the candidate space, and
+    re-tunes the key on the next run.
 
 The cache stores *decisions*, not timings-as-truth: measured microseconds
 are kept for reporting (``benchmarks/paper_autotune.py``) but dispatch only
@@ -28,9 +39,12 @@ import contextlib
 import dataclasses
 import json
 import os
+import sys
 import threading
 from pathlib import Path
 from typing import Dict, Optional
+
+from repro.resilience import faults
 
 try:  # POSIX-only; on platforms without it saves fall back to best-effort
     import fcntl
@@ -49,14 +63,19 @@ from repro.kernels.ops import KernelOptions, bwdk_time_tile
 #     is exactly a v5 key with epilogue='none' and the epilogue-less kernels
 #     are unchanged, so v4 entries migrate verbatim; epilogue problems have
 #     no pre-v5 entries and simply tune fresh.
-CACHE_VERSION = 5
+# v6: entries gained ``quarantined`` / ``quarantine_reason`` — set by the
+#     guarded-dispatch layer when a cached decision fails to execute.  A v5
+#     entry is exactly a v6 entry that has never failed (quarantined=False),
+#     so v5 entries migrate verbatim.
+CACHE_VERSION = 6
 # Older schemas whose entries are still valid per-path decisions and are
 # carried forward on load (and re-written as CACHE_VERSION on next save).
 # v2/v3 entries migrate verbatim *except* bwd decisions that the time-tiling
 # semantics change invalidates (see ``_migration_drops``); v4 entries
-# migrate verbatim as epilogue='none'.  v1 lacked the padding key component
-# and is never migrated.
-MIGRATABLE_VERSIONS = (2, 3, 4)
+# migrate verbatim as epilogue='none'; v5 entries migrate verbatim as
+# not-quarantined.  v1 lacked the padding key component and is never
+# migrated.
+MIGRATABLE_VERSIONS = (2, 3, 4, 5)
 CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
 # Anchored to the source tree (src/repro/tuning/ -> repo root), not the CWD:
 # a tuner run from the repo root and a training job launched from a scratch
@@ -121,6 +140,12 @@ class TuneEntry:
     time_us: float = 0.0          # counter-free steady-state measurement
     analytical_time_us: float = 0.0
     source: str = "measured"      # "measured" | "analytical" | "manual"
+    # Set by guarded dispatch (repro.resilience.guard) when this decision
+    # failed to execute: lookup() skips the entry (auto dispatch falls back
+    # to the defaults) and the tuner re-tunes the key, excluding this exact
+    # configuration from the candidate space.
+    quarantined: bool = False
+    quarantine_reason: str = ""
 
     def options(self, interpret: Optional[bool] = None) -> KernelOptions:
         return KernelOptions(
@@ -175,24 +200,42 @@ class TuningCache:
         self._lock = threading.Lock()
         self._entries: Dict[str, TuneEntry] = {}
         self._loaded = False
+        # True after _read_disk found the file unreadable: save() then
+        # preserves it aside instead of silently overwriting (the only copy
+        # of every tuned decision) — see _preserve_corrupt_locked.
+        self._disk_corrupt = False
+
+    def _warn(self, msg: str) -> None:
+        print(f"[tuning.cache] {msg}", file=sys.stderr, flush=True)
 
     # ------------------------------------------------------------------- I/O
     def _read_disk(self) -> Dict[str, TuneEntry]:
-        """Current on-disk entries (empty on missing/corrupt/stale-version)."""
+        """Current on-disk entries.  Empty on missing/stale-version; on an
+        unreadable file the corrupt flag is set so the next save preserves
+        the bytes aside; individually broken entries are skipped (salvaging
+        the rest) rather than dropping the whole file."""
         if not self.path.exists():
             return {}
         try:
+            faults.fire("cache/read", OSError, f"injected read failure on {self.path}")
             raw = json.loads(self.path.read_text())
-        except (OSError, json.JSONDecodeError):
-            return {}  # unreadable/corrupt: treat as empty, next save rewrites
+        except (OSError, json.JSONDecodeError) as e:
+            self._disk_corrupt = True
+            self._warn(f"{self.path} is unreadable ({type(e).__name__}: {e}); "
+                       f"treating as empty — the file will be preserved as "
+                       f"{self.path.name}.corrupt-<pid> before the next save")
+            return {}
         version = raw.get("version")
         if version != CACHE_VERSION and version not in MIGRATABLE_VERSIONS:
             return {}  # incompatible schema: never mis-apply stale decisions
         out: Dict[str, TuneEntry] = {}
-        for key, ed in raw.get("entries", {}).items():
+        entries = raw.get("entries", {})
+        dropped = 0
+        for key, ed in (entries.items() if isinstance(entries, dict) else ()):
             try:
                 entry = TuneEntry.from_dict(ed)
-            except TypeError:
+            except Exception:  # one broken entry must not poison the rest
+                dropped += 1
                 continue
             if version != CACHE_VERSION:
                 if _migration_drops(key, entry, version):
@@ -200,8 +243,13 @@ class TuningCache:
                 try:  # normalize pre-v5 keys to the epilogue-aware encoding
                     key = ShapeKey.decode(key).encode()
                 except (KeyError, ValueError):
+                    dropped += 1
                     continue
             out[key] = entry
+        if dropped:
+            self._warn(f"salvaged {len(out)} entries from {self.path}; "
+                       f"dropped {dropped} unparseable entr"
+                       f"{'y' if dropped == 1 else 'ies'}")
         return out
 
     def _load_locked(self) -> None:
@@ -233,6 +281,22 @@ class TuningCache:
             finally:
                 fcntl.flock(fh, fcntl.LOCK_UN)
 
+    def _preserve_corrupt_locked(self) -> None:
+        """Rename an unreadable database aside (never destroy the only copy
+        of every tuned decision by overwriting it).  Caller holds the file
+        lock and has just observed corruption via ``_read_disk``."""
+        if not self._disk_corrupt:
+            return
+        self._disk_corrupt = False
+        if not self.path.exists():
+            return
+        side = self.path.with_name(f"{self.path.name}.corrupt-{os.getpid()}")
+        try:
+            os.replace(self.path, side)
+            self._warn(f"preserved corrupt cache as {side}")
+        except OSError as e:  # pragma: no cover - preservation is best-effort
+            self._warn(f"could not preserve corrupt cache {self.path}: {e}")
+
     def save(self) -> None:
         with self._lock:
             self._load_locked()
@@ -243,14 +307,22 @@ class TuningCache:
                 # *colliding* keys (last decision wins), never on disjoint
                 # shapes tuned in parallel.
                 merged = self._read_disk()
+                self._preserve_corrupt_locked()
                 merged.update(self._entries)
                 self._entries = merged
                 payload = {
                     "version": CACHE_VERSION,
                     "entries": {k: e.to_dict() for k, e in sorted(merged.items())},
                 }
+                blob = json.dumps(payload, indent=1)
+                if faults.should_fire("cache/torn-write"):
+                    # Simulated torn write: bypass the tmp+replace protocol
+                    # and leave a truncated file in place, exactly what a
+                    # mid-write host crash on a non-atomic FS produces.
+                    self.path.write_text(blob[: max(1, len(blob) // 2)])
+                    return
                 tmp = self.path.with_suffix(self.path.suffix + ".tmp")
-                tmp.write_text(json.dumps(payload, indent=1))
+                tmp.write_text(blob)
                 os.replace(tmp, self.path)
 
     # ------------------------------------------------------------- accessors
@@ -265,6 +337,25 @@ class TuningCache:
             self._entries[key.encode()] = entry
         if persist:
             self.save()
+
+    def quarantine(self, key: ShapeKey, *, variant: Optional[str] = None,
+                   reason: str = "", persist: bool = True) -> bool:
+        """Mark ``key``'s entry quarantined (a cached decision failed to
+        execute).  ``variant``, when given, must match the entry's variant —
+        a stale failure report must not quarantine a newer, different
+        decision.  Returns True when an entry was newly quarantined."""
+        with self._lock:
+            self._load_locked()
+            e = self._entries.get(key.encode())
+            if e is None or e.quarantined:
+                return False
+            if variant is not None and e.variant != variant:
+                return False
+            self._entries[key.encode()] = dataclasses.replace(
+                e, quarantined=True, quarantine_reason=reason)
+        if persist:
+            self.save()
+        return True
 
     def items(self) -> Dict[ShapeKey, TuneEntry]:
         with self._lock:
@@ -309,7 +400,14 @@ def reset_default_cache() -> None:
 def lookup(path: str, B: int, H: int, L: int, K: int, dtype: str,
            backend: str, padding: str = "same",
            epilogue: str = "none") -> Optional[TuneEntry]:
-    """The single entry point ``kernels/ops.py`` uses for auto dispatch."""
-    return default_cache().get(
+    """The single entry point ``kernels/ops.py`` uses for auto dispatch.
+
+    Quarantined entries are invisible here — a decision that failed to
+    execute must never be re-dispatched — while :meth:`TuningCache.get`
+    still returns them, so the tuner can see (and re-tune) the key."""
+    entry = default_cache().get(
         ShapeKey(path=path, B=B, H=H, L=L, K=K, dtype=dtype, backend=backend,
                  padding=padding, epilogue=epilogue))
+    if entry is not None and entry.quarantined:
+        return None
+    return entry

@@ -24,6 +24,7 @@ entirely from the paper's counter-free measurement apparatus.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -31,6 +32,7 @@ import jax
 from repro.analysis.hw import TPU_V5E, HardwareModel
 from repro.kernels.common import DWConvDims
 from repro.obs import trace as obs_trace
+from repro.resilience import faults, guard
 from repro.tuning import cost, space
 from repro.tuning.cache import ShapeKey, TuneEntry, TuningCache, default_cache
 from repro.tuning.space import Candidate
@@ -126,22 +128,53 @@ def tune_path(
                                   epilogue=epilogue)
     analytical: Dict[Candidate, float] = dict(ranked)
 
+    # A quarantined previous decision (guarded dispatch caught it failing to
+    # execute — see repro.resilience.guard) is banned from this search: its
+    # exact configuration prices as +inf, so re-tuning can never re-elect
+    # the broken config, and the fresh winner overwrites the quarantine.
+    key = _make_key(d, path, dtype, backend, epilogue)
+    the_cache = cache if cache is not None else default_cache()
+    prev = the_cache.get(key)
+    banned: Optional[Candidate] = None
+    if prev is not None and prev.quarantined:
+        banned = space.normalize(
+            Candidate(path=path, variant=prev.variant, block_h=prev.block_h,
+                      block_t=prev.block_t, batch_chunk=prev.batch_chunk), d)
+        guard.record_degradation(
+            "tuner/banned-candidate", key=key.encode(), variant=prev.variant,
+            reason=prev.quarantine_reason)
+
     measured: Dict[Candidate, float] = {}
     tracer = obs_trace.get_tracer()
 
     def meter(c: Candidate) -> float:
         if c not in measured:
+            if banned is not None and c == banned:
+                measured[c] = float("inf")
+                return measured[c]
             with tracer.span("tune/candidate", path=c.path, variant=c.variant,
                              block_h=c.block_h, block_t=c.block_t,
                              batch_chunk=c.batch_chunk) as sp:
-                measured[c] = measure_fn(c, d)
-                sp.tag(measured_s=measured[c],
-                       analytical_s=analytical.get(c))
-                if tracer.enabled:
+                try:
+                    t = measure_fn(c, d)
+                except guard.guardable_exceptions() as e:
+                    # A candidate that cannot execute loses, it does not
+                    # abort the search over every other candidate.
+                    t = float("inf")
+                    guard.record_degradation(
+                        "tuner/measure-failed", path=c.path, variant=c.variant,
+                        block_h=c.block_h, block_t=c.block_t,
+                        batch_chunk=c.batch_chunk,
+                        error=f"{type(e).__name__}: {e}")
+                if faults.should_fire("tuner/slow-candidate") and math.isfinite(t):
+                    t *= 1000.0  # injected straggler: a pathological config
+                measured[c] = t
+                sp.tag(measured_s=t, analytical_s=analytical.get(c))
+                if tracer.enabled and math.isfinite(t):
                     # each candidate's schedule rides along, so the tuning
                     # trace shows modeled bytes / effective bandwidth per try
                     sp.attach("kernel", space._schedule(c, d, itemsize, epilogue),
-                              hw=hw, runtime_s=measured[c])
+                              hw=hw, runtime_s=t)
             if verbose:
                 print(f"  [tune] {c.path}/{c.variant} bh={c.block_h} bt={c.block_t} "
                       f"bc={c.batch_chunk}: {measured[c] * 1e6:.1f}us "
@@ -184,7 +217,6 @@ def tune_path(
         raise ValueError(f"unknown search {search!r}; use 'grid' or 'hillclimb'")
 
     best_c = min(measured, key=measured.get)
-    key = _make_key(d, path, dtype, backend, epilogue)
     entry = TuneEntry(
         variant=best_c.variant,
         block_h=best_c.block_h,
@@ -194,7 +226,9 @@ def tune_path(
         analytical_time_us=analytical.get(best_c, 0.0) * 1e6,
         source="measured",
     )
-    (cache if cache is not None else default_cache()).put(key, entry, persist=persist)
+    # put() writes a fresh (quarantined=False) entry: re-tuning a
+    # quarantined key clears the quarantine with a decision that measured.
+    the_cache.put(key, entry, persist=persist)
     history = [(c, analytical.get(c, 0.0), t) for c, t in measured.items()]
     history.sort(key=lambda h: h[2])
     return TuneResult(

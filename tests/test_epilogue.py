@@ -320,7 +320,7 @@ def test_cache_v4_migrates_epilogue_keys_tune_fresh(tmp_path):
     # a save rewrites at v5 with normalized (6-segment) keys
     c.save()
     raw = json.loads(p.read_text())
-    assert raw["version"] == tcache.CACHE_VERSION == 5
+    assert raw["version"] == tcache.CACHE_VERSION >= 5
     assert all(k.count("/") == 5 for k in raw["entries"])
     assert TuningCache(p).get(key) == entry
 

@@ -1,0 +1,613 @@
+"""Chaos tests: seeded fault plans must produce *graceful* outcomes.
+
+Every test injects a deterministic fault (``repro.resilience.faults``) into a
+production path and asserts the documented degradation — never a crash:
+
+  * kernel lowering failures fall down the dispatch chain to the
+    conservative default and then the XLA reference, bit-for-bit matching a
+    clean run of the surviving variant, with the failure memoized and the
+    tuning-cache decision quarantined;
+  * cache corruption (torn writes, unreadable files, broken entries) is
+    preserved aside and salvaged per-entry, never silently destroyed;
+  * checkpoint write failures retry once; a corrupt latest checkpoint falls
+    back to the previous step on restore;
+  * the supervisor ignores heartbeats older than the child it is watching
+    (the stale-beat kill-loop regression) and still catches a stalled beat;
+  * nonfinite train steps are skipped, and persistent nonfiniteness aborts
+    with the documented exit code and no traceback.
+
+Everything runs in interpret mode on CPU and is deterministic.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.kernels import ops, ref
+from repro.kernels.common import pad_widths
+from repro.launch.supervisor import Heartbeat, Supervisor, SupervisorConfig
+from repro.resilience import (
+    CheckpointIOError,
+    FaultPlan,
+    FaultRule,
+    NonFiniteOutputError,
+    NumericsGuard,
+    SITES,
+    faults,
+    guard,
+)
+from repro.resilience.report import build_report
+from repro.tuning import cache as tcache
+from repro.tuning import tuner
+from repro.kernels.common import DWConvDims
+
+REPO = Path(__file__).resolve().parent.parent
+
+B, H, L, K = 2, 8, 200, 4
+X = jnp.asarray(np.random.default_rng(0).normal(size=(B, H, L)), jnp.float32)
+KW = jnp.asarray(np.random.default_rng(1).normal(size=(H, K)), jnp.float32)
+DY = jnp.asarray(np.random.default_rng(2).normal(size=(B, H, L)), jnp.float32)
+
+
+@pytest.fixture(autouse=True)
+def _clean_resilience_state(tmp_path, monkeypatch):
+    """Every test starts with no fault plan, no memoized failures, and a
+    private tuning-cache file."""
+    monkeypatch.delenv(faults.FAULTS_ENV_VAR, raising=False)
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(tmp_path / "cache.json"))
+    faults.reset()
+    guard.clear()
+    tcache.reset_default_cache()
+    yield
+    faults.reset()
+    guard.clear()
+    tcache.reset_default_cache()
+
+
+def _fwd_key(**over):
+    kw = dict(path="fwd", B=B, H=H, L=L, K=K, dtype="float32",
+              backend=jax.default_backend(), padding="same", epilogue="none")
+    kw.update(over)
+    return tcache.ShapeKey(**kw)
+
+
+# ---------------------------------------------------------------------------
+# fault plan harness
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_grammar_roundtrip():
+    plan = FaultPlan.parse("kernel/lower*2,cache/read@skip=1,ckpt/write")
+    assert plan.rules["kernel/lower"].count == 2
+    assert plan.rules["cache/read"].skip == 1
+    assert plan.rules["ckpt/write"].count == 1
+    # unlimited and probabilistic forms
+    plan2 = FaultPlan.parse("kernel/nan*,heartbeat/stall@p=0.5@seed=7")
+    assert plan2.rules["kernel/nan"].count == -1
+    assert plan2.rules["heartbeat/stall"].p == 0.5
+    # spec() round-trips through parse()
+    for pl in (plan, plan2):
+        assert FaultPlan.parse(pl.spec()).spec() == pl.spec()
+
+
+def test_fault_plan_rejects_typos():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan.parse("kernel/lwoer")
+    with pytest.raises(ValueError, match="bad fault modifier"):
+        FaultPlan.parse("kernel/lower@when=later")
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan([FaultRule("ckpt/write"), FaultRule("ckpt/write")])
+
+
+def test_fault_plan_counting_and_determinism():
+    plan = FaultPlan.parse("kernel/lower*2@skip=1")
+    seq = [plan.should_fire("kernel/lower") for _ in range(5)]
+    assert seq == [False, True, True, False, False]  # skip 1, fire 2, done
+    assert plan.hits("kernel/lower") == 5 and plan.fired("kernel/lower") == 2
+    # seeded probabilistic rules replay identically
+    a = FaultPlan.parse("kernel/nan*@p=0.4@seed=9")
+    b = FaultPlan.parse("kernel/nan*@p=0.4@seed=9")
+    assert ([a.should_fire("kernel/nan") for _ in range(32)]
+            == [b.should_fire("kernel/nan") for _ in range(32)])
+
+
+def test_env_plan_and_context_stacking(monkeypatch):
+    monkeypatch.setenv(faults.FAULTS_ENV_VAR, "ckpt/write*")
+    faults.reset()
+    assert faults.should_fire("ckpt/write")
+    with FaultPlan.parse("cache/read"):  # explicit plan shadows the env plan
+        assert not faults.should_fire("ckpt/write")
+        assert faults.should_fire("cache/read")
+    assert faults.should_fire("ckpt/write")  # env plan restored on exit
+
+
+# ---------------------------------------------------------------------------
+# guarded kernel dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_lowering_failure_degrades_to_default():
+    p_left, _ = pad_widths(K, "same")
+    want = ops._fwd_impl(X, KW, p_left, "row", ops.DEFAULT_OPTS)
+    with FaultPlan.parse("kernel/lower"):
+        got = ops.dwconv_fwd_op(X, KW, "same", "block")
+    # one fault: the requested 'block' fails, the conservative 'row'
+    # default runs — bit-identical to calling it directly
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    (ev,) = [e for e in guard.degradation_events()
+             if e["site"] == "kernel/dispatch"]
+    assert ev["from_variant"] == "block" and ev["to_variant"] == "row"
+
+
+def test_chain_exhaustion_reaches_xla_reference():
+    with FaultPlan.parse("kernel/lower*2"):
+        got = ops.dwconv_fwd_op(X, KW, "same", "block")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.dwconv_fwd_ref(X, KW, "same")),
+        rtol=1e-4, atol=1e-5)
+    chain = [(e["from_variant"], e["to_variant"])
+             for e in guard.degradation_events()
+             if e["site"] == "kernel/dispatch"]
+    assert chain == [("block", "row"), ("row", "xla")]
+
+
+def test_failure_memoized_across_calls():
+    with FaultPlan.parse("kernel/lower"):
+        ops.dwconv_fwd_op(X, KW, "same", "block")
+    assert guard.failed_configs()
+    n_events = len(guard.degradation_events())
+    # no fault now, but 'block' at this config is memoized broken: the
+    # default runs without re-attempting (and without a new degradation)
+    got = ops.dwconv_fwd_op(X, KW, "same", "block")
+    p_left, _ = pad_widths(K, "same")
+    want = ops._fwd_impl(X, KW, p_left, "row", ops.DEFAULT_OPTS)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert len(guard.degradation_events()) == n_events
+
+
+def test_backward_paths_degrade_gracefully():
+    want_dx = ops.dwconv_bwd_input_op(DY, KW, "same", "row")
+    want_dk = ops.dwconv_bwd_kernel_op(X, DY, K, "same", "accum")
+    guard.clear()
+    with FaultPlan.parse("kernel/lower*2"):  # fused bwd fails -> split runs
+        dx, dk = ops.dwconv_bwd_fused_op(X, DY, KW, "same", "fused")
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(want_dx),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(want_dk),
+                               rtol=1e-4, atol=1e-4)
+    sites = [(e.get("path"), e["to_variant"]) for e in
+             guard.degradation_events() if e["site"] == "kernel/dispatch"]
+    assert ("bwd_fused", "split") in sites
+
+
+def test_split_fallback_reconstructs_x_from_residual():
+    """Mid-VJP degradation: only the padded residual xp exists, and the
+    split path must slice the raw input back out of it."""
+    p_left, _ = pad_widths(K, "same")
+    _, xp = ops.dwconv_fwd_op_res(X, KW, "same", "row")
+    assert xp is not None and xp.shape != X.shape
+    xs = ops._residual_input(None, xp, B, H, L, K, "same")
+    assert np.array_equal(np.asarray(xs), np.asarray(X))
+    with FaultPlan.parse("kernel/lower*2"):
+        dx, dk = ops.dwconv_bwd_fused_op(None, DY, KW, "same", "fused", xp=xp)
+    np.testing.assert_allclose(
+        np.asarray(dk), np.asarray(ops.dwconv_bwd_kernel_op(X, DY, K, "same",
+                                                            "accum")),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_grad_through_guarded_vjp_matches_clean_run():
+    from repro.core.dwconv import dwconv
+
+    def loss_op(x, k):
+        return jnp.sum(dwconv(x, k, variant="fused") ** 2)
+
+    g_clean = jax.grad(loss_op, argnums=(0, 1))(X, KW)
+    guard.clear()
+    with FaultPlan.parse("kernel/lower@skip=1"):  # fwd survives, bwd degrades
+        g_chaos = jax.grad(loss_op, argnums=(0, 1))(X, KW)
+    for a, b in zip(g_clean, g_chaos):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    assert any(e["site"] == "kernel/dispatch"
+               for e in guard.degradation_events())
+
+
+def test_degradation_emitted_through_tracer(tmp_path):
+    from repro.obs import trace as obs_trace
+
+    tp = tmp_path / "trace.jsonl"
+    obs_trace.configure(str(tp), meta={"test": "resilience"})
+    try:
+        with FaultPlan.parse("kernel/lower"):
+            ops.dwconv_fwd_op(X, KW, "same", "block")
+        obs_trace.get_tracer().close()
+        recs = [json.loads(line) for line in tp.read_text().splitlines()]
+        degr = [r for r in recs if r.get("kind") == "degradation"]
+        assert degr and degr[0]["site"] == "kernel/dispatch"
+        assert degr[0]["from_variant"] == "block"
+    finally:
+        obs_trace.configure(None)
+
+
+# ---------------------------------------------------------------------------
+# quarantine: broken cached decisions are skipped and re-tuned
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_auto_entry_is_quarantined_on_disk():
+    key = _fwd_key()
+    tcache.default_cache().put(key, tcache.TuneEntry(
+        variant="no-such-kernel", block_h=8, block_t=512, batch_chunk=128))
+    # auto dispatch runs the poisoned decision, which cannot execute;
+    # the guard absorbs it and quarantines the entry
+    got = ops.dwconv_fwd_op(X, KW, "same", "auto")
+    p_left, _ = pad_widths(K, "same")
+    want = ops._fwd_impl(X, KW, p_left, "row", ops.DEFAULT_OPTS)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    tcache.reset_default_cache()  # force a fresh read of the file
+    e = tcache.default_cache().get(key)
+    assert e is not None and e.quarantined and e.quarantine_reason
+    # lookup() (the dispatch entry point) now skips it ...
+    assert tcache.lookup(path="fwd", B=B, H=H, L=L, K=K, dtype="float32",
+                         backend=jax.default_backend()) is None
+    # ... so auto dispatch resolves to the fallback, not the broken entry
+    v, _ = ops.resolve_variant("fwd", "auto", None, B=B, H=H, L=L, K=K,
+                               dtype=jnp.float32, padding="same")
+    assert v == ops.AUTO_FALLBACK["fwd"]
+    assert any(e2["site"] == "cache/quarantine"
+               for e2 in guard.degradation_events())
+
+
+def test_quarantine_requires_matching_variant():
+    key = _fwd_key()
+    c = tcache.default_cache()
+    c.put(key, tcache.TuneEntry(variant="lane", block_h=8, block_t=512,
+                                batch_chunk=128))
+    assert not c.quarantine(key, variant="row", reason="stale report")
+    assert not c.get(key).quarantined
+    assert c.quarantine(key, variant="lane", reason="real failure")
+    assert c.get(key).quarantined
+    assert not c.quarantine(key, variant="lane", reason="again")  # idempotent
+
+
+def test_v5_migration_and_quarantine_roundtrip(tmp_path, monkeypatch):
+    p = tmp_path / "v5.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    key = _fwd_key()
+    p.write_text(json.dumps({"version": 5, "entries": {key.encode(): {
+        "variant": "lane", "block_h": 4, "block_t": 256, "batch_chunk": 64,
+        "time_us": 10.0, "analytical_time_us": 9.0, "source": "measured"}}}))
+    e = tcache.default_cache().get(key)
+    assert e is not None and e.variant == "lane" and not e.quarantined
+    assert tcache.default_cache().quarantine(key, reason="chaos")
+    saved = json.loads(p.read_text())
+    assert saved["version"] == tcache.CACHE_VERSION
+    assert saved["entries"][key.encode()]["quarantined"] is True
+    tcache.reset_default_cache()
+    assert tcache.default_cache().get(key).quarantined
+
+
+def test_retune_clears_quarantine_and_bans_broken_config(tmp_path):
+    d = DWConvDims(B=2, H=4, L=48, K=5)
+    key = tcache.ShapeKey(path="fwd", B=2, H=4, L=48, K=5, dtype="float32",
+                          backend=jax.default_backend(), padding="same")
+    c = tcache.default_cache()
+    c.put(key, tcache.TuneEntry(variant="lane", block_h=4, block_t=128,
+                                batch_chunk=2))
+    assert c.quarantine(key, reason="failed to execute")
+
+    metered = []
+
+    def stub_measure(cand, dd):
+        metered.append(cand)
+        return 1e-6 * (1 + cand.block_h)
+
+    res = tuner.tune_path(d, "fwd", budget=6, measure_fn=stub_measure, cache=c)
+    fresh = c.get(key)
+    assert fresh is not None and not fresh.quarantined  # re-tune overwrote it
+    # the quarantined configuration was never even metered
+    from repro.tuning import space as tspace
+
+    banned = tspace.normalize(tspace.Candidate(
+        path="fwd", variant="lane", block_h=4, block_t=128, batch_chunk=2), d)
+    assert banned not in metered
+    assert res.best.variant in ops.FWD_VARIANTS
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache file corruption
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_cache_file_preserved_not_overwritten(tmp_path, monkeypatch):
+    p = tmp_path / "c.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    p.write_text('{"version": 6, "entries": {"truncated')
+    c = tcache.default_cache()
+    assert len(c) == 0  # unreadable -> treated as empty, with a warning
+    c.put(_fwd_key(), tcache.TuneEntry(variant="row", block_h=8, block_t=512,
+                                       batch_chunk=128))
+    side = list(tmp_path.glob("c.json.corrupt-*"))
+    assert len(side) == 1, "corrupt bytes were not preserved aside"
+    assert side[0].read_text().startswith('{"version": 6')
+    assert json.loads(p.read_text())["version"] == tcache.CACHE_VERSION
+
+
+def test_broken_entries_salvaged_individually(tmp_path, monkeypatch, capsys):
+    p = tmp_path / "c.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    good = _fwd_key()
+    p.write_text(json.dumps({"version": tcache.CACHE_VERSION, "entries": {
+        good.encode(): {"variant": "row", "block_h": 8, "block_t": 512,
+                        "batch_chunk": 128},
+        "fwd/B1-H1-L1-K1/same/float32/cpu/none": {"nonsense": True},
+    }}))
+    c = tcache.default_cache()
+    assert c.get(good) is not None  # the parseable entry survived
+    assert len(c) == 1
+    assert "salvaged" in capsys.readouterr().err
+
+
+def test_torn_write_survives_next_load(tmp_path, monkeypatch):
+    p = tmp_path / "c.json"
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    key = _fwd_key()
+    with FaultPlan.parse("cache/torn-write"):
+        tcache.default_cache().put(key, tcache.TuneEntry(
+            variant="row", block_h=8, block_t=512, batch_chunk=128))
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(p.read_text())  # the file really is torn
+    tcache.reset_default_cache()  # new process arrives at the torn file
+    c = tcache.default_cache()
+    assert c.get(key) is None  # torn DB reads as empty, never crashes
+    c.put(key, tcache.TuneEntry(variant="lane", block_h=8, block_t=512,
+                                batch_chunk=128))
+    assert list(tmp_path.glob("c.json.corrupt-*"))  # torn bytes preserved
+    tcache.reset_default_cache()
+    assert tcache.default_cache().get(key).variant == "lane"  # DB healthy
+
+
+def test_cache_read_fault_degrades_to_empty_without_data_loss():
+    key = _fwd_key()
+    tcache.default_cache().put(key, tcache.TuneEntry(
+        variant="row", block_h=8, block_t=512, batch_chunk=128))
+    tcache.reset_default_cache()
+    with FaultPlan.parse("cache/read"):
+        # injected I/O failure: the DB reads as empty (dispatch falls back
+        # to defaults) instead of crashing the process
+        assert tcache.default_cache().get(key) is None
+    tcache.reset_default_cache()
+    assert tcache.default_cache().get(key).variant == "row"  # data intact
+
+
+# ---------------------------------------------------------------------------
+# tuner under chaos
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_survives_measure_failures():
+    d = DWConvDims(B=2, H=4, L=48, K=5)
+
+    def flaky_measure(cand, dd):
+        if cand.variant == "lane":
+            raise faults.KernelLoweringError("lane always explodes today")
+        return 1e-6 * cand.block_h
+
+    res = tuner.tune_path(d, "fwd", budget=8, measure_fn=flaky_measure,
+                          persist=False)
+    assert res.best.variant != "lane"
+    assert np.isfinite(res.best.time_us)
+    assert any(e["site"] == "tuner/measure-failed"
+               for e in guard.degradation_events())
+
+
+def test_tuner_slow_candidate_fault_changes_loser():
+    d = DWConvDims(B=2, H=4, L=48, K=5)
+
+    def stub(cand, dd):
+        return 1e-6
+
+    with FaultPlan.parse("tuner/slow-candidate"):
+        res = tuner.tune_path(d, "fwd", budget=4, measure_fn=stub,
+                              persist=False)
+    # the first metered candidate (the fallback baseline) was inflated
+    # 1000x, so the winner is one of the others at the uninflated time
+    assert res.best.time_us == pytest.approx(1.0)
+    times = sorted(t for _, _, t in res.history)
+    assert times[-1] == pytest.approx(1e-3)  # the straggler is in history
+
+
+# ---------------------------------------------------------------------------
+# numerics guard
+# ---------------------------------------------------------------------------
+
+
+def test_numerics_guard_skip_recover_abort():
+    g = NumericsGuard(max_consecutive=3)
+    assert g.check(0, loss=1.0, grad_norm=2.0)
+    assert not g.check(1, loss=float("nan"), grad_norm=1.0)
+    assert not g.check(2, loss=float("inf"), grad_norm=1.0)
+    assert g.check(3, loss=0.9, grad_norm=1.0)  # recovery resets the streak
+    assert g.consecutive == 0 and g.total_skipped == 2
+    assert not g.check(4, loss=float("nan"), grad_norm=1.0)
+    assert not g.check(5, loss=float("nan"), grad_norm=1.0)
+    with pytest.raises(NonFiniteOutputError):
+        g.check(6, loss=float("nan"), grad_norm=1.0)
+    assert sum(1 for e in guard.degradation_events()
+               if e["site"] == "train/nonfinite") == 5
+    with pytest.raises(ValueError):
+        NumericsGuard(max_consecutive=0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint chaos
+# ---------------------------------------------------------------------------
+
+
+def _params():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+
+
+def test_checkpoint_write_fault_retries_once(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    with FaultPlan.parse("ckpt/write"):
+        m.save(1, params=_params())
+    assert m.all_steps() == [1]
+    assert any(e["site"] == "ckpt/write" and e["action"] == "retry once"
+               for e in guard.degradation_events())
+    with FaultPlan.parse("ckpt/write*2"):  # both attempts fail -> surfaces
+        with pytest.raises(CheckpointIOError):
+            m.save(2, params=_params())
+
+
+def test_checkpoint_restore_falls_back_past_corruption(tmp_path):
+    m = CheckpointManager(tmp_path, keep=5)
+    m.save(1, params=_params())
+    m.save(2, params={"w": _params()["w"] * 2})
+    npz = Path(tmp_path) / "step_0000000002" / "params.npz"
+    npz.write_bytes(npz.read_bytes()[:16])  # torn payload
+    step, params, _, _ = m.restore(params_template=_params())
+    assert step == 1
+    np.testing.assert_array_equal(params["w"], _params()["w"])
+    assert any(e["site"] == "ckpt/restore" for e in guard.degradation_events())
+    with pytest.raises(CheckpointIOError):  # explicit intent still raises
+        m.restore(2, params_template=_params())
+
+
+def test_checkpoint_restore_missing_payload_detected(tmp_path):
+    m = CheckpointManager(tmp_path, keep=5)
+    m.save(1, params=_params())
+    m.save(2, params=_params())
+    (Path(tmp_path) / "step_0000000002" / "params.npz").unlink()
+    step, _, _, _ = m.restore(params_template=_params())
+    assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# supervisor chaos
+# ---------------------------------------------------------------------------
+
+
+def test_stale_heartbeat_does_not_kill_fresh_child(tmp_path):
+    """Regression: a hung child's final heartbeat used to out-live it and
+    SIGKILL every restarted child before its first beat."""
+    hb_path = tmp_path / "hb.json"
+    hb_path.write_text(json.dumps(
+        {"step": 7, "t": time.time() - 1000, "step_time_s": 1.0}))
+    cfg = SupervisorConfig(
+        cmd=[sys.executable, "-c", "import time; time.sleep(6)"],
+        heartbeat_path=str(hb_path), max_restarts=0,
+        heartbeat_timeout_s=30.0)
+    sup = Supervisor(cfg)
+    assert sup.run() == 0, "fresh child was killed off a stale heartbeat"
+
+
+def test_silent_child_killed_from_launch_clock(tmp_path):
+    """A child that never beats is judged from its *launch* time — the
+    heartbeat/stall fault makes beats silently vanish."""
+    hb_path = tmp_path / "hb.json"
+    child = ("import time\n"
+             "from repro.launch.supervisor import Heartbeat\n"
+             f"hb = Heartbeat({str(hb_path)!r})\n"
+             "for i in range(600):\n"
+             "    hb.beat(i)\n"
+             "    time.sleep(0.1)\n")
+    cfg = SupervisorConfig(
+        cmd=[sys.executable, "-c", child], heartbeat_path=str(hb_path),
+        max_restarts=0, heartbeat_timeout_s=1.0)
+    sup = Supervisor(cfg)
+    rc = sup.run(extra_env={"PYTHONPATH": str(REPO / "src"),
+                            "REPRO_FAULTS": "heartbeat/stall*"})
+    assert rc != 0
+    assert not hb_path.exists(), "stalled beat still reached the disk"
+    assert any("stale" in e for e in sup.events)
+
+
+def test_heartbeat_stall_fault_unit(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"))
+    with FaultPlan.parse("heartbeat/stall"):
+        hb.beat(0)
+    assert not (tmp_path / "hb.json").exists()
+    hb.beat(1)  # fault exhausted: the next beat lands
+    assert Heartbeat.read(str(tmp_path / "hb.json"))["step"] == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the training launcher under injected faults (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _run_train(tmp_path, fault_spec, *extra):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+               REPRO_FAULTS=fault_spec,
+               REPRO_TUNE_CACHE=str(tmp_path / "cache.json"))
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", "mamba2-1.3b",
+           "--smoke", "--steps", "3", "--batch", "2", "--seq", "32",
+           "--log-every", "1", "--guard", "--conv-variant", "row", *extra]
+    return subprocess.run(cmd, env=env, cwd=tmp_path, capture_output=True,
+                          text=True, timeout=600)
+
+
+def test_train_survives_lowering_faults(tmp_path):
+    r = _run_train(tmp_path, "kernel/lower", "--trace",
+                   str(tmp_path / "t.jsonl"))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "Traceback" not in r.stderr
+    recs = [json.loads(line)
+            for line in (tmp_path / "t.jsonl").read_text().splitlines()]
+    assert any(rec.get("kind") == "degradation" and
+               rec.get("site") == "kernel/dispatch" for rec in recs), \
+        "degradation not recorded in the trace"
+    rep = build_report([str(tmp_path / "t.jsonl")], None)
+    assert rep["degradations_by_site"].get("kernel/dispatch", 0) >= 1
+
+
+def test_train_nan_aborts_gracefully(tmp_path):
+    from repro.launch.train import GUARD_ABORT_EXIT
+
+    r = _run_train(tmp_path, "kernel/nan*1000")
+    assert r.returncode == GUARD_ABORT_EXIT, (r.returncode, r.stderr[-2000:])
+    assert "Traceback" not in r.stderr, r.stderr[-2000:]
+    assert "numerics guard abort" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def test_report_collects_traces_and_quarantine(tmp_path):
+    tp = tmp_path / "t.jsonl"
+    tp.write_text(
+        json.dumps({"kind": "degradation", "site": "kernel/dispatch"}) + "\n"
+        + json.dumps({"kind": "span", "name": "train/step"}) + "\n"
+        + json.dumps({"kind": "degradation", "site": "ckpt/write"}) + "\n")
+    c = tcache.default_cache()
+    c.put(_fwd_key(), tcache.TuneEntry(variant="lane", block_h=8, block_t=512,
+                                       batch_chunk=128))
+    c.quarantine(_fwd_key(), reason="chaos")
+    rep = build_report([str(tp)], str(c.path))
+    assert rep["degradations_by_site"] == {"ckpt/write": 1,
+                                           "kernel/dispatch": 1}
+    assert len(rep["quarantined"]) == 1
+    assert rep["quarantined"][0]["reason"] == "chaos"
+
+
+def test_all_sites_documented():
+    # the README fault-site table and SITES must cover the same names
+    readme = (REPO / "README.md").read_text()
+    for site in SITES:
+        assert f"`{site}`" in readme, f"fault site {site} missing from README"
