@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro import perfmodel
 from repro.analysis.hw import P100, TPU_V5E, HardwareModel
@@ -116,7 +116,8 @@ def study_schedules(
 
 
 def _schedule_record(study: str, s: perfmodel.KernelSchedule,
-                     hw: HardwareModel) -> Dict[str, Any]:
+                     hw: HardwareModel,
+                     verified: Optional[str] = None) -> Dict[str, Any]:
     """One execution-path decomposition row: the derived traffic plus the
     per-operand breakdown straight out of the spec."""
     est = perfmodel.derive_traffic(s)
@@ -125,6 +126,7 @@ def _schedule_record(study: str, s: perfmodel.KernelSchedule,
         "path": s.path,
         "variant": s.variant,
         "epilogue": s.epilogue,
+        "schedule_verified": verified,
         "grid": {name: extent for name, extent in s.grid},
         "flops": est.flops,
         "bytes_read": est.bytes_read,
@@ -181,12 +183,15 @@ def counter_free_report(
     include_epilogue: bool = True,
     calibration=None,
     measured: Optional[Dict[str, Any]] = None,
+    verify: bool = True,
 ) -> Dict[str, Any]:
     """The paper's full counter-free analysis as one JSON-able payload.
 
     Sections:
       * ``decomposition`` — execution-path traffic decomposition per
-        (variant x path), with the per-operand byte breakdown;
+        (variant x path), with the per-operand byte breakdown and the
+        static ``schedule_verified`` badge (``verify=False`` skips the
+        model↔kernel cross-check);
       * ``roofline``      — roofline placement per (variant x path), with
         effective bandwidth at the modeled bound vs the ``hw`` peaks;
       * ``paper``         — the P100 paper-mode rows against the published
@@ -201,6 +206,22 @@ def counter_free_report(
     """
     kw = dict(block_h=block_h, block_t=block_t, batch_chunk=batch_chunk)
     schedules = study_schedules(d, itemsize, **kw)
+    # Per-kernel static verification badge: each unique (path, variant) is
+    # cross-checked against its abstractly traced pallas_call at these exact
+    # dims/knobs (repro.verify.schedule_check — no execution).  "model-only"
+    # marks variants with no Pallas kernel (xla, split, paper_*).
+    verified_map: Dict[Tuple[str, str], str] = {}
+    if verify:
+        from repro.verify.schedule_check import verify_config
+
+        vdtype = {2: "bfloat16", 4: "float32"}.get(itemsize, "float32")
+        for _, s in schedules:
+            key = (s.path, s.variant)
+            if key in verified_map:
+                continue
+            status, fs = verify_config(s.path, s.variant, d,
+                                       itemsize=itemsize, dtype=vdtype, **kw)
+            verified_map[key] = (f"findings:{len(fs)}" if fs else status)
     payload: Dict[str, Any] = {
         "dims": {"B": d.B, "H": d.H, "L": d.L, "K": d.K, "padding": d.padding},
         "hw": hw.name,
@@ -209,8 +230,10 @@ def counter_free_report(
         "hbm_peak_bytes_per_s": hw.hbm_bw,
         "peak_flops_f32": hw.peak_flops_f32,
         "roofline_knee_flop_per_byte": hw.peak_flops_f32 / hw.hbm_bw,
-        "decomposition": [_schedule_record(study, s, hw)
-                          for study, s in schedules],
+        "decomposition": [
+            _schedule_record(study, s, hw,
+                             verified_map.get((s.path, s.variant)))
+            for study, s in schedules],
         # Effective bandwidth against the DMA-inclusive stage-1 analytical
         # time (the tuner's ranking quantity): still fully derived, and it
         # separates the per-tap-DMA variants from the staged ones instead
@@ -297,13 +320,19 @@ def counter_free_markdown(payload: Dict[str, Any]) -> str:
         "schedules (`repro.perfmodel`) — no hardware counters, no",
         "measurement.  Unreliable rows (the naive baseline's cache-dependent",
         "redundancy) report `N/A`, exactly like the paper's Table III.",
+        "The `verified` column is the static model↔kernel cross-check",
+        "(`repro.verify.schedule_check`): `verified` means the schedule was",
+        "proven against the kernel's abstractly traced launch geometry at",
+        "these dims; `model-only` marks variants with no Pallas kernel.",
         "",
         "## Execution-path decomposition (modeled bytes)",
         "",
         markdown_table(
-            ["study", "path", "kernel", "FLOPs", "read", "written",
-             "moved", "DMAs", "AI (FLOP/B)", "VMEM/cell"],
-            [[r["study"], r["path"], r["variant"], fmt_si(r["flops"]),
+            ["study", "path", "kernel", "verified", "FLOPs", "read",
+             "written", "moved", "DMAs", "AI (FLOP/B)", "VMEM/cell"],
+            [[r["study"], r["path"], r["variant"],
+              r.get("schedule_verified") or "—",
+              fmt_si(r["flops"]),
               fmt_si(r["bytes_read"], "B"), fmt_si(r["bytes_written"], "B"),
               fmt_si(r["bytes_moved"], "B"), fmt_si(r["transactions"]),
               _fmt_ai(r["arithmetic_intensity"]),

@@ -29,7 +29,10 @@ def _fwd_acc(x: jnp.ndarray, k: jnp.ndarray, padding: Padding) -> jnp.ndarray:
     (shared by the plain reference and the fused-epilogue reference)."""
     B, H, L = x.shape
     Hk, K = k.shape
-    assert Hk == H, (Hk, H)
+    if Hk != H:
+        raise ValueError(
+            f"filter bank has Hk={Hk} channels but the input has H={H}; "
+            f"depthwise conv needs one (K,) filter per input channel")
     xp = _padded(x, K, padding)
     # Unrolled tap sum: K static slices, each fused by XLA into a single
     # elementwise loop; lowers without gathers and shards over (B, H).

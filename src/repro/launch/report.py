@@ -179,6 +179,10 @@ def main(argv=None) -> int:
     ap.add_argument("--no-measure", dest="measure", action="store_false",
                     default=True,
                     help="skip the per-kernel modeled-vs-measured section")
+    ap.add_argument("--no-verify", dest="verify", action="store_false",
+                    default=True,
+                    help="skip the static schedule↔kernel cross-check "
+                         "('verified' column in the decomposition table)")
     ap.add_argument("--measure-shape", default="8x32x48x48",
                     help="BxHxLxK the error-bar kernels are metered at "
                          "(small: interpret mode runs kernel bodies in Python)")
@@ -211,6 +215,7 @@ def main(argv=None) -> int:
             include_epilogue=not args.no_epilogue,
             calibration=calibration,
             measured=measured,
+            verify=args.verify,
         )
         payloads.append(payload)
         chunks.append(counter_free_markdown(payload))

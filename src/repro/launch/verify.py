@@ -1,0 +1,111 @@
+"""Static schedule verification sweep: ``python -m repro.launch.verify``.
+
+Cross-checks every registered (path × variant × epilogue) schedule against
+the kernels' actual launch geometry (abstractly traced — no accelerator, no
+execution; see ``repro.verify.schedule_check``) over a shape grid covering
+the paper study shape, a long-sequence tiled regime, ragged extents that
+divide nothing cleanly, a causal decoder conv, and an uneven time tiling,
+each under two knob settings (the defaults and a small-tile/chunked setting
+that activates the time-tiled and batch-chunked kernels).
+
+Exit status follows ``--fail-on``; ``--json`` writes the findings report
+(the CI ``static-analysis`` job uploads it as VERIFY.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import EPILOGUE_KEYS
+from repro.perfmodel.schedules import SCHEDULE_BUILDERS
+from repro.verify.findings import (Finding, findings_payload, max_severity,
+                                   should_fail)
+from repro.verify.schedule_check import verify_config
+
+# Shape grid: name -> dims.  L=600 forces nT*Lt > Lout (uneven time tiles).
+SHAPE_GRID: Tuple[Tuple[str, DWConvDims], ...] = (
+    ("paper", DWConvDims(B=64, H=128, L=48, K=48)),
+    ("longseq", DWConvDims(B=8, H=64, L=16384, K=4)),
+    ("ragged", DWConvDims(B=4, H=24, L=100, K=5)),
+    ("uneven-tile", DWConvDims(B=2, H=16, L=600, K=7)),
+    ("causal", DWConvDims(B=8, H=32, L=256, K=4, padding="causal")),
+)
+
+KNOB_GRID: Tuple[Dict[str, int], ...] = (
+    dict(block_h=8, block_t=512, batch_chunk=128),
+    dict(block_h=8, block_t=128, batch_chunk=4),
+)
+
+
+def sweep_registry(
+    shapes: Sequence[Tuple[str, DWConvDims]] = SHAPE_GRID,
+    knob_grid: Sequence[Dict[str, int]] = KNOB_GRID,
+) -> Tuple[List[Dict], List[Finding]]:
+    """Run the full registry sweep.  Returns (per-config rows, findings)."""
+    rows: List[Dict] = []
+    findings: List[Finding] = []
+    for shape_name, d in shapes:
+        for knobs in knob_grid:
+            for path, variant in sorted(SCHEDULE_BUILDERS):
+                epilogues = (EPILOGUE_KEYS if path in ("fwd", "bwd_fused")
+                             else ("none",))
+                for epi in epilogues:
+                    status, fs = verify_config(path, variant, d,
+                                               epilogue=epi, **knobs)
+                    rows.append({
+                        "shape": shape_name,
+                        "dims": f"{d.B}x{d.H}x{d.L}x{d.K}/{d.padding}",
+                        "knobs": dict(knobs),
+                        "path": path, "variant": variant, "epilogue": epi,
+                        "status": status, "findings": len(fs),
+                    })
+                    findings.extend(fs)
+    return rows, findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.verify",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the findings report as JSON (VERIFY.json)")
+    ap.add_argument("--fail-on", choices=("error", "warning", "never"),
+                    default="error",
+                    help="exit 1 when findings at/above this level exist")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    rows, findings = sweep_registry()
+    dt = time.perf_counter() - t0
+
+    by_status: Dict[str, int] = {}
+    for r in rows:
+        by_status[r["status"]] = by_status.get(r["status"], 0) + 1
+    for f in findings:
+        print(f.render())
+    checked = by_status.get("verified", 0) + by_status.get("failed", 0)
+    print(f"[verify] {len(rows)} configs in {dt:.1f}s — "
+          + ", ".join(f"{k}={v}" for k, v in sorted(by_status.items()))
+          + f" ({checked} cross-checked against a traced pallas_call)",
+          file=sys.stderr)
+
+    if args.json:
+        payload = {
+            "tool": "repro.launch.verify",
+            "status_counts": by_status,
+            "configs": rows,
+            "findings": findings_payload(findings),
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=1))
+        print(f"[verify] wrote {args.json}", file=sys.stderr)
+    return 1 if should_fail(findings, args.fail_on) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,7 +51,8 @@ try:  # POSIX-only; on platforms without it saves fall back to best-effort
 except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None
 
-from repro.kernels.ops import KernelOptions, bwdk_time_tile
+from repro.kernels.ops import KernelOptions
+from repro.perfmodel.geometry import bwdk_time_tile
 
 # v3: the 'bwd_fused' execution path joined the key space.
 # v4: block_t became a *live execution knob* for the staged bwd_k/bwd_fused

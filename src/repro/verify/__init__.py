@@ -1,0 +1,15 @@
+"""Static verification: schedule↔kernel cross-checker + repo lint.
+
+Extends the paper's counter-free methodology one level down — the analytical
+``KernelSchedule``s are proven against the kernels' actual launch geometry
+(grids, BlockSpecs, index maps, accumulators, VMEM) by abstract tracing, so
+model↔kernel agreement is a reviewed invariant rather than a runtime hope.
+
+  * ``repro.verify.schedule_check.verify_config`` — one configuration
+  * ``python -m repro.launch.verify`` — registry × shape-grid sweep
+  * ``python -m repro.verify.lint`` — AST repo lint (REP001-REP005)
+"""
+from repro.verify.findings import (Finding, findings_payload, max_severity,
+                                   should_fail)
+
+__all__ = ["Finding", "findings_payload", "max_severity", "should_fail"]

@@ -1,0 +1,50 @@
+"""Finding records shared by the schedule verifier and the repo lint.
+
+A finding is one violated invariant, identified by a stable rule code:
+
+  * ``VERxxx`` — schedule↔kernel cross-check findings (see ``schedule_check``)
+  * ``REPxxx`` — repo lint findings (see ``lint``)
+
+Both tools emit the same record so the CLI / CI layer can merge, rank and
+serialize them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+SEVERITIES = ("error", "warning", "note")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str            # "VER103", "REP001", ...
+    severity: str        # "error" | "warning" | "note"
+    where: str           # "fwd/row epilogue=none shape=..." or "path.py:32"
+    message: str         # human sentence naming the violated invariant
+
+    def to_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return f"{self.where}: {self.code} [{self.severity}] {self.message}"
+
+
+def max_severity(findings: Sequence[Finding]) -> Optional[str]:
+    """Most severe level present, or None for an empty list."""
+    present = [SEVERITIES.index(f.severity) for f in findings]
+    return SEVERITIES[min(present)] if present else None
+
+
+def should_fail(findings: Sequence[Finding], fail_on: str) -> bool:
+    """True when ``findings`` crosses the ``--fail-on`` threshold."""
+    if fail_on == "never":
+        return False
+    if fail_on not in SEVERITIES:
+        raise ValueError(f"fail_on must be one of {SEVERITIES + ('never',)}, got {fail_on!r}")
+    worst = max_severity(findings)
+    return worst is not None and SEVERITIES.index(worst) <= SEVERITIES.index(fail_on)
+
+
+def findings_payload(findings: Sequence[Finding]) -> List[Dict[str, str]]:
+    return [f.to_dict() for f in findings]

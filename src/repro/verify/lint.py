@@ -1,0 +1,296 @@
+"""AST repo lint: the repo's hard-won invariants as named, suppressible rules.
+
+Usage::
+
+    python -m repro.verify.lint [paths...] [--json OUT] [--fail-on LEVEL]
+
+Rules (see README "Static verification" for the rationale table):
+
+  REP001  bare ``assert`` in kernel/ops code — must be a ValueError naming
+          the offending dims, so the check survives ``python -O``
+  REP002  ``time.perf_counter``/``time.time`` timing JAX work with no
+          ``block_until_ready`` sync in the same function (the async
+          dispatch hazard; the paper's CUDA-event discipline)
+  REP003  a ``pl.pallas_call`` wrapper with no registered schedule builder —
+          every kernel must be analytically modeled before it is tuned
+  REP004  geometry helpers imported from their pre-PR-5 homes
+          (``repro.kernels.ops``) instead of ``repro.perfmodel.geometry``
+  REP005  tuning-cache state mutated outside ``repro.tuning`` — all cache
+          writes must go through the versioned-schema API
+
+Suppress a finding with a line comment ``# repro: noqa(REP002)`` (several
+codes comma-separated); undocumented blanket suppression is not supported
+on purpose.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.verify.findings import (Finding, findings_payload, max_severity,
+                                   should_fail)
+
+# Kernel wrapper -> the registered (path, variant) keys it implements.
+# REP003 checks both directions: every pallas_call wrapper is listed here,
+# and every listed key exists in the schedule registry.
+KNOWN_KERNEL_SCHEDULES: Dict[str, Tuple[Tuple[str, str], ...]] = {
+    "dwconv_fwd_row": (("fwd", "row"), ("bwd_in", "row")),
+    "dwconv_fwd_block": (("fwd", "block"), ("bwd_in", "block")),
+    "_dwconv_fwd_tapdma": (("fwd", "naive"), ("fwd", "lane"),
+                           ("bwd_in", "naive"), ("bwd_in", "lane")),
+    "dwconv_bwdk_accum": (("bwd_k", "accum"),),
+    "dwconv_bwdk_twostage": (("bwd_k", "twostage"),),
+    "dwconv_bwdk_naive": (("bwd_k", "naive"),),
+    "dwconv_bwd_fused_accum": (("bwd_fused", "fused"),),
+    "dwconv_bwd_fused_partials": (("bwd_fused", "fused_partials"),),
+    "dwconv_bwd_fused_accum_act": (("bwd_fused", "fused"),),
+    "dwconv_bwd_fused_partials_act": (("bwd_fused", "fused_partials"),),
+}
+
+# Helpers that moved to perfmodel.geometry in PR 5; importing them from the
+# kernel layer reintroduces the drift the refactor removed.
+GEOMETRY_NAMES = {
+    "bwdk_time_tile", "unified_wpad", "bwd_fused_wpad", "epilogue_time_tile",
+    "time_tile", "effective_tiles", "fwd_tile_grid", "bwd_time_tiles",
+    "dtype_itemsize",
+}
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\(([^)]*)\)")
+
+
+def _noqa_codes(lines: Sequence[str], lineno: int) -> Set[str]:
+    if 1 <= lineno <= len(lines):
+        m = _NOQA_RE.search(lines[lineno - 1])
+        if m:
+            return {c.strip() for c in m.group(1).split(",") if c.strip()}
+    return set()
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _attrs_in(node: ast.AST) -> Set[str]:
+    return {n.attr for n in ast.walk(node) if isinstance(n, ast.Attribute)}
+
+
+def _call_name(call: ast.Call) -> str:
+    """Dotted name of a call target: 'time.perf_counter', 'pl.pallas_call'."""
+    parts: List[str] = []
+    node = call.func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _schedule_registry_keys() -> Optional[Set[Tuple[str, str]]]:
+    try:
+        from repro.perfmodel.schedules import SCHEDULE_BUILDERS
+        return set(SCHEDULE_BUILDERS)
+    except Exception:  # noqa: BLE001 - lint stays usable without the package
+        return None
+
+
+class _FileLint:
+    def __init__(self, path: Path, rel: str, tree: ast.Module,
+                 lines: Sequence[str]):
+        self.path = path
+        self.rel = rel
+        self.tree = tree
+        self.lines = lines
+        self.findings: List[Finding] = []
+
+    def emit(self, code: str, lineno: int, message: str,
+             severity: str = "error") -> None:
+        if code in _noqa_codes(self.lines, lineno):
+            return
+        self.findings.append(Finding(code=code, severity=severity,
+                                     where=f"{self.rel}:{lineno}",
+                                     message=message))
+
+    # -- REP001 -------------------------------------------------------------
+    def check_asserts(self) -> None:
+        if not ("/kernels/" in self.rel or "/core/" in self.rel):
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assert):
+                self.emit("REP001", node.lineno,
+                          "bare assert in kernel/ops code — raise ValueError "
+                          "naming the dims so the check survives python -O")
+
+    # -- REP002 -------------------------------------------------------------
+    def check_timing(self) -> None:
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            timing_lines = [
+                c.lineno for c in ast.walk(fn)
+                if isinstance(c, ast.Call)
+                and _call_name(c) in ("time.perf_counter", "time.time",
+                                      "perf_counter")
+            ]
+            if not timing_lines:
+                continue
+            names = _names_in(fn)
+            if not ({"jax", "jnp"} & names):
+                continue
+            if "block_until_ready" in _attrs_in(fn):
+                continue
+            self.emit("REP002", min(timing_lines),
+                      f"'{fn.name}' wraps JAX work in a wall-clock timer with "
+                      f"no block_until_ready sync — async dispatch makes the "
+                      f"reading meaningless")
+
+    # -- REP003 -------------------------------------------------------------
+    def check_kernel_registration(
+            self, registry: Optional[Set[Tuple[str, str]]]) -> None:
+        if "/kernels/" not in self.rel:
+            return
+        for fn in self.tree.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            calls = [c for c in ast.walk(fn) if isinstance(c, ast.Call)
+                     and _call_name(c) == "pl.pallas_call"]
+            if not calls:
+                continue
+            keys = KNOWN_KERNEL_SCHEDULES.get(fn.name)
+            if keys is None:
+                self.emit("REP003", fn.lineno,
+                          f"pallas_call wrapper '{fn.name}' has no registered "
+                          f"schedule builder — add a KernelSchedule in "
+                          f"perfmodel/schedules.py and map it in "
+                          f"verify.lint.KNOWN_KERNEL_SCHEDULES")
+            elif registry is not None:
+                missing = [k for k in keys if k not in registry]
+                if missing:
+                    self.emit("REP003", fn.lineno,
+                              f"'{fn.name}' maps to unregistered schedule "
+                              f"key(s) {missing}")
+
+    # -- REP004 -------------------------------------------------------------
+    def check_geometry_imports(self) -> None:
+        if "/kernels/ops.py" in self.rel or "/perfmodel/" in self.rel:
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and node.module.endswith("kernels.ops"):
+                bad = sorted(a.name for a in node.names
+                             if a.name in GEOMETRY_NAMES)
+                if bad:
+                    self.emit("REP004", node.lineno,
+                              f"geometry helper(s) {bad} imported from "
+                              f"repro.kernels.ops — the post-PR-5 home is "
+                              f"repro.perfmodel.geometry")
+            if isinstance(node, ast.Attribute) and node.attr in GEOMETRY_NAMES \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in ("ops", "_ops", "kernel_ops"):
+                self.emit("REP004", node.lineno,
+                          f"geometry helper '{node.attr}' reached through the "
+                          f"kernel ops module — use repro.perfmodel.geometry")
+
+    # -- REP005 -------------------------------------------------------------
+    def check_cache_schema(self) -> None:
+        if "/tuning/" in self.rel:
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and t.attr == "_entries":
+                        self.emit("REP005", node.lineno,
+                                  "direct write to a TuningCache._entries — "
+                                  "use the versioned put()/quarantine() API")
+            if isinstance(node, ast.Call):
+                cname = _call_name(node)
+                if cname.endswith("replace") and any(
+                        kw.arg == "quarantined" for kw in node.keywords):
+                    self.emit("REP005", node.lineno,
+                              "entry quarantine flag rewritten outside "
+                              "repro.tuning — use TuningCache.quarantine()")
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            calls = {_call_name(c) for c in ast.walk(fn)
+                     if isinstance(c, ast.Call)}
+            if ("resolve_cache_path" in {c.split(".")[-1] for c in calls}
+                    and {"json.dump", "json.dumps"} & calls):
+                self.emit("REP005", fn.lineno,
+                          f"'{fn.name}' serializes JSON to the resolved cache "
+                          f"path outside repro.tuning — cache files must be "
+                          f"written through TuningCache.save()")
+
+
+def lint_file(path: Path) -> List[Finding]:
+    try:
+        src = path.read_text()
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Finding("REP000", "error", f"{path}:{e.lineno or 0}",
+                        f"syntax error: {e.msg}")]
+    # Rule scoping matches on the absolute posix path ("/kernels/" etc.);
+    # findings display the root-relative path.
+    fl = _FileLint(path, "/" + path.resolve().as_posix().lstrip("/"),
+                   tree, src.splitlines())
+    fl.check_asserts()
+    fl.check_timing()
+    fl.check_kernel_registration(_schedule_registry_keys())
+    fl.check_geometry_imports()
+    fl.check_cache_schema()
+    return fl.findings
+
+
+def lint_paths(paths: Iterable[Path]) -> List[Finding]:
+    findings: List[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f))
+    return findings
+
+
+def _default_root() -> Path:
+    here = Path(__file__).resolve()
+    return here.parents[1]  # src/repro
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.verify.lint",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write findings as JSON")
+    ap.add_argument("--fail-on", choices=("error", "warning", "never"),
+                    default="error",
+                    help="exit 1 when findings at/above this level exist")
+    args = ap.parse_args(argv)
+    paths = [Path(p) for p in args.paths] or [_default_root()]
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f.render())
+    summary = f"{len(findings)} finding(s)"
+    if findings:
+        summary += f" (worst: {max_severity(findings)})"
+    print(f"[lint] {summary} over {', '.join(str(p) for p in paths)}",
+          file=sys.stderr)
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            {"tool": "repro.verify.lint", "findings": findings_payload(findings)},
+            indent=1))
+    return 1 if should_fail(findings, args.fail_on) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

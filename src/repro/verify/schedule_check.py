@@ -1,0 +1,693 @@
+"""Schedule↔kernel cross-checker: prove model/kernel agreement statically.
+
+For one (path × variant × epilogue × shape × knobs) configuration this module
+abstractly traces the kernel wrapper (``trace.trace_config`` — no execution),
+rebuilds the registered ``KernelSchedule`` at the kernel's *padded* dims, and
+checks that the two descriptions of the launch agree.  Rule codes:
+
+  VER101  grid mismatch (extents / total cell count)
+  VER102  operand block/binding mismatch (a staged block the model does not
+          describe, or a modeled block the kernel does not stage)
+  VER103  index-map coverage (out-of-bounds block, gap in the tiling, an
+          output tile never written, or an unanalyzable index map)
+  VER104  revisited output block reachable from a non-innermost grid dim
+          (static write-write race for the accumulating reductions)
+  VER105  accumulator dtype (revisited output block or modeled accumulator
+          scratch that is not f32)
+  VER106  VMEM footprint disagreement beyond the explained conventions
+  VER107  legality disagreement (model verdict vs the wrapper's ValueError)
+  VER108  modeled read traffic outside the bounds implied by the BlockSpecs
+
+The model and the kernels speak slightly different dialects by design; every
+sanctioned difference is folded into an *explained-bytes* budget instead of
+being waved through wholesale:
+
+  * row-family kernels stage the unified ``Wpad`` row (``geometry.
+    unified_wpad``) — wider than the schedule's minimal padded row;
+  * the tap-DMA kernels (fwd naive/lane, bwd_k naive) bind operands as
+    ``pl.ANY`` and stage manually into a VMEM scratch window;
+  * the filter/bias vectors are modeled as unstaged whole-tensor reads but
+    the kernels stage them as (Hb, Kp)/(Hb, LANE) blocks;
+  * blockless modeled writes (dk, dbias, partials) are the kernels' f32
+    accumulator / partials output blocks;
+  * the epilogue recompute temporaries (``pre``, ``dy_eff``) are modeled
+    VMEM charges with no operand counterpart (register/VMEM temporaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.kernels.common import (LANE, DWConvDims, adjoint_pad_widths, cdiv,
+                                  pad_widths, round_up)
+from repro.perfmodel.derive import check_legality, vmem_bytes
+from repro.perfmodel.geometry import effective_tiles, unified_wpad
+from repro.perfmodel.schedules import schedule_for
+from repro.verify.findings import Finding
+from repro.verify.trace import (PALLAS_VARIANTS, PallasRecord, SpecInfo,
+                                trace_config)
+
+# VER108 lower bound: modeled read bytes must be at least this fraction of
+# the bytes the BlockSpecs can touch (union of visited cells).  The loosest
+# legitimate case is the row family on a short-L shape, where the staged
+# unified row is up to ~3x the modeled minimal row (~0.34); a schedule whose
+# elems are off by an order of magnitude still trips it.
+READ_LOWER_FRACTION = 0.25
+
+
+def _err(code: str, where: str, msg: str) -> Finding:
+    return Finding(code=code, severity="error", where=where, message=msg)
+
+
+def _itemsize(dtype_name: str) -> int:
+    return int(np.dtype(dtype_name).itemsize)
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _squeeze(shape: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(int(s) for s in shape if int(s) != 1)
+
+
+def padded_dims(path: str, d: DWConvDims, *, block_h: int, block_t: int,
+                batch_chunk: int) -> DWConvDims:
+    """The dims the kernel actually launches over: ops pads channels to a
+    whole number of h-blocks, time to the lane-aligned Lout, and (reduction
+    paths) batch to a whole number of chunks.  The tiling knobs are
+    idempotent under this padding (min/round_up fixpoints), so rebuilding
+    the schedule at these dims describes the traced launch exactly."""
+    Hb = max(1, min(block_h, d.H))
+    Hp = round_up(d.H, Hb)
+    Lp = round_up(d.L, LANE)
+    Bp = d.B
+    if path in ("bwd_k", "bwd_fused"):
+        Bc = max(1, min(batch_chunk, d.B))
+        Bp = round_up(d.B, Bc)
+    return DWConvDims(B=Bp, H=Hp, L=Lp, K=d.K, padding=d.padding)
+
+
+# ---------------------------------------------------------------------------
+# index-map analysis
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MapInfo:
+    """Separable description of one index map over the launch grid."""
+    ncomp: int
+    comp_dim: List[Optional[int]]       # grid dim driving each component
+    comp_values: List[List[int]]        # visited block index per driving step
+    used_dims: Set[int]
+    error: Optional[str] = None
+
+
+def _eval_map(index_map, args) -> Tuple[int, ...]:
+    out = index_map(*args)
+    if not isinstance(out, tuple):
+        out = (out,)
+    return tuple(int(v) for v in out)
+
+
+def analyze_index_map(index_map, grid: Sequence[int]) -> MapInfo:
+    """Per-dimension sweeps + sample cross-check: O(sum of extents) instead
+    of enumerating the full grid (paper shapes reach ~260k cells)."""
+    n = len(grid)
+    try:
+        base = _eval_map(index_map, (0,) * n)
+    except Exception as e:  # noqa: BLE001 - any failure is a finding
+        return MapInfo(0, [], [], set(), error=f"index map failed at origin: {e}")
+    ncomp = len(base)
+    sweeps: List[List[Tuple[int, ...]]] = []
+    for dim in range(n):
+        vals = [base]
+        for g in range(1, int(grid[dim])):
+            args = [0] * n
+            args[dim] = g
+            try:
+                vals.append(_eval_map(index_map, tuple(args)))
+            except Exception as e:  # noqa: BLE001
+                return MapInfo(0, [], [], set(),
+                               error=f"index map failed at grid[{dim}]={g}: {e}")
+        sweeps.append(vals)
+    comp_dim: List[Optional[int]] = []
+    comp_values: List[List[int]] = []
+    used: Set[int] = set()
+    for c in range(ncomp):
+        dims_c = [dim for dim in range(n)
+                  if any(v[c] != base[c] for v in sweeps[dim])]
+        if len(dims_c) > 1:
+            return MapInfo(0, [], [], set(),
+                           error=f"component {c} depends on grid dims {dims_c} "
+                                 f"jointly (non-separable index map)")
+        dim = dims_c[0] if dims_c else None
+        comp_dim.append(dim)
+        comp_values.append([v[c] for v in sweeps[dim]] if dim is not None else [base[c]])
+        if dim is not None:
+            used.add(dim)
+    # Cross-check separability at the far corner and a mixed sample point.
+    for point in ((tuple(int(g) - 1 for g in grid)),
+                  tuple(min(1, int(g) - 1) for g in grid)):
+        predicted = tuple(
+            comp_values[c][point[comp_dim[c]]] if comp_dim[c] is not None
+            else comp_values[c][0]
+            for c in range(ncomp))
+        try:
+            actual = _eval_map(index_map, point)
+        except Exception as e:  # noqa: BLE001
+            return MapInfo(0, [], [], set(), error=f"index map failed at {point}: {e}")
+        if actual != predicted:
+            return MapInfo(0, [], [], set(),
+                           error=f"index map is not separable: f{point}={actual}, "
+                                 f"per-dim sweeps predict {predicted}")
+    return MapInfo(ncomp, comp_dim, comp_values, used)
+
+
+def _identity_map(n: int):
+    return lambda *args: args if n > 1 else args[0]
+
+
+def pipelined_fetches(minfo: MapInfo, grid: Sequence[int]) -> int:
+    """Upper bound on block fetches under the Pallas pipeline, which skips
+    the copy when the block index is unchanged between consecutive row-major
+    grid steps.  A transition's outermost-changing dim d triggers a fetch
+    iff d (or any wrapping inner dim) feeds the index map."""
+    n = len(grid)
+    total = 1
+    for dim in range(n):
+        inner_used = any(j in minfo.used_dims and int(grid[j]) > 1
+                         for j in range(dim + 1, n))
+        if dim in minfo.used_dims or inner_used:
+            total += (int(grid[dim]) - 1) * _prod(grid[:dim])
+    return total
+
+
+def _merged_cover(intervals: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    out: List[Tuple[int, int]] = []
+    for lo, hi in sorted(intervals):
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one traced launch vs one padded schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Group:
+    gid: int
+    specs: List[SpecInfo]
+    shape: Tuple[int, ...]
+    dtype: str
+    model_name: Optional[str] = None    # schedule operand this group realizes
+    model_read_bytes: float = 0.0       # its modeled HBM read charge
+
+
+def _bind_candidates(op, cells: int) -> List[Tuple[int, Tuple[int, ...]]]:
+    """(n_binds, per-bind block) readings of a modeled block.  A multi-bind
+    block is encoded as (n_binds, *per_bind) with transactions = binds/cell."""
+    block = tuple(int(b) for b in op.block)
+    cands = [(1, block)]
+    if cells and op.transactions:
+        nb = int(round(op.transactions / cells))
+        if nb > 1 and len(block) >= 2 and block[0] == nb:
+            cands.append((nb, block[1:]))
+    return cands
+
+
+def _op_block_itemsize(op) -> int:
+    return int(getattr(op, "block_itemsize", None) or op.itemsize)
+
+
+def _live_last(name: str, path: str, d: DWConvDims) -> Optional[int]:
+    """Columns of the last axis that hold real data (the rest is layout
+    padding a kernel may legitimately skip).  None: require full extent."""
+    pl_l, pl_r = pad_widths(d.K, d.padding)
+    al_l, _ = adjoint_pad_widths(d.K, d.padding)
+    if name == "x":
+        return (al_l if path == "bwd_in" else pl_l) + d.L
+    if name == "x_pad":
+        return pl_l + d.L
+    if name == "dy_pad":
+        return pl_r + d.L
+    if name == "dy":
+        return d.L
+    return None
+
+
+def check_record(rec: PallasRecord, sched_p, d: DWConvDims, *, path: str,
+                 variant: str, epilogue: str, block_h: int, block_t: int,
+                 batch_chunk: int, where: str) -> List[Finding]:
+    """Cross-check one traced pallas_call against the padded-dims schedule.
+
+    ``sched_p`` is the registered schedule rebuilt at ``padded_dims(...)``;
+    ``d`` is the *logical* shape (used for the live-data coverage targets
+    and the unified-row width, which are functions of the un-padded L).
+    """
+    findings: List[Finding] = []
+    dp = sched_p.dims
+    Hb, _, _, _ = effective_tiles(dp, block_h, block_t, batch_chunk)
+    Kp = round_up(d.K, LANE)
+    cells = _prod([e for _, e in sched_p.grid]) if sched_p.grid else 1
+
+    # ---- VER101: grid agreement (orders differ by convention) -------------
+    model_ext = [int(e) for _, e in sched_p.grid]
+    actual_ext = [int(e) for e in rec.grid]
+    if (sorted(e for e in model_ext if e > 1) != sorted(e for e in actual_ext if e > 1)
+            or _prod(model_ext) != _prod(actual_ext)):
+        findings.append(_err("VER101", where,
+                             f"grid mismatch: schedule {sched_p.grid} vs "
+                             f"kernel grid {rec.grid}"))
+        return findings
+
+    if len(rec.in_specs) != len(rec.operand_shapes):
+        findings.append(_err("VER102", where,
+                             f"{len(rec.operand_shapes)} operands bound to "
+                             f"{len(rec.in_specs)} in_specs"))
+        return findings
+
+    # ---- group the kernel's operand bindings (same array => one group) ----
+    groups: Dict[int, _Group] = {}
+    for i, spec in enumerate(rec.in_specs):
+        gid = rec.operand_groups[i]
+        g = groups.setdefault(gid, _Group(gid, [], rec.operand_shapes[i],
+                                          rec.operand_dtypes[i]))
+        g.specs.append(spec)
+
+    explained = 0.0          # |model VMEM - actual VMEM| budget from conventions
+    used_scratch: Set[int] = set()
+    structural_ok = True     # gates VER106/VER108 on a clean VER102 pass
+
+    def _group_binds(g: _Group) -> Optional[List[Tuple[int, ...]]]:
+        if any(s.block_shape is None for s in g.specs):
+            return None
+        return [_squeeze(s.block_shape) for s in g.specs]
+
+    # ---- VER102: staged modeled reads must appear as spec groups ----------
+    model_ops = [op for op in sched_p.operands if not op.name.startswith("pad:")]
+    staged_reads = [op for op in model_ops if op.role == "read" and op.block]
+    unstaged_reads = [op for op in model_ops
+                      if op.role == "read" and not op.block
+                      and op.elems > 0 and op.name in ("k", "bias")]
+
+    for op in staged_reads:
+        bi = _op_block_itemsize(op)
+        hit: Optional[_Group] = None
+        for nb, per_bind in _bind_candidates(op, cells):
+            want = _squeeze(per_bind)
+            for g in groups.values():
+                if g.model_name is not None:
+                    continue
+                binds = _group_binds(g)
+                if binds is None or len(binds) != nb:
+                    continue
+                if all(b == want for b in binds):
+                    hit = g
+                    break
+                # Unified-row widening: identical up to a wider last axis,
+                # exactly the shared unified_wpad width.
+                if (all(len(b) == len(want) and b[:-1] == want[:-1]
+                        and b[-1] >= want[-1] for b in binds)
+                        and binds[0][-1] == unified_wpad(d.L, d.K, block_t)
+                        and all(b == binds[0] for b in binds)):
+                    hit = g
+                    explained += nb * (binds[0][-1] - want[-1]) * _prod(want[:-1]) * bi
+                    break
+            if hit is not None:
+                break
+        if hit is None:
+            # Manual-DMA convention: a pl.ANY binding staged by the kernel
+            # itself into a VMEM scratch window of the modeled width (the
+            # model may charge up to K-1+LANE extra alignment columns).
+            want = _squeeze(tuple(int(b) for b in op.block))
+            for g in groups.values():
+                if g.model_name is not None or _group_binds(g) is not None:
+                    continue
+                for si, sc in enumerate(rec.scratch):
+                    if si in used_scratch or sc.kind != "vmem":
+                        continue
+                    ssh = _squeeze(sc.shape)
+                    if (len(ssh) == len(want) and ssh[:-1] == want[:-1]
+                            and 0 <= want[-1] - ssh[-1] <= d.K - 1 + LANE):
+                        used_scratch.add(si)
+                        explained += abs(_prod(want) * bi
+                                         - _prod(sc.shape) * _itemsize(sc.dtype))
+                        hit = g
+                        break
+                if hit is not None:
+                    break
+        if hit is None:
+            structural_ok = False
+            findings.append(_err("VER102", where,
+                                 f"schedule read '{op.name}' block={op.block} "
+                                 f"has no matching kernel binding"))
+        else:
+            hit.model_name = op.name
+            hit.model_read_bytes = op.hbm_bytes
+
+    # Modeled whole-tensor reads the kernels stage as fixed blocks.
+    for op in unstaged_reads:
+        want = {"k": _squeeze((Hb, Kp)), "bias": _squeeze((Hb, LANE))}[op.name]
+        hit = None
+        for g in groups.values():
+            binds = _group_binds(g)
+            if g.model_name is None and binds is not None and binds == [want]:
+                hit = g
+                break
+        if hit is None:
+            structural_ok = False
+            findings.append(_err("VER102", where,
+                                 f"schedule read '{op.name}' (unstaged) has no "
+                                 f"({'x'.join(map(str, want))}) kernel binding"))
+        else:
+            hit.model_name = op.name
+            hit.model_read_bytes = op.hbm_bytes
+            explained += len(hit.specs) * _prod(want) * _itemsize(hit.dtype)
+
+    for g in groups.values():
+        if g.model_name is None:
+            structural_ok = False
+            binds = _group_binds(g)
+            desc = "pl.ANY" if binds is None else f"blocks {binds}"
+            findings.append(_err("VER102", where,
+                                 f"kernel binds operand shape {g.shape} as {desc} "
+                                 f"with no schedule operand to account for it"))
+
+    # ---- VER102 (outputs) -------------------------------------------------
+    out_used = [False] * len(rec.out_specs)
+    staged_writes = [op for op in model_ops if op.role == "write" and op.block]
+    acc_names = ["dk_partials", "partials", "dk", "dbias"]
+    unstaged_writes = sorted(
+        (op for op in model_ops if op.role == "write" and not op.block
+         and op.elems > 0 and op.name in acc_names),
+        key=lambda op: acc_names.index(op.name))
+    if len(rec.out_specs) != len(rec.out_shapes):
+        findings.append(_err("VER102", where, "out_specs/out_shape arity mismatch"))
+        return findings
+
+    def _claim_out(want: Tuple[int, ...]) -> Optional[int]:
+        for oi, spec in enumerate(rec.out_specs):
+            if out_used[oi] or spec.block_shape is None:
+                continue
+            if _squeeze(spec.block_shape) == want:
+                out_used[oi] = True
+                return oi
+        return None
+
+    matched_outs: List[Tuple[int, str]] = []
+    for op in staged_writes:
+        oi = _claim_out(_squeeze(tuple(int(b) for b in op.block)))
+        if oi is None:
+            structural_ok = False
+            findings.append(_err("VER102", where,
+                                 f"schedule write '{op.name}' block={op.block} "
+                                 f"has no matching kernel output"))
+        else:
+            matched_outs.append((oi, op.name))
+
+    acc_blocks = {"dk": [(Hb, Kp)], "dbias": [(Hb, LANE)],
+                  "dk_partials": [(Hb, Kp)],
+                  "partials": [(Hb, Kp), (Hb, LANE)] if epilogue != "none"
+                  else [(Hb, Kp)]}
+    seen_partials_read = False
+    for op in unstaged_writes:
+        if op.name == "partials" and seen_partials_read:
+            continue
+        seen_partials_read |= op.name == "partials"
+        for want in acc_blocks[op.name]:
+            oi = _claim_out(_squeeze(want))
+            if oi is not None:
+                # The kernel's f32 accumulator / partials block realizes a
+                # modeled blockless write (final dk/dbias may be a post-kernel
+                # jnp reduction, so a missing output here is not a finding).
+                matched_outs.append((oi, op.name))
+                explained += _prod(rec.out_specs[oi].block_shape) \
+                    * _itemsize(rec.out_dtypes[oi])
+    # An epilogue kernel always carries its dbias accumulator column even
+    # when bias is off (the modeled dbias op then has elems 0).
+    if epilogue != "none":
+        oi = _claim_out(_squeeze((Hb, LANE)))
+        if oi is not None:
+            matched_outs.append((oi, "dbias"))
+            explained += _prod(rec.out_specs[oi].block_shape) \
+                * _itemsize(rec.out_dtypes[oi])
+
+    for oi in range(len(rec.out_specs)):
+        if not out_used[oi]:
+            structural_ok = False
+            findings.append(_err("VER102", where,
+                                 f"kernel output block "
+                                 f"{rec.out_specs[oi].block_shape} -> shape "
+                                 f"{rec.out_shapes[oi]} has no schedule operand"))
+
+    # Modeled VMEM charges with no operand counterpart: the epilogue
+    # recompute temporaries, and (accum variants) the dk accumulator that is
+    # realized by the f32 output block counted above.
+    for op in model_ops:
+        if op.role != "scratch" or not op.block:
+            continue
+        if op.name in ("pre", "dy_eff"):
+            explained += op.vmem_bytes
+        elif op.name == "dk_acc":
+            pass  # cancels against the f32 accumulator output block
+        else:
+            explained += op.vmem_bytes
+
+    # ---- VER103/VER104/VER105: coverage, races, accumulator dtype ---------
+    spec_infos: Dict[int, MapInfo] = {}
+
+    def _analyze(spec: SpecInfo, label: str) -> Optional[MapInfo]:
+        key = id(spec)
+        if key not in spec_infos:
+            imap = spec.index_map or _identity_map(len(spec.block_shape))
+            spec_infos[key] = analyze_index_map(imap, rec.grid)
+        minfo = spec_infos[key]
+        if minfo.error:
+            findings.append(_err("VER103", where, f"{label}: {minfo.error}"))
+            return None
+        if minfo.ncomp != len(spec.block_shape):
+            findings.append(_err("VER103", where,
+                                 f"{label}: index map yields {minfo.ncomp} "
+                                 f"components for a rank-{len(spec.block_shape)} block"))
+            return None
+        return minfo
+
+    def _axis_checks(minfo: MapInfo, block: Tuple[int, ...],
+                     ashape: Tuple[int, ...], label: str) -> bool:
+        ok = True
+        for c in range(minfo.ncomp):
+            vals = minfo.comp_values[c]
+            lo, hi = min(vals), max(vals)
+            if lo < 0 or (hi + 1) * block[c] > ashape[c]:
+                findings.append(_err("VER103", where,
+                                     f"{label}: axis {c} visits blocks "
+                                     f"[{lo}, {hi}] of size {block[c]} — out of "
+                                     f"bounds for extent {ashape[c]}"))
+                ok = False
+            if sorted(set(vals)) != list(range(lo, hi + 1)):
+                findings.append(_err("VER103", where,
+                                     f"{label}: axis {c} visits a gapped block "
+                                     f"set {sorted(set(vals))}"))
+                ok = False
+        return ok
+
+    for g in groups.values():
+        binds = _group_binds(g)
+        if binds is None or g.model_name is None:
+            continue  # manual-DMA groups have no specs to check
+        per_axis: List[List[Tuple[int, int]]] = [[] for _ in g.shape]
+        bad = False
+        for si, spec in enumerate(g.specs):
+            label = f"in '{g.model_name}' spec#{si}"
+            minfo = _analyze(spec, label)
+            if minfo is None or not _axis_checks(minfo, spec.block_shape,
+                                                 g.shape, label):
+                bad = True
+                continue
+            for c in range(minfo.ncomp):
+                vals = minfo.comp_values[c]
+                per_axis[c].append((min(vals) * spec.block_shape[c],
+                                    (max(vals) + 1) * spec.block_shape[c]))
+        if bad:
+            structural_ok = False
+            continue
+        live = _live_last(g.model_name, path, d)
+        for c in range(len(g.shape)):
+            cover = _merged_cover(per_axis[c])
+            target = g.shape[c] if (live is None or c != len(g.shape) - 1) else live
+            if len(cover) != 1 or cover[0][0] != 0 or cover[0][1] < target:
+                structural_ok = False
+                findings.append(_err("VER103", where,
+                                     f"in '{g.model_name}': axis {c} coverage "
+                                     f"{cover} misses live region [0, {target})"))
+
+    for oi, name in matched_outs:
+        spec = rec.out_specs[oi]
+        oshape = rec.out_shapes[oi]
+        label = f"out '{name}'"
+        minfo = _analyze(spec, label)
+        if minfo is None:
+            structural_ok = False
+            continue
+        block = spec.block_shape
+        if not _axis_checks(minfo, block, oshape, label):
+            structural_ok = False
+            continue
+        counts = []
+        for c in range(minfo.ncomp):
+            vals = set(minfo.comp_values[c])
+            n_tiles_c = oshape[c] // block[c]
+            if oshape[c] % block[c] != 0 or vals != set(range(n_tiles_c)):
+                findings.append(_err("VER103", where,
+                                     f"{label}: axis {c} tiling is not exact — "
+                                     f"{len(vals)} visited blocks of {block[c]} "
+                                     f"over extent {oshape[c]}"))
+            counts.append(len(vals))
+        # Combination completeness: distinct visited tuples must equal the
+        # per-axis product (a diagonal map tiles each axis but skips cells).
+        dim_joint = 1
+        for dim in minfo.used_dims:
+            comps = [c for c in range(minfo.ncomp) if minfo.comp_dim[c] == dim]
+            dim_joint *= len({tuple(minfo.comp_values[c][g] for c in comps)
+                              for g in range(int(rec.grid[dim]))})
+        if dim_joint != _prod(counts):
+            findings.append(_err("VER103", where,
+                                 f"{label}: index map visits {dim_joint} distinct "
+                                 f"tiles but the axes require {_prod(counts)}"))
+        # VER104/VER105: revisits only along the innermost (sequential) grid
+        # suffix, and only into an f32 accumulator block.
+        ignored = {dim for dim in range(len(rec.grid))
+                   if int(rec.grid[dim]) > 1 and dim not in minfo.used_dims}
+        if ignored:
+            if minfo.used_dims and max(minfo.used_dims) > min(ignored):
+                findings.append(_err("VER104", where,
+                                     f"{label}: block revisited along grid dim(s) "
+                                     f"{sorted(ignored)} while outer dim "
+                                     f"{max(minfo.used_dims)} varies — revisits "
+                                     f"must be confined to the innermost "
+                                     f"sequential dims"))
+            if rec.out_dtypes[oi] != "float32":
+                findings.append(_err("VER105", where,
+                                     f"{label}: revisited accumulator block has "
+                                     f"dtype {rec.out_dtypes[oi]}, must be float32"))
+
+    for op in model_ops:
+        if op.role == "scratch" and op.block and _op_block_itemsize(op) != 4:
+            findings.append(_err("VER105", where,
+                                 f"schedule scratch '{op.name}' declares "
+                                 f"itemsize {_op_block_itemsize(op)}, accumulators "
+                                 f"must be f32"))
+
+    if not structural_ok:
+        return findings
+
+    # ---- VER106: VMEM footprint ------------------------------------------
+    actual_vmem = 0.0
+    for g in groups.values():
+        binds = _group_binds(g)
+        if binds is not None:
+            for spec in g.specs:
+                actual_vmem += _prod(spec.block_shape) * _itemsize(g.dtype)
+    for oi, spec in enumerate(rec.out_specs):
+        if spec.block_shape is not None:
+            actual_vmem += _prod(spec.block_shape) * _itemsize(rec.out_dtypes[oi])
+    for sc in rec.scratch:
+        if sc.kind == "vmem":
+            actual_vmem += _prod(sc.shape) * _itemsize(sc.dtype)
+    model_vmem = vmem_bytes(sched_p)
+    if abs(actual_vmem - model_vmem) > explained + 0.5:
+        findings.append(_err("VER106", where,
+                             f"VMEM footprint disagrees: BlockSpecs stage "
+                             f"{actual_vmem:.0f} B, schedule derives "
+                             f"{model_vmem:.0f} B, explained conventions cover "
+                             f"only {explained:.0f} B"))
+
+    # ---- VER108: modeled read traffic within BlockSpec-implied bounds -----
+    if all(_group_binds(g) is not None for g in groups.values()):
+        model_bytes = sum(g.model_read_bytes for g in groups.values())
+        union_bytes = 0.0
+        pipe_bytes = 0.0
+        for g in groups.values():
+            isz = _itemsize(g.dtype)
+            per_axis = [[] for _ in g.shape]
+            for spec in g.specs:
+                minfo = spec_infos[id(spec)]
+                for c in range(minfo.ncomp):
+                    vals = minfo.comp_values[c]
+                    per_axis[c].append((min(vals) * spec.block_shape[c],
+                                        (max(vals) + 1) * spec.block_shape[c]))
+                pipe_bytes += pipelined_fetches(minfo, rec.grid) \
+                    * _prod(spec.block_shape) * isz
+            union = 1
+            for c in range(len(g.shape)):
+                union *= sum(hi - lo for lo, hi in _merged_cover(per_axis[c]))
+            union_bytes += union * isz
+        if model_bytes < READ_LOWER_FRACTION * union_bytes - 0.5:
+            findings.append(_err("VER108", where,
+                                 f"schedule charges {model_bytes:.0f} read bytes "
+                                 f"but the BlockSpecs touch {union_bytes:.0f} B of "
+                                 f"distinct cells — elems look understated"))
+        if model_bytes > pipe_bytes + 0.5:
+            findings.append(_err("VER108", where,
+                                 f"schedule charges {model_bytes:.0f} read bytes "
+                                 f"but the pipelined fetch bound is only "
+                                 f"{pipe_bytes:.0f} B — elems look overstated"))
+
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def verify_config(path: str, variant: str, d: DWConvDims, *, itemsize: int = 4,
+                  block_h: int = 8, block_t: int = 512, batch_chunk: int = 128,
+                  epilogue: str = "none",
+                  dtype: str = "float32") -> Tuple[str, List[Finding]]:
+    """Cross-check one configuration.  Returns ``(status, findings)`` with
+    status in {"verified", "failed", "illegal", "model-only"} — "illegal"
+    means the model and the kernel *agree* the layout is not runnable.
+    ``dtype`` is the traced operand dtype; keep ``itemsize`` consistent with
+    it (the model charges per-element bytes, the trace reports real blocks).
+    """
+    where = (f"{path}/{variant}[{epilogue}] "
+             f"{d.B}x{d.H}x{d.L}x{d.K}/{d.padding} "
+             f"bh{block_h}.bt{block_t}.bc{batch_chunk}")
+    if variant not in PALLAS_VARIANTS.get(path, ()):
+        return "model-only", []
+    knobs = dict(block_h=block_h, block_t=block_t, batch_chunk=batch_chunk)
+    sched = schedule_for(path, variant, d, itemsize, epilogue=epilogue, **knobs)
+    legal, reason = check_legality(sched)
+    records, err = trace_config(path, variant, d, epilogue=epilogue,
+                                dtype=dtype, **knobs)
+    if err is not None:
+        if legal:
+            return "failed", [_err("VER107", where,
+                                   f"model says legal but the kernel wrapper "
+                                   f"rejected the layout: {err}")]
+        return "illegal", []
+    if not legal:
+        return "failed", [_err("VER107", where,
+                               f"model says illegal ({reason}) but the kernel "
+                               f"wrapper accepted the layout")]
+    if len(records) != 1:
+        return "failed", [_err("VER101", where,
+                               f"expected one pallas_call launch, traced "
+                               f"{len(records)}")]
+    d_pad = padded_dims(path, d, **knobs)
+    sched_p = schedule_for(path, variant, d_pad, itemsize, epilogue=epilogue,
+                           **knobs)
+    findings = check_record(records[0], sched_p, d, path=path, variant=variant,
+                            epilogue=epilogue, where=where, **knobs)
+    return ("verified" if not findings else "failed"), findings

@@ -1,0 +1,200 @@
+"""Abstract capture of every ``pl.pallas_call`` launch — nothing executes.
+
+The kernel wrappers in ``repro.kernels.ops`` are run under ``jax.eval_shape``
+with ``pl.pallas_call`` replaced by a recorder: the wrapper's padding /
+tiling / validation logic all runs for real (it is plain Python on static
+shapes), but at the launch point we capture the grid, the per-operand
+``BlockSpec``s (block shape + index map), the operand binding structure
+(which traced array feeds which spec — halo kernels bind the same array
+twice), the declared out shapes and the scratch allocations, then return
+abstract zeros of the declared out shapes.  No Mosaic lowering, no
+accelerator, no numerics — this is what lets the verifier sweep hundreds of
+(path × variant × epilogue × shape) configurations in seconds on any host.
+
+``repro.resilience.guard.run_guarded`` is replaced by a direct call of the
+first attempt for the duration of the trace, so a kernel wrapper's
+``ValueError`` (an illegal layout) propagates to the verifier instead of
+being absorbed by the degradation chain.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ops
+from repro.kernels.common import DWConvDims
+from repro.kernels.epilogue import parse_epilogue
+from repro.resilience import guard as _guard
+
+# The (path, variant) pairs that lower through pl.pallas_call and are
+# therefore cross-checkable.  Everything else in the registry ("xla",
+# "split", the paper_* GPU models) is analytical-only.
+PALLAS_VARIANTS = {
+    "fwd": ("naive", "lane", "block", "row"),
+    "bwd_in": ("naive", "lane", "block", "row"),
+    "bwd_k": ("naive", "twostage", "accum"),
+    "bwd_fused": ("fused", "fused_partials"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecInfo:
+    """One BlockSpec as captured at the launch site."""
+    block_shape: Optional[Tuple[int, ...]]   # None: unblocked (pl.ANY / HBM ref)
+    index_map: Optional[Callable]            # None: no map (unblocked)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchInfo:
+    kind: str                                # "vmem" | "sem" | "other"
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasRecord:
+    """Everything the verifier needs about one pallas_call launch."""
+    kernel_name: str
+    grid: Tuple[int, ...]
+    in_specs: Tuple[SpecInfo, ...]
+    out_specs: Tuple[SpecInfo, ...]
+    operand_shapes: Tuple[Tuple[int, ...], ...]
+    operand_dtypes: Tuple[str, ...]
+    operand_groups: Tuple[int, ...]          # same id => same source array
+    out_shapes: Tuple[Tuple[int, ...], ...]
+    out_dtypes: Tuple[str, ...]
+    scratch: Tuple[ScratchInfo, ...]
+
+
+def _spec_info(spec: Any) -> SpecInfo:
+    block = getattr(spec, "block_shape", None)
+    if block is not None:
+        block = tuple(1 if b is None else int(b) for b in block)
+    return SpecInfo(block_shape=block, index_map=getattr(spec, "index_map", None))
+
+
+def _scratch_info(s: Any) -> ScratchInfo:
+    cls = type(s).__name__
+    if "Semaphore" in cls or "semaphore" in str(getattr(s, "dtype", "")):
+        return ScratchInfo("sem", (), "sem")
+    shape = getattr(s, "shape", None)
+    dtype = getattr(s, "dtype", None)
+    if shape is not None and dtype is not None:
+        return ScratchInfo("vmem", tuple(int(x) for x in shape), jnp.dtype(dtype).name)
+    return ScratchInfo("other", (), cls)
+
+
+@contextlib.contextmanager
+def record_pallas_calls(records: List[PallasRecord]):
+    """Patch pallas_call (recorder) and run_guarded (first attempt, no net)."""
+    real_call = pl.pallas_call
+    real_guard = _guard.run_guarded
+
+    def fake_pallas_call(kernel, *args, **kwargs):
+        out_shape = kwargs.get("out_shape", args[0] if args else None)
+        grid = kwargs.get("grid", ())
+        if isinstance(grid, int):
+            grid = (grid,)
+        in_specs = kwargs.get("in_specs") or ()
+        out_specs = kwargs.get("out_specs")
+        scratch_shapes = kwargs.get("scratch_shapes") or ()
+        multi_out = isinstance(out_shape, (list, tuple))
+        out_list = list(out_shape) if multi_out else [out_shape]
+        specs_out = list(out_specs) if isinstance(out_specs, (list, tuple)) else [out_specs]
+        fn = getattr(kernel, "func", kernel)     # unwrap functools.partial
+        name = getattr(fn, "__name__", str(kernel))
+
+        def runner(*operands):
+            groups: dict = {}
+            gids = tuple(groups.setdefault(id(a), len(groups)) for a in operands)
+            records.append(PallasRecord(
+                kernel_name=name,
+                grid=tuple(int(g) for g in grid),
+                in_specs=tuple(_spec_info(s) for s in in_specs),
+                out_specs=tuple(_spec_info(s) for s in specs_out if s is not None),
+                operand_shapes=tuple(tuple(a.shape) for a in operands),
+                operand_dtypes=tuple(jnp.dtype(a.dtype).name for a in operands),
+                operand_groups=gids,
+                out_shapes=tuple(tuple(s.shape) for s in out_list),
+                out_dtypes=tuple(jnp.dtype(s.dtype).name for s in out_list),
+                scratch=tuple(_scratch_info(s) for s in scratch_shapes),
+            ))
+            outs = [jnp.zeros(s.shape, s.dtype) for s in out_list]
+            return outs if multi_out else outs[0]
+
+        return runner
+
+    def direct_guard(path, **kw):
+        variant, opts = kw["attempts"][0]
+        return kw["run"](variant, opts)
+
+    pl.pallas_call = fake_pallas_call
+    _guard.run_guarded = direct_guard
+    try:
+        yield
+    finally:
+        pl.pallas_call = real_call
+        _guard.run_guarded = real_guard
+
+
+def trace_config(
+    path: str,
+    variant: str,
+    d: DWConvDims,
+    *,
+    block_h: int = 8,
+    block_t: int = 512,
+    batch_chunk: int = 128,
+    epilogue: str = "none",
+    dtype: str = "float32",
+) -> Tuple[List[PallasRecord], Optional[str]]:
+    """Run one (path, variant, epilogue, shape) config abstractly.
+
+    Returns ``(records, error)`` where ``error`` is the wrapper's
+    ``ValueError`` text when the config is rejected as an illegal layout
+    (the verifier cross-checks that verdict against ``check_legality``).
+    """
+    if variant not in PALLAS_VARIANTS.get(path, ()):
+        raise ValueError(f"{path}/{variant} is not a traceable Pallas config")
+    opts = ops.KernelOptions(block_h=block_h, block_t=block_t,
+                             batch_chunk=batch_chunk, interpret=True)
+    has_bias, act = parse_epilogue(epilogue)
+    dt = jnp.dtype(dtype)
+    x = jax.ShapeDtypeStruct((d.B, d.H, d.L), dt)
+    k = jax.ShapeDtypeStruct((d.H, d.K), dt)
+    bias = jax.ShapeDtypeStruct((d.H,), dt) if has_bias else None
+
+    if path == "fwd":
+        fn = lambda x_, k_, b_: ops.dwconv_fwd_op(
+            x_, k_, d.padding, variant, opts, bias=b_, act=act)
+        fargs = (x, k, bias)
+    elif path == "bwd_in":
+        fn = lambda dy_, k_: ops.dwconv_bwd_input_op(dy_, k_, d.padding, variant, opts)
+        fargs = (x, k)
+    elif path == "bwd_k":
+        fn = lambda x_, dy_: ops.dwconv_bwd_kernel_op(x_, dy_, d.K, d.padding, variant, opts)
+        fargs = (x, x)
+    elif path == "bwd_fused":
+        if epilogue == "none":
+            fn = lambda x_, dy_, k_: ops.dwconv_bwd_fused_op(
+                x_, dy_, k_, d.padding, variant, opts)
+            fargs = (x, x, k)
+        else:
+            fn = lambda x_, dy_, k_, b_: ops.dwconv_bwd_fused_act_op(
+                x_, dy_, k_, b_, d.padding, variant, opts, act=act)
+            fargs = (x, x, k, bias)
+    else:
+        raise ValueError(f"unknown path {path!r}")
+
+    records: List[PallasRecord] = []
+    with record_pallas_calls(records):
+        try:
+            jax.eval_shape(fn, *fargs)
+        except ValueError as e:
+            return records, str(e)
+    return records, None

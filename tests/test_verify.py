@@ -1,0 +1,373 @@
+"""Static verification: schedule↔kernel cross-checker + repo lint.
+
+Acceptance for the static-analysis PR:
+  * the full registry sweep (every schedule × shape grid) reports zero
+    findings — the analytical model and the kernels' launch geometry agree;
+  * seeded defects (wrong elems, off-by-one halo map, revisit on a parallel
+    grid dim, bf16 accumulator, phantom scratch) each surface the expected
+    rule code — the checker is not vacuously green;
+  * the repo lint is clean over src/repro, and each REP rule fires on a
+    minimal bad fixture (including the pre-PR ``ref.py`` bare assert).
+"""
+from __future__ import annotations
+
+import dataclasses
+import textwrap
+from pathlib import Path
+from unittest import mock
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.common import DWConvDims
+from repro.kernels.ref import dwconv_fwd_ref
+from repro.perfmodel import schedule_for
+from repro.perfmodel.schedules import SCHEDULE_BUILDERS
+from repro.verify import lint as lint_mod
+from repro.verify.findings import Finding, max_severity, should_fail
+from repro.verify.schedule_check import (check_record, padded_dims,
+                                         verify_config)
+from repro.verify.trace import PALLAS_VARIANTS, ScratchInfo, SpecInfo, trace_config
+
+SRC_REPRO = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+KNOBS = dict(block_h=8, block_t=128, batch_chunk=4)
+
+
+def _traced(path, variant, d, *, epilogue="none", itemsize=4, **knobs):
+    """(record, padded schedule) for one config — the check_record inputs."""
+    kw = {**KNOBS, **knobs}
+    records, err = trace_config(path, variant, d, epilogue=epilogue, **kw)
+    assert err is None, err
+    assert len(records) == 1
+    d_pad = padded_dims(path, d, **kw)
+    sched_p = schedule_for(path, variant, d_pad, itemsize,
+                           epilogue=epilogue, **kw)
+    return records[0], sched_p, kw
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+def _check(rec, sched_p, d, path, variant, kw, epilogue="none"):
+    return check_record(rec, sched_p, d, path=path, variant=variant,
+                        epilogue=epilogue, where="test", **kw)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole acceptance: full registry × shape grid, zero findings
+# ---------------------------------------------------------------------------
+
+
+def test_registry_sweep_zero_findings():
+    from repro.launch.verify import sweep_registry
+
+    rows, findings = sweep_registry()
+    assert findings == [], "\n".join(f.render() for f in findings)
+    by_status = {}
+    for r in rows:
+        by_status[r["status"]] = by_status.get(r["status"], 0) + 1
+    # every traceable (path, variant) must actually be cross-checked
+    assert by_status.get("verified", 0) >= sum(
+        len(v) for v in PALLAS_VARIANTS.values())
+    assert by_status.get("failed", 0) == 0
+    # analytical-only variants (xla, split, paper_*) are tagged, not skipped
+    assert by_status.get("model-only", 0) > 0
+
+
+def test_every_pallas_variant_is_registered():
+    for path, variants in PALLAS_VARIANTS.items():
+        for v in variants:
+            assert (path, v) in SCHEDULE_BUILDERS
+
+
+# ---------------------------------------------------------------------------
+# seeded defects: the checker is not vacuously green
+# ---------------------------------------------------------------------------
+
+D_SEED = DWConvDims(B=8, H=16, L=512, K=4)
+
+
+def test_seeded_clean_baseline():
+    rec, sched_p, kw = _traced("fwd", "row", D_SEED)
+    assert _check(rec, sched_p, D_SEED, "fwd", "row", kw) == []
+
+
+def test_seeded_grid_mismatch_ver101():
+    rec, sched_p, kw = _traced("fwd", "row", D_SEED)
+    bad = dataclasses.replace(rec, grid=rec.grid[:-1] + (rec.grid[-1] + 1,))
+    assert "VER101" in _codes(_check(bad, sched_p, D_SEED, "fwd", "row", kw))
+
+
+def test_seeded_block_shape_mismatch_ver102():
+    rec, sched_p, kw = _traced("fwd", "row", D_SEED)
+    spec0 = rec.in_specs[0]
+    widened = SpecInfo(block_shape=tuple(b * 2 for b in spec0.block_shape),
+                       index_map=spec0.index_map)
+    bad = dataclasses.replace(rec, in_specs=(widened,) + rec.in_specs[1:])
+    assert "VER102" in _codes(_check(bad, sched_p, D_SEED, "fwd", "row", kw))
+
+
+def test_seeded_halo_off_by_one_ver103():
+    # Off-by-one halo: shift the last index-map component of a staged input
+    # by one block — the tiling walks out of bounds / gaps the live region.
+    rec, sched_p, kw = _traced("fwd", "block", D_SEED)
+    staged = [i for i, s in enumerate(rec.in_specs)
+              if s.block_shape is not None]
+    si = staged[0]
+    orig = rec.in_specs[si].index_map
+
+    def shifted(*args):
+        out = orig(*args)
+        if not isinstance(out, tuple):
+            return out + 1
+        return out[:-1] + (out[-1] + 1,)
+
+    bad_spec = SpecInfo(block_shape=rec.in_specs[si].block_shape,
+                        index_map=shifted)
+    specs = list(rec.in_specs)
+    specs[si] = bad_spec
+    bad = dataclasses.replace(rec, in_specs=tuple(specs))
+    assert "VER103" in _codes(_check(bad, sched_p, D_SEED, "fwd", "block", kw))
+
+
+def test_seeded_parallel_revisit_ver104():
+    # bwd_k accum revisits its dk accumulator along the sequential inner
+    # dims; rewiring the out map to follow the *innermost* dim while
+    # ignoring the outer ones is a static write-write race.
+    rec, sched_p, kw = _traced("bwd_k", "accum", D_SEED)
+    assert len(rec.out_specs) == 1
+    spec = rec.out_specs[0]
+    orig = spec.index_map
+    # visited h-tile count from the real map: sweep each grid dim from origin
+    pts = []
+    for dim in range(len(rec.grid)):
+        for g in range(rec.grid[dim]):
+            pt = [0] * len(rec.grid)
+            pt[dim] = g
+            pts.append(tuple(pt))
+    h_tiles = {orig(*pt)[0] for pt in pts}
+    n_h = len(h_tiles)
+    assert n_h > 1 and rec.grid[-1] % n_h == 0
+
+    def race(*args):
+        return (args[-1] % n_h,) + tuple(orig(*args))[1:]
+
+    bad = dataclasses.replace(
+        rec, out_specs=(SpecInfo(spec.block_shape, race),))
+    assert "VER104" in _codes(_check(bad, sched_p, D_SEED, "bwd_k", "accum", kw))
+
+
+def test_seeded_bf16_accumulator_ver105():
+    rec, sched_p, kw = _traced("bwd_k", "accum", D_SEED)
+    bad = dataclasses.replace(
+        rec, out_dtypes=("bfloat16",) * len(rec.out_dtypes))
+    assert "VER105" in _codes(_check(bad, sched_p, D_SEED, "bwd_k", "accum", kw))
+
+
+def test_seeded_phantom_scratch_ver106():
+    rec, sched_p, kw = _traced("fwd", "row", D_SEED)
+    bad = dataclasses.replace(
+        rec, scratch=rec.scratch + (ScratchInfo("vmem", (64, 1024), "float32"),))
+    assert "VER106" in _codes(_check(bad, sched_p, D_SEED, "fwd", "row", kw))
+
+
+def test_seeded_wrong_elems_ver108():
+    rec, sched_p, kw = _traced("fwd", "row", D_SEED)
+    ops_mut = tuple(
+        dataclasses.replace(op, elems=op.elems * 0.01)
+        if op.role == "read" and op.name == "x" else op
+        for op in sched_p.operands)
+    bad_sched = dataclasses.replace(sched_p, operands=ops_mut)
+    assert "VER108" in _codes(_check(rec, bad_sched, D_SEED, "fwd", "row", kw))
+
+
+def test_seeded_legality_disagreement_ver107():
+    with mock.patch("repro.verify.schedule_check.trace_config",
+                    return_value=([], "seeded wrapper rejection")):
+        status, findings = verify_config("fwd", "row", D_SEED, **KNOBS)
+    assert status == "failed"
+    assert _codes(findings) == {"VER107"}
+
+
+def test_illegal_layout_agreement():
+    # A layout both the model and the wrapper reject is agreement, not a
+    # finding: block_t must be a lane multiple.
+    status, findings = verify_config("fwd", "naive", D_SEED,
+                                     block_h=8, block_t=100, batch_chunk=4)
+    assert status == "illegal"
+    assert findings == []
+
+
+def test_model_only_variants():
+    status, findings = verify_config("fwd", "xla", D_SEED, **KNOBS)
+    assert status == "model-only" and findings == []
+
+
+# ---------------------------------------------------------------------------
+# repo lint: clean on src/repro, and each rule fires on a minimal fixture
+# ---------------------------------------------------------------------------
+
+
+def test_lint_self_clean():
+    findings = lint_mod.lint_paths([SRC_REPRO])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def _lint_fixture(tmp_path: Path, relpath: str, source: str):
+    p = tmp_path / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return lint_mod.lint_file(p)
+
+
+def test_rep001_bare_assert_regression(tmp_path):
+    # The exact pre-PR form of ref.py's shape check: REP001's motivating case.
+    findings = _lint_fixture(tmp_path, "kernels/ref_old.py", """
+        def _fwd_acc(x, k):
+            Hk = k.shape[0]
+            H = x.shape[1]
+            assert Hk == H, (Hk, H)
+            return x
+        """)
+    assert [f.code for f in findings] == ["REP001"]
+
+
+def test_rep001_noqa_suppression(tmp_path):
+    findings = _lint_fixture(tmp_path, "kernels/suppressed.py", """
+        def f(x):
+            assert x.ndim == 3  # repro: noqa(REP001)
+            return x
+        """)
+    assert findings == []
+
+
+def test_rep001_scoped_to_kernel_code(tmp_path):
+    findings = _lint_fixture(tmp_path, "analysis/free.py", """
+        def f(x):
+            assert x.ndim == 3
+            return x
+        """)
+    assert findings == []
+
+
+def test_rep002_unsynced_timing(tmp_path):
+    findings = _lint_fixture(tmp_path, "bench/naive_timer.py", """
+        import time
+        import jax.numpy as jnp
+
+        def bench(f, x):
+            t0 = time.perf_counter()
+            y = f(jnp.asarray(x))
+            return time.perf_counter() - t0, y
+        """)
+    assert [f.code for f in findings] == ["REP002"]
+
+
+def test_rep002_block_until_ready_is_clean(tmp_path):
+    findings = _lint_fixture(tmp_path, "bench/good_timer.py", """
+        import time
+        import jax.numpy as jnp
+
+        def bench(f, x):
+            t0 = time.perf_counter()
+            y = f(jnp.asarray(x)).block_until_ready()
+            return time.perf_counter() - t0, y
+        """)
+    assert findings == []
+
+
+def test_rep003_unregistered_kernel(tmp_path):
+    findings = _lint_fixture(tmp_path, "kernels/mystery.py", """
+        from jax.experimental import pallas as pl
+
+        def mystery_kernel(x):
+            return pl.pallas_call(lambda r, o: None, out_shape=x)(x)
+        """)
+    assert [f.code for f in findings] == ["REP003"]
+
+
+def test_rep004_geometry_import_drift(tmp_path):
+    findings = _lint_fixture(tmp_path, "analysis/drift.py", """
+        from repro.kernels.ops import bwdk_time_tile
+
+        def f(d):
+            return bwdk_time_tile(d, 128)
+        """)
+    assert [f.code for f in findings] == ["REP004"]
+
+
+def test_rep005_cache_write_bypass(tmp_path):
+    findings = _lint_fixture(tmp_path, "launch/sneaky.py", """
+        import json
+        from repro.tuning.cache import resolve_cache_path
+
+        def dump_entries(entries):
+            with open(resolve_cache_path(), "w") as f:
+                json.dump(entries, f)
+        """)
+    assert [f.code for f in findings] == ["REP005"]
+
+
+def test_lint_cli_clean_on_repo():
+    assert lint_mod.main([str(SRC_REPRO)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite integrations: ref.py ValueError, report column, findings plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_ref_shape_mismatch_raises_valueerror():
+    x = jnp.zeros((2, 8, 32))
+    k = jnp.zeros((6, 4))  # Hk=6 != H=8
+    with pytest.raises(ValueError, match=r"Hk=6.*H=8"):
+        dwconv_fwd_ref(x, k)
+
+
+def test_report_schedule_verified_column():
+    from repro.analysis.report import counter_free_markdown, counter_free_report
+
+    d = DWConvDims(B=8, H=16, L=48, K=4)
+    payload = counter_free_report(d, include_paper=False,
+                                  include_epilogue=False)
+    statuses = {r["variant"]: r["schedule_verified"]
+                for r in payload["decomposition"]}
+    assert set(statuses.values()) <= {"verified", "model-only"}
+    assert statuses["xla"] == "model-only"
+    assert statuses["row"] == "verified"
+    md = counter_free_markdown(payload)
+    assert "| verified |" in md or "| verified" in md
+    # opting out leaves the payload shape intact
+    off = counter_free_report(d, include_paper=False, include_epilogue=False,
+                              verify=False)
+    assert all(r["schedule_verified"] is None for r in off["decomposition"])
+
+
+def test_findings_severity_plumbing():
+    fs = [Finding("VER101", "error", "w", "m"),
+          Finding("REP002", "warning", "w", "m")]
+    assert max_severity(fs) == "error"
+    assert should_fail(fs, "error") and should_fail(fs, "warning")
+    assert not should_fail(fs, "never")
+    assert not should_fail([Finding("X", "note", "w", "m")], "warning")
+
+
+def test_verify_cli_json(tmp_path):
+    from repro.launch import verify as verify_cli
+
+    out = tmp_path / "VERIFY.json"
+    # one small shape keeps the CLI test fast; the full grid runs above
+    with mock.patch.object(
+            verify_cli, "SHAPE_GRID",
+            (("small", DWConvDims(B=4, H=8, L=48, K=4)),)), \
+         mock.patch.object(verify_cli, "KNOB_GRID", (KNOBS,)):
+        rc = verify_cli.main(["--json", str(out), "--fail-on", "error"])
+    assert rc == 0
+    import json
+
+    payload = json.loads(out.read_text())
+    assert payload["tool"] == "repro.launch.verify"
+    assert payload["findings"] == []
+    assert payload["status_counts"]["verified"] > 0
