@@ -44,6 +44,7 @@ MODULE_NAMES = [
     "paper_epilogue",
     "s4convd_e2e",
     "roofline_table",
+    "paper_fleet",
 ]
 
 # --json keys that must exist (as null) even when their module didn't run,
@@ -52,6 +53,7 @@ _STABLE_METRIC_KEYS = (
     "fused_vs_split_backward_speedup",
     "epilogue_fused_speedup",
     "report_memory_bound_fraction",
+    "fleet_warm_metered_candidates",
 )
 
 

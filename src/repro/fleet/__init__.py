@@ -1,0 +1,40 @@
+"""Fleet tuning-cache distribution: signed bundles, validated import,
+warm-start for serving replicas.
+
+A fleet of serving replicas in a restricted cloud environment cannot each
+re-run the autotuner, and cannot blindly trust a cache file that arrived
+over a shared artifact store.  This package promotes the flock-guarded JSON
+tuning cache (``repro.tuning.cache``) to a *fleet artifact* with a
+hostile-input posture:
+
+``bundle``   — content-addressed bundle export: ``entries`` + a manifest
+               carrying schema version and provenance (device fingerprint,
+               git SHA, measured runtimes, quarantine state), sealed by an
+               HMAC-SHA256 signature over the canonical JSON, keyed by
+               ``REPRO_FLEET_KEY``;
+``import_``  — the validated import chain: signature check → schema
+               migration (the cache's v2–v6 path) → fingerprint gate
+               (exact match imports as *trusted*; a mismatch imports as
+               *advisory* — tuner hints that never bypass measurement) →
+               quarantine filter → three-way measured-runtime-wins merge
+               into the local flock-guarded cache.  Every failure mode maps
+               onto :class:`~repro.resilience.faults.BundleIntegrityError`
+               and degrades to "tune fresh", never a crash;
+``sim``      — replica simulation harness: N subprocess replicas share one
+               exported bundle; warm replicas must meter zero tuning
+               candidates, and a chaos replica fed a bit-flipped bundle
+               must still serve correctly via fresh tuning.
+"""
+from repro.fleet.bundle import (  # noqa: F401
+    BUNDLE_SUFFIX,
+    FLEET_KEY_ENV,
+    export_bundle,
+    read_bundle,
+)
+from repro.fleet.import_ import (  # noqa: F401
+    ImportResult,
+    advisory_entry,
+    clear_advisory,
+    import_bundle,
+    import_bundle_guarded,
+)

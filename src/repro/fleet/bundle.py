@@ -1,0 +1,260 @@
+"""Signed, content-addressed tuning-cache bundles (the fleet export side).
+
+A *bundle* is one JSON file (``<id>.bundle.json``) that carries a
+:class:`~repro.tuning.cache.TuningCache`'s entries across the fleet
+boundary::
+
+    {
+      "format": "repro-tuning-bundle",
+      "bundle_version": 1,
+      "cache_version": 6,                  # the tuning-cache schema exported
+      "manifest": {
+        "content_id":  sha256(canonical {cache_version, entries}),
+        "fingerprint": device that measured the entries (obs.calibrate),
+        "git_sha":     revision the decisions describe,
+        "created":     ISO-8601 UTC,
+        "entry_count": N,
+        "source_cache": exporting cache path (diagnostic only)
+      },
+      "entries":   { shape-key: TuneEntry dict },   # incl. time_us,
+      "signature": HMAC-SHA256 over the canonical    # quarantine fields
+                   JSON of everything above, keyed by REPRO_FLEET_KEY
+    }
+
+Design points:
+
+  * **canonical JSON** — signing and content addressing both hash
+    ``json.dumps(..., sort_keys=True, separators=(",", ":"))``, so the
+    signature is stable under re-serialization but breaks under *any*
+    entry/manifest mutation (a flipped byte cannot re-use the signature);
+  * **content-addressed** — ``content_id`` names the decision set itself;
+    exporting the same entries twice yields the same id, and the default
+    filename is ``<content_id[:16]>.bundle.json``;
+  * **quarantine never crosses the fleet boundary** — quarantined entries
+    (schema v6: a decision that failed to execute) are dropped at export
+    with a warning, or the export is refused outright under ``strict=True``
+    (the programmatic twin of ``repro.resilience.report
+    --fail-on-quarantine``);
+  * **hostile-input reads** — :func:`read_bundle` maps every defect
+    (unreadable file, wrong format, bad signature, content-id mismatch,
+    unmigratable schema) onto
+    :class:`~repro.resilience.faults.BundleIntegrityError` so the import
+    chain can degrade to "tune fresh" instead of crashing a replica.
+
+This module and ``tuning/cache.py`` are the *only* places allowed to read
+or write bundle/cache JSON directly (lint rule REP006).
+"""
+from __future__ import annotations
+
+import datetime
+import hashlib
+import hmac
+import json
+import os
+import sys
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.resilience import faults
+from repro.resilience.faults import BundleIntegrityError
+from repro.tuning.cache import (
+    CACHE_VERSION,
+    MIGRATABLE_VERSIONS,
+    TuneEntry,
+    TuningCache,
+)
+
+FLEET_KEY_ENV = "REPRO_FLEET_KEY"
+BUNDLE_FORMAT = "repro-tuning-bundle"
+BUNDLE_VERSION = 1
+BUNDLE_SUFFIX = ".bundle.json"
+
+
+def _warn(msg: str) -> None:
+    print(f"[fleet.bundle] {msg}", file=sys.stderr, flush=True)
+
+
+def resolve_key(key: Optional[str] = None) -> str:
+    """Explicit key argument > ``REPRO_FLEET_KEY`` env.  No key is an
+    integrity failure: an unsigned bundle can neither be produced nor
+    trusted, so both sides fail the same way."""
+    if key:
+        return key
+    env = os.environ.get(FLEET_KEY_ENV, "").strip()
+    if env:
+        return env
+    raise BundleIntegrityError(
+        f"no fleet signing key: set {FLEET_KEY_ENV} (or pass key=) — bundles "
+        f"are only exchanged signed")
+
+
+def canonical_bytes(obj) -> bytes:
+    """The byte string signing and content addressing agree on."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+
+
+def content_id(cache_version: int, entries: Dict[str, Dict]) -> str:
+    """sha256 naming the decision set (schema + entries, nothing else)."""
+    return hashlib.sha256(
+        canonical_bytes({"cache_version": cache_version,
+                         "entries": entries})).hexdigest()
+
+
+def sign_payload(payload: Dict, key: str) -> str:
+    """HMAC-SHA256 over the canonical JSON of ``payload`` (sans signature)."""
+    unsigned = {k: v for k, v in payload.items() if k != "signature"}
+    return hmac.new(key.encode(), canonical_bytes(unsigned),
+                    hashlib.sha256).hexdigest()
+
+
+def _default_fingerprint() -> str:
+    from repro.obs.calibrate import device_fingerprint
+
+    return device_fingerprint()
+
+
+def _default_git_sha() -> str:
+    from repro.obs.ledger import git_sha
+
+    return git_sha()
+
+
+def build_payload(entries: Dict[str, Dict], *, key: str,
+                  cache_version: int = CACHE_VERSION,
+                  fingerprint: Optional[str] = None,
+                  git_sha: Optional[str] = None,
+                  source_cache: str = "") -> Dict:
+    """Assemble + sign a bundle payload from raw entry dicts (the export
+    path below; tests use it to craft adversarial bundles)."""
+    cid = content_id(cache_version, entries)
+    payload = {
+        "format": BUNDLE_FORMAT,
+        "bundle_version": BUNDLE_VERSION,
+        "cache_version": cache_version,
+        "manifest": {
+            "content_id": cid,
+            "fingerprint": (fingerprint if fingerprint is not None
+                            else _default_fingerprint()),
+            "git_sha": git_sha if git_sha is not None else _default_git_sha(),
+            "created": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(),
+            "entry_count": len(entries),
+            "source_cache": source_cache,
+        },
+        "entries": entries,
+    }
+    payload["signature"] = sign_payload(payload, key)
+    return payload
+
+
+def write_payload(payload: Dict, out: os.PathLike) -> Path:
+    """Write a signed payload atomically.  ``out`` names the file, or a
+    directory that gets the content-addressed default name."""
+    out = Path(out)
+    if out.is_dir():
+        out = out / f"{payload['manifest']['content_id'][:16]}{BUNDLE_SUFFIX}"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    tmp = out.with_suffix(out.suffix + ".tmp")
+    tmp.write_text(json.dumps(payload, indent=1))
+    os.replace(tmp, out)
+    return out
+
+
+def export_bundle(cache: TuningCache, out: os.PathLike, *,
+                  key: Optional[str] = None, strict: bool = False,
+                  fingerprint: Optional[str] = None,
+                  git_sha: Optional[str] = None) -> Path:
+    """Export ``cache`` as a signed bundle at ``out`` (file or directory).
+
+    Quarantined entries never cross the fleet boundary: dropped with a
+    warning, or — under ``strict`` — the export is refused with
+    :class:`BundleIntegrityError` naming them, mirroring
+    ``resilience.report --fail-on-quarantine``.
+    """
+    key = resolve_key(key)
+    entries: Dict[str, Dict] = {}
+    quarantined = []
+    for k, e in sorted(cache.items().items(), key=lambda kv: kv[0].encode()):
+        if e.quarantined:
+            quarantined.append(k.encode())
+            continue
+        entries[k.encode()] = e.to_dict()
+    if quarantined:
+        if strict:
+            raise BundleIntegrityError(
+                f"refusing strict export of {cache.path}: "
+                f"{len(quarantined)} quarantined entr"
+                f"{'y' if len(quarantined) == 1 else 'ies'} "
+                f"({', '.join(quarantined)}) — re-tune them first "
+                f"(resilience.report --fail-on-quarantine semantics)")
+        _warn(f"dropping {len(quarantined)} quarantined entr"
+              f"{'y' if len(quarantined) == 1 else 'ies'} from the export: "
+              f"{', '.join(quarantined)}")
+    payload = build_payload(entries, key=key, fingerprint=fingerprint,
+                            git_sha=git_sha, source_cache=str(cache.path))
+    path = write_payload(payload, out)
+    _warn(f"exported {len(entries)} entries as {path} "
+          f"(id {payload['manifest']['content_id'][:16]})")
+    return path
+
+
+def read_bundle(path: os.PathLike, *, key: Optional[str] = None) -> Dict:
+    """Read + validate one bundle file, returning the verified payload.
+
+    Every defect raises :class:`BundleIntegrityError`: unreadable JSON,
+    unknown format/version, signature mismatch (any mutated byte — a
+    re-used signature cannot cover altered content), content-id mismatch,
+    or a cache schema the v2–v6 migration path cannot carry forward.
+    """
+    key = resolve_key(key)
+    try:
+        text = Path(path).read_text()
+    except OSError as e:
+        raise BundleIntegrityError(f"cannot read bundle {path}: {e}") from e
+    try:
+        payload = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise BundleIntegrityError(
+            f"bundle {path} is not valid JSON ({e}) — truncated or "
+            f"bit-flipped in transit") from e
+    if not isinstance(payload, dict) or payload.get("format") != BUNDLE_FORMAT:
+        raise BundleIntegrityError(
+            f"bundle {path} has format {payload.get('format') if isinstance(payload, dict) else type(payload).__name__!r}, "
+            f"expected {BUNDLE_FORMAT!r}")
+    if payload.get("bundle_version") != BUNDLE_VERSION:
+        raise BundleIntegrityError(
+            f"bundle {path} has bundle_version "
+            f"{payload.get('bundle_version')!r}, this importer speaks "
+            f"{BUNDLE_VERSION}")
+    if faults.should_fire("bundle/tamper"):
+        # Injected in-flight mutation: skew one manifest field *after* the
+        # producer signed, exactly what a hostile artifact store could do.
+        # Verification below must catch it.
+        man = dict(payload.get("manifest") or {})
+        man["entry_count"] = int(man.get("entry_count") or 0) + 1
+        payload["manifest"] = man
+    sig = payload.get("signature")
+    expect = sign_payload(payload, key)
+    if not (isinstance(sig, str) and hmac.compare_digest(sig, expect)):
+        raise BundleIntegrityError(
+            f"bundle {path} signature mismatch — content was altered after "
+            f"signing, or it was signed with a different {FLEET_KEY_ENV}")
+    entries = payload.get("entries")
+    if not isinstance(entries, dict):
+        raise BundleIntegrityError(f"bundle {path} carries no entries object")
+    version = payload.get("cache_version")
+    cid = (payload.get("manifest") or {}).get("content_id")
+    if cid != content_id(version, entries):
+        raise BundleIntegrityError(
+            f"bundle {path} content_id does not name its own entries")
+    if version != CACHE_VERSION and version not in MIGRATABLE_VERSIONS:
+        raise BundleIntegrityError(
+            f"bundle {path} carries cache schema v{version}; this importer "
+            f"migrates {MIGRATABLE_VERSIONS} -> v{CACHE_VERSION} only")
+    return payload
+
+
+def parse_entry(entry_dict: Dict) -> TuneEntry:
+    """One bundle entry as a :class:`TuneEntry` (unknown fields ignored,
+    missing required fields raise — the import chain drops such entries)."""
+    return TuneEntry.from_dict(entry_dict)

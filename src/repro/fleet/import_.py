@@ -1,0 +1,260 @@
+"""Validated bundle import: the fleet's hostile-input consumption side.
+
+The chain a bundle runs before any of its decisions can serve dispatch::
+
+    signature check            (fleet/bundle.read_bundle — HMAC over
+      |                         canonical JSON; any flipped byte fails)
+    schema migration           (the cache's own v2–v6 path: per-entry
+      |                         _migration_drops + key re-encoding)
+    fingerprint gate           (exact obs.calibrate.device_fingerprint()
+      |                         match -> *trusted*; mismatch -> *advisory*)
+    quarantine filter          (quarantined entries are dropped, or the
+      |                         whole bundle rejected under strict=True)
+    three-way merge            (TuningCache.merge_entries: flock-guarded,
+                                measured-runtime-wins)
+
+Trust levels:
+
+  * **trusted** — the bundle was measured on hardware with the same device
+    fingerprint; its entries merge into the local flock-guarded cache and
+    serve ``variant="auto"`` dispatch directly (warm start: zero metered
+    candidates for covered shapes);
+  * **advisory** — a foreign fingerprint.  Entries land in an in-process
+    side table only: dispatch may use them as a *hint* when the local cache
+    has nothing, and the tuner seeds its stage-2 candidate order with them,
+    but they are never persisted as measured decisions and never bypass
+    measurement.
+
+Failure posture: :func:`import_bundle_guarded` absorbs every
+:class:`~repro.resilience.faults.BundleIntegrityError` (and plain I/O
+errors) into a ``kind="degradation"`` trace record and returns ``None`` —
+the replica's local cache stays byte-identical and it simply tunes fresh.
+A bad bundle must never crash a serving replica.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.fleet import bundle as bundle_mod
+from repro.resilience import faults, guard
+from repro.resilience.faults import BundleIntegrityError
+from repro.tuning.cache import (
+    CACHE_VERSION,
+    ShapeKey,
+    TuneEntry,
+    TuningCache,
+    _migration_drops,
+    default_cache,
+)
+
+__all__ = [
+    "ImportResult",
+    "advisory_entry",
+    "advisory_entries",
+    "clear_advisory",
+    "import_bundle",
+    "import_bundle_guarded",
+    "register_advisory",
+]
+
+
+def _warn(msg: str) -> None:
+    print(f"[fleet.import] {msg}", file=sys.stderr, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# advisory side table (in-process only — advisory decisions are hints, so
+# they must never survive into the persisted cache as measured entries)
+# ---------------------------------------------------------------------------
+
+_ADVISORY: Dict[str, TuneEntry] = {}
+_ADVISORY_LOCK = threading.Lock()
+
+
+def register_advisory(key_str: str, entry: TuneEntry) -> None:
+    with _ADVISORY_LOCK:
+        _ADVISORY[key_str] = dataclasses.replace(entry, source="advisory")
+
+
+def advisory_entry(key_str: str) -> Optional[TuneEntry]:
+    """The advisory hint for an encoded :class:`ShapeKey`, if any."""
+    with _ADVISORY_LOCK:
+        return _ADVISORY.get(key_str)
+
+
+def advisory_entries() -> Dict[str, TuneEntry]:
+    with _ADVISORY_LOCK:
+        return dict(_ADVISORY)
+
+
+def clear_advisory() -> None:
+    """Drop every advisory hint (tests; or after re-tuning a fleet)."""
+    with _ADVISORY_LOCK:
+        _ADVISORY.clear()
+
+
+# ---------------------------------------------------------------------------
+# import chain
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ImportResult:
+    """What one validated import did, for logs/tests/CLI output."""
+
+    bundle: str
+    bundle_id: str
+    fingerprint: str        # the bundle's manifest fingerprint
+    local_fingerprint: str  # this replica's device fingerprint
+    trusted: int = 0        # entries merged into the local cache
+    advisory: int = 0       # entries registered as hints only
+    dropped_quarantined: int = 0
+    dropped_stale: int = 0  # lost to schema migration / unparseable entries
+    inserted: int = 0       # merge stats (trusted path only)
+    replaced: int = 0
+    kept_local: int = 0
+
+    @property
+    def is_trusted(self) -> bool:
+        return self.fingerprint == self.local_fingerprint
+
+    def summary(self) -> str:
+        mode = "trusted" if self.is_trusted else "advisory"
+        return (f"bundle {self.bundle_id[:16]} [{mode}] "
+                f"trusted={self.trusted} advisory={self.advisory} "
+                f"dropped_quarantined={self.dropped_quarantined} "
+                f"dropped_stale={self.dropped_stale} "
+                f"merge(ins={self.inserted} repl={self.replaced} "
+                f"kept={self.kept_local})")
+
+
+def _local_fingerprint() -> str:
+    from repro.obs.calibrate import device_fingerprint
+
+    fp = device_fingerprint()
+    if faults.should_fire("bundle/stale-fingerprint"):
+        # Injected hardware drift: this replica now reports a fingerprint no
+        # exported bundle carries, so every import must downgrade to
+        # advisory — warm start off, measurement still mandatory.
+        fp = f"{fp}+stale-fault"
+    return fp
+
+
+def import_bundle(path, cache: Optional[TuningCache] = None, *,
+                  key: Optional[str] = None,
+                  strict: bool = False) -> ImportResult:
+    """Run one bundle through the full validated import chain.
+
+    Raises :class:`BundleIntegrityError` on any integrity defect — and,
+    under ``strict``, on the *presence* of quarantined entries (the import
+    twin of ``resilience.report --fail-on-quarantine`` and of strict
+    export).  On the non-strict path quarantined entries are dropped here,
+    so a quarantine can never cross the fleet boundary into a replica that
+    never observed the failure.
+    """
+    payload = bundle_mod.read_bundle(path, key=key)
+    manifest = payload["manifest"]
+    bundle_id = str(manifest.get("content_id", ""))
+    version = payload["cache_version"]
+
+    # --- quarantine filter + per-entry parse + schema migration ----------
+    entries: Dict[str, TuneEntry] = {}
+    dropped_q = 0
+    dropped_stale = 0
+    quarantined_keys = []
+    for key_str, ed in payload["entries"].items():
+        try:
+            entry = bundle_mod.parse_entry(ed)
+        except (TypeError, KeyError, ValueError):
+            dropped_stale += 1
+            continue
+        if entry.quarantined:
+            quarantined_keys.append(key_str)
+            continue
+        if version != CACHE_VERSION:
+            if _migration_drops(key_str, entry, version):
+                dropped_stale += 1
+                continue
+            try:
+                key_str = ShapeKey.decode(key_str).encode()
+            except (KeyError, ValueError):
+                dropped_stale += 1
+                continue
+        else:
+            try:  # a signed bundle can still carry a garbage key string
+                ShapeKey.decode(key_str)
+            except (KeyError, ValueError):
+                dropped_stale += 1
+                continue
+        entries[key_str] = entry
+    if quarantined_keys:
+        if strict:
+            raise BundleIntegrityError(
+                f"bundle {path} carries {len(quarantined_keys)} quarantined "
+                f"entr{'y' if len(quarantined_keys) == 1 else 'ies'} "
+                f"({', '.join(quarantined_keys)}); rejected under strict "
+                f"import")
+        dropped_q = len(quarantined_keys)
+        _warn(f"dropped {dropped_q} quarantined entr"
+              f"{'y' if dropped_q == 1 else 'ies'} at import: "
+              f"{', '.join(quarantined_keys)}")
+
+    # --- fingerprint gate -------------------------------------------------
+    local_fp = _local_fingerprint()
+    bundle_fp = str(manifest.get("fingerprint", ""))
+    result = ImportResult(bundle=str(path), bundle_id=bundle_id,
+                          fingerprint=bundle_fp, local_fingerprint=local_fp,
+                          dropped_quarantined=dropped_q,
+                          dropped_stale=dropped_stale)
+
+    if bundle_fp == local_fp:
+        # Trusted: same hardware measured these decisions.  Merge into the
+        # local flock-guarded cache (measured-runtime-wins) and let them
+        # serve dispatch directly.
+        the_cache = cache if cache is not None else default_cache()
+        tagged = {
+            k: dataclasses.replace(e, source=f"bundle:{bundle_id[:12]}")
+            for k, e in entries.items()}
+        stats = the_cache.merge_entries(tagged)
+        result.trusted = len(tagged)
+        result.inserted = stats["inserted"]
+        result.replaced = stats["replaced"]
+        result.kept_local = stats["kept_local"]
+    else:
+        # Advisory: foreign hardware.  Hints only — dispatch may borrow
+        # them when the local cache is empty, the tuner seeds stage 2 with
+        # them, but nothing is persisted and nothing bypasses measurement.
+        _warn(f"bundle {path} fingerprint {bundle_fp!r} != local "
+              f"{local_fp!r}: importing {len(entries)} entries as advisory "
+              f"(tuner hints; measurement still required)")
+        for k, e in entries.items():
+            register_advisory(k, e)
+        result.advisory = len(entries)
+    _warn(result.summary())
+    return result
+
+
+def import_bundle_guarded(path, cache: Optional[TuningCache] = None, *,
+                          key: Optional[str] = None,
+                          strict: bool = False) -> Optional[ImportResult]:
+    """:func:`import_bundle`, degraded instead of raised.
+
+    Any integrity or I/O failure becomes a ``kind="degradation"`` trace
+    record at site ``bundle/import`` and a ``None`` return: the local cache
+    is untouched and the caller tunes fresh.  This is the entry point every
+    serving surface (``default_cache`` auto-import, ``launch/serve.py
+    --bundle``, the replica sim) uses — a hostile bundle must never crash a
+    replica.
+    """
+    try:
+        return import_bundle(path, cache, key=key, strict=strict)
+    except (BundleIntegrityError, OSError) as e:
+        guard.record_degradation(
+            "bundle/import", bundle=str(path),
+            error=f"{type(e).__name__}: {e}",
+            action="bundle dropped; local cache untouched; tuning fresh")
+        return None

@@ -33,7 +33,23 @@ def main(argv=None) -> int:
     ap.add_argument("--trace", default="",
                     help="write the span trace (JSONL) here; phase timings "
                          "are read from the spans either way")
+    ap.add_argument("--bundle", default="",
+                    help="signed fleet tuning bundle (*.bundle.json) to "
+                         "import before serving (warm start; validated + "
+                         "degradation-guarded — a bad bundle logs a "
+                         "BundleIntegrityError degradation and serving "
+                         "proceeds with the local cache)")
     args = ap.parse_args(argv)
+
+    if args.bundle:
+        from repro.fleet import import_ as fleet_import
+        from repro.tuning.cache import default_cache
+
+        res = fleet_import.import_bundle_guarded(args.bundle,
+                                                 cache=default_cache())
+        print(f"[serve] bundle {args.bundle}: "
+              f"{res.summary() if res else 'rejected; tuning fresh'}",
+              flush=True)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     # The prefill/decode numbers below are the spans' own measurements

@@ -26,7 +26,7 @@ from typing import List
 
 from repro.kernels.common import DWConvDims
 from repro.kernels.epilogue import EPILOGUE_KEYS
-from repro.tuning.cache import TuningCache
+from repro.tuning.cache import ShapeKey, TuningCache
 from repro.tuning.space import PAPER_DIMS_CPU, PAPER_DIMS_FULL, PATHS
 from repro.tuning.tuner import tune_path
 
@@ -80,6 +80,19 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="CI mode: reduced paper batch, 1 timing iteration")
     ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--bundle", default="",
+                    help="signed fleet bundle to import first (warm start: "
+                         "keys it covers as trusted entries skip tuning)")
+    ap.add_argument("--export-bundle", default="",
+                    help="after tuning, export the cache as a signed bundle "
+                         "here (a file, or a directory for the "
+                         "content-addressed default name); requires "
+                         "REPRO_FLEET_KEY")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --export-bundle: refuse to export while any "
+                         "entry is quarantined (otherwise they are dropped); "
+                         "with --bundle: reject a bundle carrying "
+                         "quarantined entries outright")
     args = ap.parse_args(argv)
 
     shapes = parse_shapes(args.shapes, args.fast)
@@ -91,17 +104,41 @@ def main(argv=None) -> int:
     cache = TuningCache(args.cache) if args.cache else TuningCache()
     per_path = max(1, args.budget // len(paths))
 
+    if args.bundle:
+        from repro.fleet import import_ as fleet_import
+
+        res = fleet_import.import_bundle_guarded(args.bundle, cache=cache,
+                                                 strict=args.strict)
+        print(f"[tune] bundle {args.bundle}: "
+              f"{res.summary() if res else 'rejected; tuning fresh'}",
+              flush=True)
+
+    import jax  # deferred: key construction needs the active backend
+
+    backend = jax.default_backend()
     print(f"[tune] cache={cache.path} search={args.search} "
           f"budget={args.budget} ({per_path}/path) dtype={args.dtype}", flush=True)
     for d in shapes:
         for path in paths:
-            t0 = time.perf_counter()
+            epi = args.epilogue if path in ("fwd", "bwd_fused") else "none"
+            prev = cache.get(ShapeKey(
+                path=path, B=d.B, H=d.H, L=d.L, K=d.K, dtype=args.dtype,
+                backend=backend, padding=d.padding, epilogue=epi))
+            if args.bundle and prev is not None and not prev.quarantined:
+                print(f"[tune] warm: {path}/B{d.B}-H{d.H}-L{d.L}-K{d.K} "
+                      f"covered by cache/bundle ({prev.variant} "
+                      f"{prev.time_us:.1f}us, source={prev.source}); skipping",
+                      flush=True)
+                continue
+            # wall clock here only reports elapsed tuning time; candidate
+            # measurements sync inside cost.measure_candidate's timer
+            t0 = time.perf_counter()  # repro: noqa(REP002)
             res = tune_path(
                 d, path,
                 dtype=args.dtype, budget=per_path, search=args.search,
                 warmup=args.warmup, iters=iters, cache=cache,
                 verbose=args.verbose,
-                epilogue=args.epilogue if path in ("fwd", "bwd_fused") else "none",
+                epilogue=epi,
             )
             e = res.best
             print(
@@ -112,6 +149,12 @@ def main(argv=None) -> int:
                 flush=True,
             )
     print(f"[tune] wrote {len(cache)} entries to {cache.path}", flush=True)
+    if args.export_bundle:
+        from repro.fleet import bundle as fleet_bundle
+
+        out = fleet_bundle.export_bundle(cache, args.export_bundle,
+                                         strict=args.strict)
+        print(f"[tune] exported signed bundle {out}", flush=True)
     return 0
 
 

@@ -33,6 +33,7 @@ import datetime
 import json
 import os
 import re
+import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import HARDWARE, TPU_V5E, HardwareModel
@@ -285,10 +286,19 @@ def load_calibration(path: str) -> CalibratedHardware:
         return CalibratedHardware.from_dict(json.load(f))
 
 
+# fingerprint pairs already warned about: the mismatch is per-file identity,
+# not per-call, and a consumer probing the calibration every report must not
+# spam stderr.
+_MISMATCH_WARNED: set = set()
+
+
 def load_for_device(path: Optional[str] = None) -> Optional[CalibratedHardware]:
     """The persisted calibration for *this* runner, or ``None`` when missing
     or recorded on different hardware (a stale file must not lend its roofs
-    to a machine it never measured)."""
+    to a machine it never measured).  A fingerprint mismatch warns once,
+    naming both identities — a replica migrated to new hardware should know
+    *why* its calibrated roofs vanished, not silently fall back to
+    datasheet peaks."""
     path = path or default_calibration_path()
     if not os.path.exists(path):
         return None
@@ -296,4 +306,15 @@ def load_for_device(path: Optional[str] = None) -> Optional[CalibratedHardware]:
         cal = load_calibration(path)
     except (json.JSONDecodeError, TypeError, KeyError, ValueError):
         return None
-    return cal if cal.fingerprint == device_fingerprint() else None
+    current = device_fingerprint()
+    if cal.fingerprint != current:
+        pair = (path, cal.fingerprint, current)
+        if pair not in _MISMATCH_WARNED:
+            _MISMATCH_WARNED.add(pair)
+            print(f"[obs.calibrate] calibration {path} was measured on "
+                  f"{cal.fingerprint!r} but this runner is {current!r}; "
+                  f"ignoring it (datasheet roofs apply) — re-run "
+                  f"`python -m repro.obs.calibrate` on this hardware",
+                  file=sys.stderr, flush=True)
+        return None
+    return cal

@@ -11,6 +11,7 @@
               into one JSON artifact (the chaos CI job uploads it).
 """
 from repro.resilience.faults import (  # noqa: F401
+    BundleIntegrityError,
     CheckpointIOError,
     CorruptCacheEntryError,
     FaultPlan,

@@ -44,6 +44,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 __all__ = [
+    "BundleIntegrityError",
     "CheckpointIOError",
     "CorruptCacheEntryError",
     "FaultPlan",
@@ -97,6 +98,13 @@ class CheckpointIOError(ResilienceError, OSError):
     restores fall back to the previous intact step."""
 
 
+class BundleIntegrityError(ResilienceError):
+    """A fleet tuning-cache bundle failed validation (unreadable file, bad
+    or missing HMAC signature, content-id mismatch, unmigratable schema, or
+    quarantined entries under strict import).  Recoverable: the replica
+    drops the bundle, leaves its local cache untouched, and tunes fresh."""
+
+
 # ---------------------------------------------------------------------------
 # injection sites
 # ---------------------------------------------------------------------------
@@ -111,6 +119,8 @@ SITES: Tuple[str, ...] = (
     "ckpt/write",            # checkpoint/manager.py: _write raises CheckpointIOError
     "heartbeat/stall",       # launch/supervisor.py: Heartbeat.beat silently no-ops
     "tuner/slow-candidate",  # tuning/tuner.py: measured time inflated 1000x
+    "bundle/tamper",             # fleet/bundle.py: parsed bundle mutated pre-verify
+    "bundle/stale-fingerprint",  # fleet/import_.py: local fingerprint skewed
 )
 
 

@@ -78,6 +78,13 @@ CACHE_VERSION = 6
 # migrated.
 MIGRATABLE_VERSIONS = (2, 3, 4, 5)
 CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
+# Fleet warm start: a signed bundle (see repro.fleet.bundle) auto-imported —
+# through the full validated chain, degradation-guarded — into each fresh
+# default_cache() instance before its first lookup.
+BUNDLE_ENV_VAR = "REPRO_TUNE_BUNDLE"
+# Corrupt-file corpses (<path>.corrupt-<pid>) retained per cache path; older
+# ones are pruned so a crash-looping replica cannot fill the artifact dir.
+_MAX_CORRUPT_KEPT = 3
 # Anchored to the source tree (src/repro/tuning/ -> repo root), not the CWD:
 # a tuner run from the repo root and a training job launched from a scratch
 # directory must resolve the same database.
@@ -297,6 +304,30 @@ class TuningCache:
             self._warn(f"preserved corrupt cache as {side}")
         except OSError as e:  # pragma: no cover - preservation is best-effort
             self._warn(f"could not preserve corrupt cache {self.path}: {e}")
+        self._prune_corrupt_locked()
+
+    def _prune_corrupt_locked(self) -> None:
+        """Cap retained ``.corrupt-<pid>`` corpses at ``_MAX_CORRUPT_KEPT``
+        (newest by mtime survive): preservation must not grow unboundedly
+        under a crash-looping process.  Best-effort — pruning failures only
+        warn."""
+        try:
+            corpses = sorted(
+                self.path.parent.glob(self.path.name + ".corrupt-*"),
+                key=lambda p: p.stat().st_mtime, reverse=True)
+        except OSError:  # pragma: no cover - listing is best-effort
+            return
+        pruned = []
+        for old in corpses[_MAX_CORRUPT_KEPT:]:
+            try:
+                old.unlink()
+                pruned.append(old.name)
+            except OSError:  # pragma: no cover - best-effort
+                pass
+        if pruned:
+            self._warn(f"pruned {len(pruned)} old corrupt-cache corpse"
+                       f"{'' if len(pruned) == 1 else 's'} (keeping newest "
+                       f"{_MAX_CORRUPT_KEPT}): {', '.join(pruned)}")
 
     def save(self) -> None:
         with self._lock:
@@ -358,6 +389,51 @@ class TuningCache:
             self.save()
         return True
 
+    @staticmethod
+    def _same_config(a: TuneEntry, b: TuneEntry) -> bool:
+        return (a.variant == b.variant and a.block_h == b.block_h
+                and a.block_t == b.block_t and a.batch_chunk == b.batch_chunk)
+
+    @staticmethod
+    def _better_measurement(new: TuneEntry, cur: TuneEntry) -> bool:
+        """Measured-runtime-wins: a real measurement (time_us > 0) beats an
+        unmeasured decision; between two measurements the faster wins."""
+        new_m, cur_m = new.time_us > 0.0, cur.time_us > 0.0
+        if new_m != cur_m:
+            return new_m
+        return new_m and new.time_us < cur.time_us
+
+    def merge_entries(self, imported: Dict[str, TuneEntry], *,
+                      persist: bool = True) -> Dict[str, int]:
+        """Three-way merge of validated *trusted* entries (fleet import).
+
+        Per key: no local entry -> insert; local entry *quarantined* -> the
+        import replaces it only when it carries a **different**
+        configuration (the same config re-arriving must not launder a
+        decision this replica watched fail); otherwise measured-runtime-wins
+        (see ``_better_measurement``).  Persisting goes through :meth:`save`,
+        whose flock-guarded read-merge-replace keeps concurrent importers'
+        disjoint keys unioned.  Returns insert/replace/keep counts.
+        """
+        stats = {"inserted": 0, "replaced": 0, "kept_local": 0}
+        with self._lock:
+            self._load_locked()
+            for key_str, new in imported.items():
+                cur = self._entries.get(key_str)
+                if cur is None:
+                    self._entries[key_str] = new
+                    stats["inserted"] += 1
+                elif cur.quarantined and self._same_config(cur, new):
+                    stats["kept_local"] += 1
+                elif cur.quarantined or self._better_measurement(new, cur):
+                    self._entries[key_str] = new
+                    stats["replaced"] += 1
+                else:
+                    stats["kept_local"] += 1
+        if persist:
+            self.save()
+        return stats
+
     def items(self) -> Dict[ShapeKey, TuneEntry]:
         with self._lock:
             self._load_locked()
@@ -382,14 +458,35 @@ _CACHES: Dict[str, TuningCache] = {}
 _CACHES_LOCK = threading.Lock()
 
 
+def _auto_import_bundle(cache: TuningCache) -> None:
+    """Warm start: when ``REPRO_TUNE_BUNDLE`` names a signed bundle, run it
+    through the full validated fleet import chain into ``cache``.  Guarded —
+    a corrupt/tampered/stale bundle degrades to "tune fresh", never raises
+    out of ``default_cache``."""
+    spec = os.environ.get(BUNDLE_ENV_VAR, "").strip()
+    if not spec:
+        return
+    from repro.fleet import import_ as fleet_import  # deferred: fleet imports this module
+
+    fleet_import.import_bundle_guarded(spec, cache=cache)
+
+
 def default_cache(path: Optional[os.PathLike] = None) -> TuningCache:
-    """The memoized cache for ``path`` (or the env/default location)."""
+    """The memoized cache for ``path`` (or the env/default location).
+
+    The first touch of each distinct path auto-imports ``REPRO_TUNE_BUNDLE``
+    (if set) so a fresh serving replica warm-starts before its first
+    ``variant="auto"`` lookup.
+    """
     p = str(resolve_cache_path(path))
     with _CACHES_LOCK:
         c = _CACHES.get(p)
-        if c is None:
+        created = c is None
+        if created:
             c = _CACHES[p] = TuningCache(p)
-        return c
+    if created:
+        _auto_import_bundle(c)
+    return c
 
 
 def reset_default_cache() -> None:
@@ -403,12 +500,21 @@ def lookup(path: str, B: int, H: int, L: int, K: int, dtype: str,
            epilogue: str = "none") -> Optional[TuneEntry]:
     """The single entry point ``kernels/ops.py`` uses for auto dispatch.
 
+    Falls through local cache -> fleet advisory hints -> None (tune).
     Quarantined entries are invisible here — a decision that failed to
     execute must never be re-dispatched — while :meth:`TuningCache.get`
-    still returns them, so the tuner can see (and re-tune) the key."""
-    entry = default_cache().get(
-        ShapeKey(path=path, B=B, H=H, L=L, K=K, dtype=dtype, backend=backend,
-                 padding=padding, epilogue=epilogue))
-    if entry is not None and entry.quarantined:
-        return None
-    return entry
+    still returns them, so the tuner can see (and re-tune) the key.
+    Advisory entries (a foreign-fingerprint bundle import, see
+    ``repro.fleet.import_``) are consulted only on a local miss: a borrowed
+    hint beats the static defaults, but any locally measured decision beats
+    the hint — and the side table only exists if the fleet layer actually
+    ran, so the probe is a ``sys.modules`` lookup, not an import."""
+    key = ShapeKey(path=path, B=B, H=H, L=L, K=K, dtype=dtype,
+                   backend=backend, padding=padding, epilogue=epilogue)
+    entry = default_cache().get(key)
+    if entry is not None:
+        return None if entry.quarantined else entry
+    fleet = sys.modules.get("repro.fleet.import_")
+    if fleet is not None:
+        return fleet.advisory_entry(key.encode())
+    return None

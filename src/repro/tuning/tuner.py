@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import sys
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -185,6 +186,35 @@ def tune_path(
     # The baseline is metered first (within budget): the persisted winner
     # can then never regress what an untuned variant="auto" would run.
     meter(fallback_candidate(d, path))
+
+    # Fleet advisory seeding: a foreign-fingerprint bundle import
+    # (repro.fleet.import_) may hint a configuration for this key.  The hint
+    # is metered right after the baseline — seeding the stage-2 candidate
+    # order with another device's winner — but it competes on *this*
+    # device's measurements like every other candidate: advisory entries
+    # never bypass measurement.  The probe is a sys.modules lookup so the
+    # tuner stays fleet-free unless the fleet layer actually ran.
+    fleet = sys.modules.get("repro.fleet.import_")
+    hint_entry = fleet.advisory_entry(key.encode()) if fleet is not None else None
+    if hint_entry is not None and len(measured) < budget:
+        try:
+            hint = space.normalize(
+                Candidate(path=path, variant=hint_entry.variant,
+                          block_h=hint_entry.block_h,
+                          block_t=hint_entry.block_t,
+                          batch_chunk=hint_entry.batch_chunk), d)
+            legal, _ = space.is_legal(hint, d, itemsize=itemsize, hw=hw,
+                                      epilogue=epilogue)
+        except (KeyError, ValueError):
+            legal, hint = False, None  # foreign variant this build lacks
+        if legal and (banned is None or hint != banned):
+            if hint not in analytical:
+                try:
+                    analytical[hint] = cost.analytical_time_s(
+                        hint, d, itemsize=itemsize, hw=hw, epilogue=epilogue)
+                except (KeyError, ValueError):
+                    pass
+            meter(hint)
 
     if search == "grid":
         for c, _ in ranked:

@@ -17,6 +17,10 @@ Rules (see README "Static verification" for the rationale table):
           (``repro.kernels.ops``) instead of ``repro.perfmodel.geometry``
   REP005  tuning-cache state mutated outside ``repro.tuning`` — all cache
           writes must go through the versioned-schema API
+  REP006  fleet bundle / tuning-cache files read or written with direct
+          ``json.load``/``json.dump`` outside ``tuning/cache.py`` and
+          ``fleet/bundle.py`` — bundle I/O must pass signature validation
+          and the versioned schema (REP005's read-side sibling)
 
 Suppress a finding with a line comment ``# repro: noqa(REP002)`` (several
 codes comma-separated); undocumented blanket suppression is not supported
@@ -61,6 +65,10 @@ GEOMETRY_NAMES = {
 }
 
 _NOQA_RE = re.compile(r"#\s*repro:\s*noqa\(([^)]*)\)")
+
+# Direct JSON (de)serialization calls REP006 polices outside the two
+# modules allowed to touch bundle/cache bytes.
+_JSON_IO_CALLS = {"json.load", "json.loads", "json.dump", "json.dumps"}
 
 
 def _noqa_codes(lines: Sequence[str], lineno: int) -> Set[str]:
@@ -228,6 +236,47 @@ class _FileLint:
                           f"path outside repro.tuning — cache files must be "
                           f"written through TuningCache.save()")
 
+    # -- REP006 -------------------------------------------------------------
+    def check_bundle_io(self) -> None:
+        """Direct json I/O on fleet bundles (or reads of the resolved tuning
+        cache) outside the two modules allowed to touch those bytes.  Same
+        heuristic family as REP005: per function, a json.(load|dump)[s] call
+        plus evidence the function handles a bundle — a ``.bundle.json``
+        string constant, or any name/argument containing 'bundle' — or a
+        ``resolve_cache_path`` read (the read-side complement of REP005's
+        dump check)."""
+        if self.rel.endswith("/tuning/cache.py") \
+                or self.rel.endswith("/fleet/bundle.py"):
+            return
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            calls = {_call_name(c) for c in ast.walk(fn)
+                     if isinstance(c, ast.Call)}
+            if not (_JSON_IO_CALLS & calls):
+                continue
+            touches_bundle = any(
+                isinstance(n, ast.Constant) and isinstance(n.value, str)
+                and ".bundle.json" in n.value
+                for n in ast.walk(fn))
+            if not touches_bundle:
+                idents = {s.lower() for s in _names_in(fn) | _attrs_in(fn)}
+                idents |= {a.arg.lower() for a in ast.walk(fn)
+                           if isinstance(a, ast.arg)}
+                touches_bundle = any("bundle" in s for s in idents)
+            reads_cache = (
+                "resolve_cache_path" in {c.split(".")[-1] for c in calls}
+                and {"json.load", "json.loads"} & calls
+                and "/tuning/" not in self.rel)
+            if touches_bundle or reads_cache:
+                what = ("a fleet bundle" if touches_bundle
+                        else "the resolved tuning cache")
+                self.emit("REP006", fn.lineno,
+                          f"'{fn.name}' touches {what} with direct json I/O — "
+                          f"bundle/cache bytes go through repro.fleet.bundle "
+                          f"(signature-validated) or TuningCache (versioned "
+                          f"schema)")
+
 
 def lint_file(path: Path) -> List[Finding]:
     try:
@@ -245,6 +294,7 @@ def lint_file(path: Path) -> List[Finding]:
     fl.check_kernel_registration(_schedule_registry_keys())
     fl.check_geometry_imports()
     fl.check_cache_schema()
+    fl.check_bundle_io()
     return fl.findings
 
 

@@ -1,0 +1,383 @@
+"""Fleet tuning-cache distribution tests (repro.fleet): signed bundle
+export/import round-trip, tamper/wrong-key rejection with byte-identical
+local state, quarantine filtering across the fleet boundary (v6 fields
+end-to-end through export→import→lookup), fingerprint-gated trust levels
+(trusted merge vs advisory hints), measured-runtime-wins merge, schema
+migration, ``REPRO_TUNE_BUNDLE`` warm start, and the guarded degradation
+path.  No subprocesses here — the replica simulation lives in
+``benchmarks/paper_fleet.py`` and the CI fleet job.
+"""
+import json
+
+import jax
+import pytest
+
+from repro.fleet import bundle as fbundle
+from repro.fleet import import_ as fimport
+from repro.obs import trace as obs_trace
+from repro.obs.calibrate import device_fingerprint
+from repro.resilience import faults, guard
+from repro.resilience.faults import BundleIntegrityError
+from repro.tuning import cache as tcache
+from repro.tuning import tuner
+from repro.tuning.cache import ShapeKey, TuneEntry, TuningCache
+from repro.kernels.common import DWConvDims
+
+D = DWConvDims(B=2, H=4, L=48, K=5)
+FOREIGN_FP = "tpu:TPU v5e:x8"
+
+
+def _key(path="fwd", B=2, epilogue="none"):
+    return ShapeKey(path=path, B=B, H=4, L=48, K=5, dtype="float32",
+                    backend=jax.default_backend(), epilogue=epilogue)
+
+
+def _entry(variant="row", time_us=10.0, **kw):
+    return TuneEntry(variant=variant, block_h=8, block_t=512, batch_chunk=128,
+                     time_us=time_us, **kw)
+
+
+@pytest.fixture(autouse=True)
+def fleet_env(tmp_path, monkeypatch):
+    """Signing key installed, default cache redirected, all fleet/resilience
+    process state reset around every test."""
+    monkeypatch.setenv(fbundle.FLEET_KEY_ENV, "test-signing-key")
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, str(tmp_path / "local.json"))
+    monkeypatch.delenv(tcache.BUNDLE_ENV_VAR, raising=False)
+    tcache.reset_default_cache()
+    fimport.clear_advisory()
+    guard.clear()
+    faults.reset()
+    yield tmp_path
+    tcache.reset_default_cache()
+    fimport.clear_advisory()
+    guard.clear()
+    faults.reset()
+    obs_trace.configure(enabled=False)
+
+
+def _export(tmp_path, entries, name="a.bundle.json", **kw):
+    src = TuningCache(tmp_path / f"src-{name}.json")
+    for k, e in entries.items():
+        src.put(k, e)
+    return fbundle.export_bundle(src, tmp_path / name, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bundle format + signing
+# ---------------------------------------------------------------------------
+
+
+def test_export_import_round_trip_trusted(tmp_path):
+    p = _export(tmp_path, {_key(): _entry(time_us=12.5)})
+    payload = fbundle.read_bundle(p)
+    assert payload["cache_version"] == tcache.CACHE_VERSION
+    man = payload["manifest"]
+    assert man["fingerprint"] == device_fingerprint()
+    assert man["entry_count"] == 1
+    assert man["content_id"] == fbundle.content_id(
+        payload["cache_version"], payload["entries"])
+
+    res = fimport.import_bundle(p, tcache.default_cache())
+    assert res.is_trusted and res.trusted == 1 and res.advisory == 0
+    got = tcache.default_cache().get(_key())
+    assert got is not None and got.variant == "row"
+    assert got.time_us == pytest.approx(12.5)
+    assert got.source.startswith("bundle:"), "provenance tag missing"
+    # warm lookup serves it directly
+    assert tcache.lookup("fwd", 2, 4, 48, 5, "float32",
+                         jax.default_backend()) is not None
+
+
+def test_export_to_directory_is_content_addressed(tmp_path):
+    out = tmp_path / "store"
+    out.mkdir()
+    p = _export(tmp_path, {_key(): _entry()}, name=str(out))
+    payload = json.loads(p.read_text())
+    cid = payload["manifest"]["content_id"]
+    assert p.name == f"{cid[:16]}{fbundle.BUNDLE_SUFFIX}"
+
+
+def test_missing_or_wrong_key_rejected(tmp_path, monkeypatch):
+    p = _export(tmp_path, {_key(): _entry()})
+    with pytest.raises(BundleIntegrityError, match="signature mismatch"):
+        fbundle.read_bundle(p, key="a-different-key")
+    monkeypatch.delenv(fbundle.FLEET_KEY_ENV)
+    with pytest.raises(BundleIntegrityError, match="signing key"):
+        fbundle.read_bundle(p)
+    with pytest.raises(BundleIntegrityError, match="signing key"):
+        _export(tmp_path, {_key(): _entry()}, name="b.bundle.json")
+
+
+def test_tampered_bundle_rejected_cache_untouched(tmp_path):
+    """The acceptance property: flipped byte + re-used signature -> rejected
+    with BundleIntegrityError, local cache byte-identical, no quarantine
+    pollution, and the guarded path degrades instead of crashing."""
+    local = tcache.default_cache()
+    local.put(_key("bwd_in"), _entry("row", time_us=30.0))
+    before = local.path.read_bytes()
+
+    p = _export(tmp_path, {_key(): _entry(time_us=12.5)})
+    text = p.read_text()
+    bad = tmp_path / "bad.bundle.json"
+    bad.write_text(text.replace('"time_us": 12.5', '"time_us": 1.5'))
+    assert json.loads(bad.read_text()), "tamper must keep the JSON parseable"
+
+    with pytest.raises(BundleIntegrityError, match="signature mismatch"):
+        fbundle.read_bundle(bad)
+
+    tracer = obs_trace.configure(enabled=True)
+    assert fimport.import_bundle_guarded(bad, local) is None
+    assert local.path.read_bytes() == before, "local cache mutated"
+    assert not any(e.quarantined for e in local.items().values())
+    events = [e for e in guard.degradation_events()
+              if e["site"] == "bundle/import"]
+    assert len(events) == 1 and "BundleIntegrityError" in events[0]["error"]
+    assert any(r.get("kind") == "degradation" and r.get("site") == "bundle/import"
+               for r in tracer.records)
+
+
+def test_truncated_and_malformed_bundles_rejected(tmp_path):
+    p = _export(tmp_path, {_key(): _entry()})
+    torn = tmp_path / "torn.bundle.json"
+    torn.write_text(p.read_text()[: len(p.read_text()) // 2])
+    with pytest.raises(BundleIntegrityError, match="not valid JSON"):
+        fbundle.read_bundle(torn)
+    notabundle = tmp_path / "other.bundle.json"
+    notabundle.write_text(json.dumps({"version": 6, "entries": {}}))
+    with pytest.raises(BundleIntegrityError, match="format"):
+        fbundle.read_bundle(notabundle)
+    with pytest.raises(BundleIntegrityError, match="cannot read"):
+        fbundle.read_bundle(tmp_path / "missing.bundle.json")
+    # content-id forgery with a correctly re-signed payload still fails
+    payload = fbundle.build_payload({_key().encode(): _entry().to_dict()},
+                                    key="test-signing-key")
+    payload["manifest"]["content_id"] = "0" * 64
+    payload["signature"] = fbundle.sign_payload(payload, "test-signing-key")
+    forged = tmp_path / "forged.bundle.json"
+    fbundle.write_payload(payload, forged)
+    with pytest.raises(BundleIntegrityError, match="content_id"):
+        fbundle.read_bundle(forged)
+
+
+# ---------------------------------------------------------------------------
+# quarantine never crosses the fleet boundary
+# ---------------------------------------------------------------------------
+
+
+def test_quarantined_entries_dropped_at_export_and_strict_refuses(tmp_path):
+    src = TuningCache(tmp_path / "src.json")
+    src.put(_key(), _entry(time_us=12.0))
+    src.put(_key("bwd_in"), _entry("lane", time_us=20.0))
+    assert src.quarantine(_key("bwd_in"), reason="failed to lower")
+    with pytest.raises(BundleIntegrityError, match="quarantined"):
+        fbundle.export_bundle(src, tmp_path / "s.bundle.json", strict=True)
+    p = fbundle.export_bundle(src, tmp_path / "ok.bundle.json")
+    payload = fbundle.read_bundle(p)
+    assert list(payload["entries"]) == [_key().encode()]
+
+
+def test_quarantined_entries_filtered_at_import_end_to_end(tmp_path):
+    """v6 quarantine fields through a crafted bundle: non-strict import
+    drops them (lookup never sees them), strict import rejects the whole
+    bundle."""
+    qkey = _key("bwd_in")
+    payload = fbundle.build_payload(
+        {_key().encode(): _entry(time_us=9.0).to_dict(),
+         qkey.encode(): _entry("lane", quarantined=True,
+                               quarantine_reason="vmem blow-up").to_dict()},
+        key="test-signing-key")
+    p = fbundle.write_payload(payload, tmp_path / "q.bundle.json")
+
+    with pytest.raises(BundleIntegrityError, match="strict"):
+        fimport.import_bundle(p, tcache.default_cache(), strict=True)
+    assert len(tcache.default_cache()) == 0, "strict rejection merged entries"
+
+    res = fimport.import_bundle(p, tcache.default_cache())
+    assert res.dropped_quarantined == 1 and res.trusted == 1
+    assert tcache.default_cache().get(qkey) is None
+    assert tcache.lookup("bwd_in", 2, 4, 48, 5, "float32",
+                         jax.default_backend()) is None
+    assert tcache.lookup("fwd", 2, 4, 48, 5, "float32",
+                         jax.default_backend()) is not None
+
+
+# ---------------------------------------------------------------------------
+# fingerprint gate: trusted vs advisory
+# ---------------------------------------------------------------------------
+
+
+def test_foreign_fingerprint_imports_as_advisory_only(tmp_path):
+    p = _export(tmp_path, {_key(): _entry("block", time_us=5.0)},
+                fingerprint=FOREIGN_FP)
+    cache = tcache.default_cache()
+    res = fimport.import_bundle(p, cache)
+    assert not res.is_trusted and res.advisory == 1 and res.trusted == 0
+    assert len(cache) == 0, "advisory entries must never be persisted"
+    adv = fimport.advisory_entry(_key().encode())
+    assert adv is not None and adv.source == "advisory"
+    # dispatch fall-through: local miss -> advisory hint
+    hit = tcache.lookup("fwd", 2, 4, 48, 5, "float32", jax.default_backend())
+    assert hit is not None and hit.source == "advisory"
+    # a local measured decision beats the hint
+    cache.put(_key(), _entry("row", time_us=50.0))
+    hit = tcache.lookup("fwd", 2, 4, 48, 5, "float32", jax.default_backend())
+    assert hit.variant == "row" and hit.source == "measured"
+
+
+def test_advisory_seeds_tuner_stage2_but_never_bypasses_measurement(tmp_path):
+    hint_entry = TuneEntry(variant="block", block_h=4, block_t=512,
+                           batch_chunk=128, time_us=1.0)
+    p = _export(tmp_path, {_key(B=2): hint_entry}, fingerprint=FOREIGN_FP)
+    fimport.import_bundle(p, tcache.default_cache())
+
+    def stub(c, d):  # the hint's config is NOT the stub's winner
+        return 50.0 if c.variant == "row" else 80.0 + abs(c.block_h - 4)
+
+    res = tuner.tune_path(D, "fwd", budget=2, measure_fn=stub,
+                          backend=jax.default_backend(), persist=False)
+    metered = [h[0] for h in res.history]
+    assert any(c.variant == "block" and c.block_h == 4 for c in metered), (
+        "advisory hint was not seeded into the measured set")
+    # measurement won: the locally faster baseline beats the foreign hint
+    assert res.best.variant == "row"
+    assert res.candidates_measured <= 2
+
+
+def test_stale_fingerprint_fault_downgrades_to_advisory(tmp_path):
+    p = _export(tmp_path, {_key(): _entry()})
+    with faults.FaultPlan.parse("bundle/stale-fingerprint"):
+        res = fimport.import_bundle(p, tcache.default_cache())
+    assert not res.is_trusted and res.advisory == 1
+    assert len(tcache.default_cache()) == 0
+
+
+def test_bundle_tamper_fault_site_is_caught_by_signature(tmp_path):
+    p = _export(tmp_path, {_key(): _entry()})
+    with faults.FaultPlan.parse("bundle/tamper"):
+        with pytest.raises(BundleIntegrityError, match="signature mismatch"):
+            fbundle.read_bundle(p)
+    fbundle.read_bundle(p)  # plan exited: the same file verifies again
+
+
+# ---------------------------------------------------------------------------
+# three-way merge: measured-runtime-wins
+# ---------------------------------------------------------------------------
+
+
+def test_merge_measured_runtime_wins(tmp_path):
+    cache = tcache.default_cache()
+    cache.put(_key(B=2), _entry("row", time_us=30.0))    # slower local
+    cache.put(_key(B=4), _entry("row", time_us=5.0))     # faster local
+    cache.put(_key(B=8), _entry("row", time_us=0.0, source="manual"))
+    p = _export(tmp_path, {
+        _key(B=2): _entry("block", time_us=10.0),   # faster -> replaces
+        _key(B=4): _entry("block", time_us=20.0),   # slower -> kept local
+        _key(B=8): _entry("block", time_us=15.0),   # measured beats unmeasured
+        _key(B=16): _entry("block", time_us=7.0),   # new -> inserted
+    })
+    res = fimport.import_bundle(p, cache)
+    assert (res.inserted, res.replaced, res.kept_local) == (1, 2, 1)
+    assert cache.get(_key(B=2)).variant == "block"
+    assert cache.get(_key(B=4)).variant == "row"
+    assert cache.get(_key(B=8)).variant == "block"
+    assert cache.get(_key(B=16)).variant == "block"
+
+
+def test_merge_never_launders_a_quarantined_decision(tmp_path):
+    """The exact config this replica watched fail must stay quarantined even
+    when a bundle re-delivers it; a *different* imported decision replaces
+    the quarantined one (it measured elsewhere and will be re-verified by
+    guarded dispatch here)."""
+    cache = tcache.default_cache()
+    cache.put(_key(B=2), _entry("lane"))
+    cache.quarantine(_key(B=2), reason="failed here")
+    cache.put(_key(B=4), _entry("lane"))
+    cache.quarantine(_key(B=4), reason="failed here")
+    p = _export(tmp_path, {
+        _key(B=2): _entry("lane", time_us=3.0),     # same config re-arrives
+        _key(B=4): _entry("block", time_us=3.0),    # different config
+    })
+    fimport.import_bundle(p, cache)
+    still = cache.get(_key(B=2))
+    assert still.quarantined and still.quarantine_reason == "failed here"
+    swapped = cache.get(_key(B=4))
+    assert not swapped.quarantined and swapped.variant == "block"
+
+
+# ---------------------------------------------------------------------------
+# schema migration
+# ---------------------------------------------------------------------------
+
+
+def test_v5_bundle_migrates_and_v1_is_rejected(tmp_path):
+    old_key = "fwd/B2-H4-L48-K5/same/float32/cpu"  # pre-v5: no epilogue part
+    entry5 = {k: v for k, v in _entry(time_us=8.0).to_dict().items()
+              if k not in ("quarantined", "quarantine_reason")}
+    payload = fbundle.build_payload({old_key: entry5}, key="test-signing-key",
+                                    cache_version=5)
+    p = fbundle.write_payload(payload, tmp_path / "v5.bundle.json")
+    cache = TuningCache(tmp_path / "dst.json")
+    res = fimport.import_bundle(p, cache)
+    assert res.trusted == 1 and res.dropped_stale == 0
+    normalized = ShapeKey.decode(old_key)
+    got = cache.get(normalized)
+    assert got is not None and not got.quarantined
+    assert normalized.encode().endswith("/none"), "key not normalized to v6"
+
+    p1 = fbundle.write_payload(
+        fbundle.build_payload({old_key: entry5}, key="test-signing-key",
+                              cache_version=1), tmp_path / "v1.bundle.json")
+    with pytest.raises(BundleIntegrityError, match="schema v1"):
+        fbundle.read_bundle(p1)
+
+
+def test_garbage_keys_in_signed_bundle_are_dropped_not_fatal(tmp_path):
+    payload = fbundle.build_payload(
+        {"not/a/key": _entry().to_dict(),
+         _key().encode(): _entry(time_us=4.0).to_dict()},
+        key="test-signing-key")
+    p = fbundle.write_payload(payload, tmp_path / "g.bundle.json")
+    res = fimport.import_bundle(p, tcache.default_cache())
+    assert res.trusted == 1 and res.dropped_stale == 1
+
+
+# ---------------------------------------------------------------------------
+# warm start: REPRO_TUNE_BUNDLE auto-import
+# ---------------------------------------------------------------------------
+
+
+def test_env_bundle_auto_imports_on_first_default_cache_touch(
+        tmp_path, monkeypatch):
+    p = _export(tmp_path, {_key(): _entry(time_us=6.0)})
+    monkeypatch.setenv(tcache.BUNDLE_ENV_VAR, str(p))
+    tcache.reset_default_cache()
+    hit = tcache.lookup("fwd", 2, 4, 48, 5, "float32", jax.default_backend())
+    assert hit is not None and hit.source.startswith("bundle:")
+
+
+def test_env_bundle_corrupt_degrades_without_crashing(tmp_path, monkeypatch):
+    bad = tmp_path / "bad.bundle.json"
+    bad.write_text("{definitely not a bundle")
+    monkeypatch.setenv(tcache.BUNDLE_ENV_VAR, str(bad))
+    tcache.reset_default_cache()
+    assert tcache.lookup("fwd", 2, 4, 48, 5, "float32",
+                         jax.default_backend()) is None
+    assert any(e["site"] == "bundle/import"
+               for e in guard.degradation_events())
+
+
+# ---------------------------------------------------------------------------
+# sim helpers (no subprocesses)
+# ---------------------------------------------------------------------------
+
+
+def test_sim_tamper_keeps_json_parseable_but_breaks_signature(tmp_path):
+    from repro.fleet import sim
+
+    p = _export(tmp_path, {_key(): _entry()})
+    bad = tmp_path / "t.bundle.json"
+    sim.tamper_bundle(p, bad)
+    assert json.loads(bad.read_text())
+    with pytest.raises(BundleIntegrityError, match="signature mismatch"):
+        fbundle.read_bundle(bad)

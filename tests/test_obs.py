@@ -215,6 +215,25 @@ def test_load_for_device_fingerprint_mismatch(tmp_path, monkeypatch):
     assert load_for_device() is None          # corrupt file -> None, no raise
 
 
+def test_load_for_device_mismatch_warns_once_naming_both(
+        tmp_path, monkeypatch, capsys):
+    from repro.obs import calibrate as cal_mod
+
+    cal = run_calibration(base=TPU_V5E, fast=True, iters=1)
+    other = CalibratedHardware(**{**cal.__dict__, "fingerprint": "gpu:h100:x8"})
+    p = str(tmp_path / "cal.json")
+    save_calibration(other, p)
+    monkeypatch.setenv("REPRO_CALIBRATION", p)
+    monkeypatch.setattr(cal_mod, "_MISMATCH_WARNED", set())
+    assert load_for_device() is None
+    err = capsys.readouterr().err
+    assert "gpu:h100:x8" in err and cal_mod.device_fingerprint() in err, (
+        "the warning must name both fingerprints")
+    assert "re-run" in err
+    assert load_for_device() is None          # second probe: same pair,
+    assert capsys.readouterr().err == ""      # one warning only
+
+
 # ---------------------------------------------------------------------------
 # ledger + regression gate
 # ---------------------------------------------------------------------------

@@ -455,3 +455,80 @@ def test_tune_then_auto_dispatch_round_trip(tmp_cache):
         np.asarray(ops.dwconv_fwd_op(x, k, d.padding, "auto",
                                      ops.KernelOptions(interpret=True))),
         np.asarray(ref.dwconv_fwd_ref(x, k, d.padding)), atol=1e-5)
+
+
+def test_concurrent_bundle_imports_union_under_file_lock(tmp_path, monkeypatch):
+    """Two importers (own cache instances, exactly like separate serving
+    replicas sharing ``REPRO_TUNE_CACHE``) merge different signed bundles
+    into one cache file concurrently: the flock-guarded read-merge-replace
+    in ``merge_entries`` -> ``save`` must union the entry sets, never
+    last-writer-wins away either bundle."""
+    import threading
+
+    from repro.fleet import bundle as fbundle
+    from repro.fleet import import_ as fimport
+
+    monkeypatch.setenv(fbundle.FLEET_KEY_ENV, "union-test-key")
+    shared = tmp_path / "shared.json"
+
+    def make_bundle(tag, b_values):
+        src = TuningCache(tmp_path / f"src-{tag}.json")
+        for b in b_values:
+            src.put(ShapeKey(path="fwd", B=b, H=4, L=48, K=5,
+                             dtype="float32", backend="cpu"),
+                    TuneEntry(variant="row", block_h=4, block_t=512,
+                              batch_chunk=128, time_us=float(b)))
+        return fbundle.export_bundle(src, tmp_path / f"{tag}.bundle.json",
+                                     fingerprint="cpu:cpu:x1")
+
+    bundles = [make_bundle("a", (1, 2, 3, 4)), make_bundle("b", (5, 6, 7, 8))]
+    # pin the fingerprint so both imports take the trusted (merging) path
+    monkeypatch.setattr("repro.fleet.import_._local_fingerprint",
+                        lambda: "cpu:cpu:x1")
+    barrier = threading.Barrier(2)
+    errors = []
+
+    def importer(path):
+        try:
+            cache = TuningCache(shared)  # own instance: no shared in-process lock
+            barrier.wait()
+            fimport.import_bundle(path, cache)
+        except Exception as e:  # pragma: no cover - surfaced via assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=importer, args=(b,)) for b in bundles]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    fresh = TuningCache(shared)
+    got = {k.B for k in fresh.items()}
+    assert got == set(range(1, 9)), (
+        f"concurrent bundle imports lost entries: {sorted(got)}")
+
+
+def test_corrupt_corpses_are_capped(tmp_path, capsys):
+    """A crash-looping replica preserving its corrupt cache every restart
+    must not fill the artifact dir: only the newest ``_MAX_CORRUPT_KEPT``
+    ``.corrupt-<pid>`` corpses survive a new preservation."""
+    import os
+
+    p = tmp_path / "cache.json"
+    for i in range(5):  # five prior crashes, oldest first by mtime
+        side = p.with_name(p.name + f".corrupt-{9000000 + i}")
+        side.write_text("{old corpse")
+        os.utime(side, (i, i))
+    p.write_text("{not json")
+    c = TuningCache(p)
+    assert c.get(ShapeKey(path="fwd", B=2, H=4, L=48, K=5, dtype="float32",
+                          backend="cpu")) is None  # marks _disk_corrupt
+    c.put(ShapeKey(path="fwd", B=2, H=4, L=48, K=5, dtype="float32",
+                   backend="cpu"),
+          TuneEntry(variant="row", block_h=4, block_t=512, batch_chunk=128))
+    corpses = sorted(q.name for q in tmp_path.glob("cache.json.corrupt-*"))
+    assert len(corpses) == tcache._MAX_CORRUPT_KEPT
+    assert f"cache.json.corrupt-{os.getpid()}" in corpses, (
+        "the newest corpse (this preservation) must survive the prune")
+    err = capsys.readouterr().err
+    assert "pruned 3 old corrupt-cache corpses" in err

@@ -310,6 +310,57 @@ def test_rep005_cache_write_bypass(tmp_path):
     assert [f.code for f in findings] == ["REP005"]
 
 
+def test_rep006_bundle_json_io_bypass(tmp_path):
+    # Reading a fleet bundle with bare json sidesteps the HMAC validation
+    # chain in repro.fleet.bundle — exactly what REP006 exists to catch.
+    findings = _lint_fixture(tmp_path, "launch/rogue.py", """
+        import json
+
+        def load_entries(bundle_path):
+            with open(bundle_path) as f:
+                return json.load(f)["entries"]
+        """)
+    assert [f.code for f in findings] == ["REP006"]
+
+
+def test_rep006_cache_read_bypass(tmp_path):
+    # The read-side complement of REP005: json.load of the resolved cache
+    # path skips TuningCache's version gate and entry salvaging.
+    findings = _lint_fixture(tmp_path, "obs/peek.py", """
+        import json
+        from repro.tuning.cache import resolve_cache_path
+
+        def peek():
+            with open(resolve_cache_path()) as f:
+                return json.load(f)
+        """)
+    assert [f.code for f in findings] == ["REP006"]
+
+
+def test_rep006_scoped_to_the_two_io_owners(tmp_path):
+    # fleet/bundle.py and tuning/cache.py ARE the validated I/O layer.
+    source = """
+        import json
+
+        def write_bundle(payload, bundle_path):
+            bundle_path.write_text(json.dumps(payload))
+        """
+    assert _lint_fixture(tmp_path, "fleet/bundle.py", source) == []
+    assert _lint_fixture(tmp_path, "tuning/cache.py", source) == []
+    assert [f.code for f in _lint_fixture(tmp_path, "fleet/other.py", source)] \
+        == ["REP006"]
+
+
+def test_rep006_json_without_bundle_context_is_clean(tmp_path):
+    findings = _lint_fixture(tmp_path, "obs/metrics.py", """
+        import json
+
+        def dump_metrics(metrics, path):
+            path.write_text(json.dumps(metrics))
+        """)
+    assert findings == []
+
+
 def test_lint_cli_clean_on_repo():
     assert lint_mod.main([str(SRC_REPRO)]) == 0
 
