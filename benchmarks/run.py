@@ -42,6 +42,7 @@ MODULE_NAMES = [
     "paper_fused_bwd",
     "paper_longseq",
     "paper_epilogue",
+    "paper_decode",
     "s4convd_e2e",
     "roofline_table",
     "paper_fleet",
@@ -54,6 +55,8 @@ _STABLE_METRIC_KEYS = (
     "epilogue_fused_speedup",
     "report_memory_bound_fraction",
     "fleet_warm_metered_candidates",
+    "decode_tokens_per_s",
+    "decode_p99_step_s",
 )
 
 

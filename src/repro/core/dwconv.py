@@ -244,6 +244,71 @@ def dwconv_act(
     return _dwconv_act(x, k, bias, padding, act, variant, opts)
 
 
+# ---------------------------------------------------------------------------
+# Streaming decode: fused single-step ring-buffer conv (inference only)
+# ---------------------------------------------------------------------------
+
+
+def decode_variant_for(variant: str) -> str:
+    """Map an operator variant name onto the decode path's variant axis.
+
+    Decode-native names ("rows", "chanblock", "xla", "auto") pass through.
+    A model-level variant spec (the one-argument switch models thread
+    through ``conv_variant``) maps by its forward family: a pure-XLA spec
+    runs the fused-elementwise reference step, any Pallas spec resolves
+    through the decode tuning cache ("auto" — the fwd tile names mean
+    nothing at L=1, where channels ride the lane axis instead of time).
+    """
+    if variant in ops.DECODE_VARIANTS or variant == "auto":
+        return variant
+    spec = get_variant(variant)  # validates the name
+    return "xla" if spec.fwd == "xla" else "auto"
+
+
+def train_variant_for(variant: str) -> str:
+    """Inverse companion of :func:`decode_variant_for`: map a decode-native
+    variant name onto the full-sequence (train/prefill) conv switch, so one
+    ``conv_variant`` setting drives both phases.  Decode tile names mean
+    nothing at full L, so they resolve through the fwd tuning cache."""
+    if variant in ("rows", "chanblock"):
+        return "auto"
+    return variant
+
+
+def dwconv_decode(
+    ring: jnp.ndarray,
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    act: str = "none",
+    variant: str = "xla",
+    opts: Optional[ops.KernelOptions] = None,
+):
+    """One fused streaming-decode conv step -> ``(y, new_ring)``.
+
+    ring: (B, H, K-1) — the last K-1 pre-conv inputs, oldest tap first (the
+    Mamba ``conv_state`` idiom); x: (B, H) the new step's input; k: (H, K);
+    bias: (H,) or None.  Computes ``y = act(sum_j taps[j] * k[:, j] + bias)``
+    with the new input as tap K-1, and returns the shifted ring alongside —
+    O(B*H*K) bytes per step against O(B*H*L) for re-running the full conv
+    over a sequence cache.  Inference-only (no VJP): decode never
+    differentiates.  ``variant`` accepts both decode-native names and the
+    model-level variant switch (see :func:`decode_variant_for`).
+    """
+    if ring.ndim != 3 or x.ndim != 2 or k.ndim != 2:
+        raise ValueError(
+            f"bad shapes ring={ring.shape} x={x.shape} k={k.shape}; want "
+            f"(B, H, K-1), (B, H), (H, K)")
+    if act not in ACTS:
+        raise ValueError(f"unknown act {act!r}; known: {ACTS}")
+    if bias is not None and bias.shape != (x.shape[1],):
+        raise ValueError(
+            f"bias must be per-channel ({x.shape[1]},), got {bias.shape}")
+    return ops.dwconv_decode_op(ring, x, k, decode_variant_for(variant),
+                                opts, bias=bias, act=act)
+
+
 # Convenience aliases used by the operator-study benchmarks: run a single
 # execution path under a named variant without autodiff plumbing.
 def run_fwd(x, k, padding="same", variant="row", opts=None):

@@ -1,0 +1,200 @@
+"""Pallas TPU kernels — streaming-decode path: fused single-step ring conv.
+
+Decode generates one token at a time, so the per-step depthwise-conv work
+is not a convolution over the cached sequence but a K-tap dot against a
+ring buffer of the last K-1 pre-conv inputs (the Mamba/S4 ``conv_state``
+idiom; ``models/ssm.py`` carries exactly this state).  These kernels fuse
+the whole step:
+
+    ring shift + K-tap dot + bias/act epilogue
+
+into one launch with the ring buffer as carried state: read the (B, K-1, C)
+ring and the (B, 1, C) new input, produce the (B, 1, C) activation output
+*and* the shifted (B, K-1, C) new ring, touching HBM exactly once per
+operand.  Per-step traffic is O(B*C*K) bytes against O(B*C*L) for re-running
+the full conv over the cache — the most extreme memory-bound regime in the
+repo (arithmetic intensity ~K flops per ring byte round-trip).
+
+Layout: at L=1 the temporal axis degenerates, so **channels ride the lane
+axis** — ``ops.py`` transposes to channel-last ``(B, K-1, Hp)`` / ``(B, 1,
+Hp)`` with the channel axis padded to a lane-aligned tile ``Hl`` (the
+``block_t`` knob, reused as the channel tile at decode).  Weights arrive as
+a (K, Hp) tap-major block, bias as a (1, Hp) row.
+
+Two variants (the ``variant="auto"`` study axis for this path):
+
+  rows      : grid (nH,); the whole padded slot pool (Bp rows) is staged
+              per channel tile — minimal grid, VMEM grows with Bp.
+  chanblock : grid (nB, nH); the pool is chunked into ``batch_chunk``-row
+              blocks — Bp-independent VMEM, more cells.
+
+Both accumulate in f32 with ascending taps (ring taps 0..K-2 then the new
+input as tap K-1) — the same operation order as ``ref.dwconv_decode_ref``
+and the full-sequence ``ref._fwd_acc``.  The two variants are bit-identical
+to *each other*; against the XLA reference they match to FMA-contraction
+rounding (~1 ulp), exactly like the rest of the Pallas family vs ``ref.py``
+(the reference step chain itself is bit-identical to one causal
+``dwconv_act`` over the stream for f32 ``act="none"``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, cdiv
+from repro.kernels.epilogue import apply_act
+
+
+def _epilogue_lanes(acc: jnp.ndarray, b_ref, act: str) -> jnp.ndarray:
+    """In-register epilogue on the f32 accumulator, channels-on-lanes layout:
+    the bias block is a (1, Hl) row, broadcast over the batch sublanes.  For
+    ``b_ref=None, act='none'`` this is the identity — the trivial path stays
+    bit-identical to the bias-free kernel."""
+    if b_ref is not None:
+        acc = acc + b_ref[0, :].astype(jnp.float32)[None, :]
+    return apply_act(acc, act)
+
+
+def _decode_kernel(r_ref, x_ref, k_ref, *rest, K: int, act: str):
+    """Fused single-step body: K-tap dot from VMEM, epilogue, ring shift.
+
+    r_ref: (Bb, K-1, Hl) ring (oldest tap first), x_ref: (Bb, 1, Hl) new
+    input, k_ref: (K, Hl) taps; outputs y (Bb, 1, Hl) and the shifted ring
+    (Bb, K-1, Hl).
+    """
+    b_ref, (y_ref, nr_ref) = (rest[0], rest[1:]) if len(rest) == 3 else (None, rest)
+    ring = r_ref[...]
+    xv = x_ref[...]
+    kv = k_ref[...].astype(jnp.float32)
+    acc = jnp.zeros((ring.shape[0], ring.shape[2]), jnp.float32)
+    for j in range(K - 1):  # static unroll, ascending taps (matches ref.py)
+        acc = acc + ring[:, j, :].astype(jnp.float32) * kv[j][None, :]
+    acc = acc + xv[:, 0, :].astype(jnp.float32) * kv[K - 1][None, :]
+    y_ref[...] = _epilogue_lanes(acc, b_ref, act).astype(y_ref.dtype)[:, None, :]
+    nr_ref[...] = jnp.concatenate([ring[:, 1:, :], xv], axis=1)
+
+
+def _decode_geometry(ringT, xT, kT, K: int, block_c: int) -> Tuple[int, int, int, int]:
+    """Shared wrapper legality + tiling.  Returns (Bp, Km1, Hl, nH)."""
+    Bp, Km1, Hp = ringT.shape
+    if K != Km1 + 1:
+        raise ValueError(
+            f"ring depth K-1={Km1} does not match K={K} taps; the ring must "
+            f"hold exactly the last K-1 inputs")
+    if K < 2:
+        raise ValueError(
+            f"decode kernels need K >= 2 (K-1 >= 1 ring taps); K={K} has an "
+            f"empty ring — run the XLA reference instead")
+    if xT.shape != (Bp, 1, Hp):
+        raise ValueError(
+            f"step input shape {xT.shape} does not match ring pool "
+            f"(B={Bp}, 1, Hp={Hp})")
+    if kT.shape != (K, Hp):
+        raise ValueError(
+            f"tap block shape {kT.shape} does not match (K={K}, Hp={Hp})")
+    Hl = min(block_c, Hp)
+    if Hl % LANE != 0:
+        raise ValueError(
+            f"channel tile Hl={Hl} is not lane-aligned (Hl % {LANE} != 0); "
+            f"choose KernelOptions.block_t as a multiple of {LANE}")
+    if Hp % Hl != 0:
+        raise ValueError(
+            f"padded channels Hp={Hp} are not divisible by the channel tile "
+            f"Hl={Hl}; ops.py must pad the channel axis to the tile")
+    return Bp, Km1, Hl, Hp // Hl
+
+
+def dwconv_decode_rows(
+    ringT: jnp.ndarray,
+    xT: jnp.ndarray,
+    kT: jnp.ndarray,
+    *,
+    K: int,
+    block_c: int = 512,
+    interpret: bool = True,
+    bias=None,
+    act: str = "none",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Whole-pool staging: grid (nH,), the full Bp-slot pool per channel tile.
+
+    ringT: (Bp, K-1, Hp), xT: (Bp, 1, Hp), kT: (K, Hp), bias: (1, Hp) or
+    None -> (y (Bp, 1, Hp), new_ring (Bp, K-1, Hp)).
+    """
+    Bp, Km1, Hl, nH = _decode_geometry(ringT, xT, kT, K, block_c)
+    grid = (nH,)
+    in_specs = [
+        pl.BlockSpec((Bp, Km1, Hl), lambda h: (0, 0, h)),
+        pl.BlockSpec((Bp, 1, Hl), lambda h: (0, 0, h)),
+        pl.BlockSpec((K, Hl), lambda h: (0, h)),
+    ]
+    operands = [ringT, xT, kT]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, Hl), lambda h: (0, h)))
+        operands.append(bias)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, K=K, act=act),
+        out_shape=(
+            jax.ShapeDtypeStruct((Bp, 1, ringT.shape[2]), xT.dtype),
+            jax.ShapeDtypeStruct(ringT.shape, ringT.dtype),
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((Bp, 1, Hl), lambda h: (0, 0, h)),
+            pl.BlockSpec((Bp, Km1, Hl), lambda h: (0, 0, h)),
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+def dwconv_decode_chanblock(
+    ringT: jnp.ndarray,
+    xT: jnp.ndarray,
+    kT: jnp.ndarray,
+    *,
+    K: int,
+    block_c: int = 512,
+    batch_chunk: int = 128,
+    interpret: bool = True,
+    bias=None,
+    act: str = "none",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batch-chunked staging: grid (nB, nH), Bp-independent VMEM.
+
+    Same operand layout as :func:`dwconv_decode_rows`; the slot pool must be
+    padded to a multiple of ``batch_chunk`` rows (ops.py pads).
+    """
+    Bp, Km1, Hl, nH = _decode_geometry(ringT, xT, kT, K, block_c)
+    Bc = min(batch_chunk, Bp)
+    if Bp % Bc != 0:
+        raise ValueError(
+            f"slot pool Bp={Bp} is not divisible by batch_chunk={Bc}; ops.py "
+            f"must pad the batch axis to the chunk")
+    grid = (Bp // Bc, nH)
+    in_specs = [
+        pl.BlockSpec((Bc, Km1, Hl), lambda b, h: (b, 0, h)),
+        pl.BlockSpec((Bc, 1, Hl), lambda b, h: (b, 0, h)),
+        pl.BlockSpec((K, Hl), lambda b, h: (0, h)),
+    ]
+    operands = [ringT, xT, kT]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, Hl), lambda b, h: (0, h)))
+        operands.append(bias)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, K=K, act=act),
+        out_shape=(
+            jax.ShapeDtypeStruct((Bp, 1, ringT.shape[2]), xT.dtype),
+            jax.ShapeDtypeStruct(ringT.shape, ringT.dtype),
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((Bc, 1, Hl), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((Bc, Km1, Hl), lambda b, h: (b, 0, h)),
+        ),
+        interpret=interpret,
+    )(*operands)

@@ -39,7 +39,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dwconv_bwd_fused, dwconv_bwdk, dwconv_fwd, ref
+from repro.kernels import dwconv_bwd_fused, dwconv_bwdk, dwconv_decode, dwconv_fwd, ref
 from repro.kernels.common import (
     LANE,
     DWConvDims,
@@ -58,6 +58,7 @@ from repro.kernels.epilogue import act_grad, epilogue_key, is_trivial
 from repro.perfmodel.geometry import (  # noqa: F401  (re-exports)
     bwd_fused_wpad,
     bwdk_time_tile,
+    decode_lane_tile,
     epilogue_time_tile,
     unified_wpad,
 )
@@ -69,12 +70,14 @@ BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
 # Fused backward family ("split" = run the two independent backward ops —
 # the escape hatch preserving the paper's controlled per-path study).
 BWD_FUSED_VARIANTS = ("fused", "fused_partials", "split")
+# Streaming-decode family (single-step ring-buffer conv, kernels/dwconv_decode.py).
+DECODE_VARIANTS = ("rows", "chanblock", "xla")
 
 # Pre-autotuner hard-coded choices, kept as the no-cache-entry fallback.
 # The backward stays "split" until a tuning run selects the fused kernel,
 # so untuned shapes keep the historical per-path behaviour.
 AUTO_FALLBACK = {"fwd": "row", "bwd_in": "row", "bwd_k": "accum",
-                 "bwd_fused": "split"}
+                 "bwd_fused": "split", "decode": "rows"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -584,6 +587,137 @@ def dwconv_bwd_fused_act_op(
         run_reference=run_split, reference_name="split")
 
 
+# ---------------------------------------------------------------------------
+# streaming decode (single-step ring-buffer conv, kernels/dwconv_decode.py)
+# ---------------------------------------------------------------------------
+
+
+def _prep_decode_bias(bias: Optional[jnp.ndarray], Hp: int) -> Optional[jnp.ndarray]:
+    """(H,) per-channel bias -> channel-padded (1, Hp) row — the decode
+    kernels keep channels on the lane axis, so the bias block is a row, not
+    the fwd family's (Hp, LANE) column."""
+    if bias is None:
+        return None
+    if bias.ndim != 1:
+        raise ValueError(f"epilogue bias must be per-channel (H,), got {bias.shape}")
+    return jnp.pad(bias[None, :], ((0, 0), (0, Hp - bias.shape[0])))
+
+
+def _decode_impl(
+    ring: jnp.ndarray,
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    variant: str,
+    opts: KernelOptions,
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
+):
+    B, H, _ = ring.shape
+    K = k.shape[-1]
+    faults.fire("kernel/lower", faults.KernelLoweringError,
+                f"injected lowering failure (decode/{variant})")
+    interpret = opts.resolved_interpret()
+    # Channels ride the lane axis at L=1: transpose to channel-last and pad
+    # the channel axis to the lane tile (block_t reused as the channel tile
+    # — same geometry the decode schedules model, perfmodel.geometry).
+    Hl = decode_lane_tile(H, opts.block_t)
+    Hp = round_up(H, Hl)
+    Bc = min(opts.batch_chunk, B)
+    Bp = round_up(B, Bc)
+    ringT = _pad_to(_pad_to(ring.transpose(0, 2, 1), Bp, axis=0), Hp, axis=2)
+    xT = _pad_to(_pad_to(x[:, None, :], Bp, axis=0), Hp, axis=2)
+    kT = _pad_to(k.T, Hp, axis=1)
+    bT = _prep_decode_bias(bias, Hp)
+
+    kw = dict(K=K, block_c=Hl, interpret=interpret, bias=bT, act=act)
+    if variant == "rows":
+        yT, nrT = dwconv_decode.dwconv_decode_rows(ringT, xT, kT, **kw)
+    elif variant == "chanblock":
+        yT, nrT = dwconv_decode.dwconv_decode_chanblock(ringT, xT, kT,
+                                                        batch_chunk=Bc, **kw)
+    else:
+        raise ValueError(f"unknown decode variant {variant!r}")
+    y = yT[:B, 0, :H]
+    new_ring = nrT[:B, :, :H].transpose(0, 2, 1)
+    return y, new_ring
+
+
+def dwconv_decode_op(
+    ring: jnp.ndarray,
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    variant: str = "auto",
+    opts: Optional[KernelOptions] = None,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused single-step streaming-decode conv: ring shift + K-tap dot +
+    bias/act epilogue in one launch.
+
+      ring : (B, H, K-1) — last K-1 pre-conv inputs, oldest tap first
+      x    : (B, H)      — the new step's input
+      k    : (H, K)
+      -> (y (B, H), new_ring (B, H, K-1))
+
+    Per-step traffic is O(B*H*K) bytes vs O(B*H*L) for re-running the full
+    conv over the cache.  All variants share the f32 ascending-tap
+    accumulation order of the full-sequence reference: N successive
+    ``"xla"`` steps from a zero ring are bit-identical to one causal
+    ``dwconv_act`` over the stream for f32 ``act="none"``, and the Pallas
+    variants match to FMA-contraction rounding (like the rest of the
+    family vs ``ref.py``) while being bit-identical to each other.
+    ``variant="auto"`` dispatches the tuned decode winner; ``"xla"`` (and
+    any K<2 problem, whose ring is empty) runs the reference.
+    """
+    B, H = x.shape
+    K = k.shape[-1]
+    if ring.shape != (B, H, K - 1):
+        raise ValueError(
+            f"ring shape {ring.shape} does not match (B={B}, H={H}, "
+            f"K-1={K - 1}); the ring must hold exactly the last K-1 inputs")
+    requested = variant
+    epi = epilogue_key(bias is not None, act)
+    variant, opts = resolve_variant(
+        "decode", variant, opts, B=B, H=H, L=1, K=K, dtype=x.dtype,
+        padding="causal", epilogue=epi)
+    if variant == "xla" or K < 2:
+        y, new_ring = ref.dwconv_decode_ref(ring, x, k, bias=bias, act=act)
+        return _poison(y), new_ring
+    y, new_ring = _guard.run_guarded(
+        "decode", shape=(B, H, 1, K), dtype=jnp.dtype(x.dtype).name,
+        padding="causal", epilogue=epi, requested=requested,
+        attempts=[(variant, opts), (AUTO_FALLBACK["decode"], DEFAULT_OPTS)],
+        run=lambda v, o: _decode_impl(ring, x, k, v, o, bias=bias, act=act),
+        run_reference=lambda: ref.dwconv_decode_ref(ring, x, k, bias=bias,
+                                                    act=act))
+    return _poison(y), new_ring
+
+
+def dwconv_decode_ragged_op(
+    ring: jnp.ndarray,
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    active: jnp.ndarray,
+    variant: str = "auto",
+    opts: Optional[KernelOptions] = None,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    act: str = "none",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Continuous-batching form: one dense step over the whole slot pool with
+    a ragged active set.  ``active`` is a (B,) bool mask of live slots;
+    inactive slots emit y=0 and keep their ring **unchanged** (the state in
+    a free/evicted slot must not shift under other requests' steps).  The
+    kernel runs the dense pool — the honest per-step traffic is the full
+    O(B*H*K) pool, which is exactly what the decode schedules charge."""
+    y, new_ring = dwconv_decode_op(ring, x, k, variant, opts, bias=bias, act=act)
+    live = active.astype(bool)
+    y = jnp.where(live[:, None], y, jnp.zeros_like(y))
+    new_ring = jnp.where(live[:, None, None], new_ring, ring)
+    return y, new_ring
+
+
 @functools.partial(jax.jit, static_argnames=("padding", "variant", "opts"))
 def dwconv_fwd_jit(x, k, padding="same", variant="row", opts=None):
     return dwconv_fwd_op(x, k, padding, variant, opts)
@@ -597,3 +731,8 @@ def dwconv_bwd_input_jit(dy, k, padding="same", variant="row", opts=None):
 @functools.partial(jax.jit, static_argnames=("K", "padding", "variant", "opts"))
 def dwconv_bwd_kernel_jit(x, dy, K, padding="same", variant="accum", opts=None):
     return dwconv_bwd_kernel_op(x, dy, K, padding, variant, opts)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "opts", "act"))
+def dwconv_decode_jit(ring, x, k, variant="auto", opts=None, *, bias=None, act="none"):
+    return dwconv_decode_op(ring, x, k, variant, opts, bias=bias, act=act)

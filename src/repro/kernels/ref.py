@@ -67,6 +67,54 @@ def dwconv_act_ref(
     return apply_act(acc, act).astype(x.dtype)
 
 
+def dwconv_decode_ref(
+    ring: jnp.ndarray,
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    bias: jnp.ndarray = None,
+    act: str = "none",
+):
+    """Single-step streaming-decode reference: one causal conv output at the
+    newest position plus the shifted ring.
+
+      ring : (B, H, K-1) — the last K-1 pre-conv inputs, oldest tap first
+      x    : (B, H)      — the new step's input
+      k    : (H, K)
+      -> (y (B, H), new_ring (B, H, K-1))
+
+    y[b,h] = act(sum_{j<K-1} ring[b,h,j]*k[h,j] + x[b,h]*k[h,K-1] + bias[h])
+
+    Accumulates in f32 with ascending taps — the *same operation order* as
+    ``_fwd_acc``, so N successive steps from a zero ring are bit-identical
+    to one causal ``dwconv_act_ref`` over the stream for f32 ``act='none'``.
+    Also the ``variant='xla'`` production decode path (plain jnp, shards
+    over (B, H)); handles K=1 (empty ring) where the Pallas kernels refuse.
+    """
+    from repro.kernels.epilogue import apply_act
+
+    B, H = x.shape
+    Hk, K = k.shape
+    if Hk != H:
+        raise ValueError(
+            f"filter bank has Hk={Hk} channels but the input has H={H}; "
+            f"depthwise conv needs one (K,) filter per input channel")
+    if ring.shape != (B, H, K - 1):
+        raise ValueError(
+            f"ring shape {ring.shape} does not match (B={B}, H={H}, K-1={K - 1}); "
+            f"the ring must hold exactly the last K-1 inputs")
+    acc = jnp.zeros((B, H), dtype=jnp.promote_types(x.dtype, jnp.float32))
+    for j in range(K - 1):
+        acc = acc + ring[:, :, j].astype(acc.dtype) * k[:, j][None, :].astype(acc.dtype)
+    acc = acc + x.astype(acc.dtype) * k[:, K - 1][None, :].astype(acc.dtype)
+    if bias is not None:
+        acc = acc + bias.astype(acc.dtype)[None, :]
+    y = apply_act(acc, act).astype(x.dtype)
+    # append the new tap, drop the oldest: stays (B, H, K-1) even at K=1,
+    # where the ring is empty and the "new ring" must stay empty too
+    buf = jnp.concatenate([ring, x[:, :, None].astype(ring.dtype)], axis=-1)
+    return y, buf[:, :, 1:]
+
+
 def dwconv_bwd_input_ref(dy: jnp.ndarray, k: jnp.ndarray, padding: Padding = "same") -> jnp.ndarray:
     """dx = correlation of dy with the flipped kernel under adjoint padding."""
     B, H, L = dy.shape

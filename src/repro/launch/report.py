@@ -168,6 +168,8 @@ def main(argv=None) -> int:
                     help="omit the P100 paper-mode section")
     ap.add_argument("--no-epilogue", action="store_true",
                     help="omit the epilogue fused-vs-unfused section")
+    ap.add_argument("--no-decode", action="store_true",
+                    help="omit the streaming-decode (single-step) section")
     ap.add_argument("--out", default="",
                     help="write the markdown report here (default: stdout)")
     ap.add_argument("--json", default="", metavar="PATH",
@@ -213,6 +215,7 @@ def main(argv=None) -> int:
             batch_chunk=args.batch_chunk,
             include_paper=not args.no_paper,
             include_epilogue=not args.no_epilogue,
+            include_decode=not args.no_decode,
             calibration=calibration,
             measured=measured,
             verify=args.verify,

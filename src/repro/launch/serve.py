@@ -2,11 +2,31 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \\
       --batch 4 --prompt-len 16 --gen 8
+
+Streaming-decode additions:
+
+  * ``--conv-variant`` routes the SSM/RG-LRU depthwise-conv switch — at
+    decode the SSM conv runs the fused single-step ring kernel
+    (``core.dwconv.dwconv_decode``), so this flag selects its variant
+    ("xla", "rows", "chanblock", "auto", or any model-level variant name).
+  * Prefill uses the family's chunked ``prefill()`` fast path when it
+    materializes a decode-ready cache (structural check against
+    ``init_cache``); otherwise it falls back to the token loop.
+  * ``--continuous N`` serves N requests through the ``--batch``-slot pool
+    with per-request admission/eviction (continuous batching); per-step
+    latencies ride the span tracer and the summary reports tokens/sec and
+    p50/p99.
+  * ``--json`` writes the printed summary (throughput + latency
+    percentiles) as machine-readable JSON.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +40,199 @@ from repro.models.api import get_model, make_demo_batch
 from repro.obs import trace as obs_trace
 
 
+def _with_conv_variant(cfg, variant: str):
+    """Rebuild ``cfg`` with the conv variant switch set on every sub-config
+    that carries one (SSM, RG-LRU).  Decode-native names are legal: the
+    model maps them per phase (``train_variant_for``/``decode_variant_for``)."""
+    changed = False
+    if getattr(cfg, "ssm", None) is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, conv_variant=variant))
+        changed = True
+    if getattr(cfg, "rglru", None) is not None:
+        from repro.core.dwconv import train_variant_for
+        cfg = dataclasses.replace(
+            cfg, rglru=dataclasses.replace(cfg.rglru,
+                                           conv_variant=train_variant_for(variant)))
+        changed = True
+    if not changed:
+        print(f"[serve] --conv-variant {variant} ignored: "
+              f"{cfg.name} carries no depthwise-conv operator", flush=True)
+    return cfg
+
+
+def build_fast_prefill(model, params, prompt, cache):
+    """A jitted chunked-prefill callable, or None when unavailable.
+
+    Available iff the family module has ``prefill`` and (checked abstractly
+    via ``jax.eval_shape`` — no execution) it accepts this prompt shape and
+    returns ``(logits, cache)`` whose cache tree matches ``init_cache``'s
+    shapes/dtypes exactly, i.e. the prefilled state is directly decodable.
+    KV families whose prefill cache is sized to the prompt (not the serving
+    cache_len), and chunk-constrained prompt lengths, fall back honestly.
+    """
+    mod = model.module
+    if not hasattr(mod, "prefill") or prompt.shape[1] < 1:
+        return None
+
+    def fn(p, t):
+        return mod.prefill(p, model.cfg, t)
+
+    try:
+        out = jax.eval_shape(fn, params, prompt)
+    except Exception:  # noqa: BLE001 - any rejection means "not available"
+        return None
+    if not (isinstance(out, (tuple, list)) and len(out) == 2):
+        return None
+
+    def sig(tree):
+        return jax.tree.map(
+            lambda a: (tuple(a.shape), jnp.dtype(a.dtype).name), tree)
+
+    try:
+        if sig(out[1]) != sig(cache):
+            return None
+    except Exception:  # noqa: BLE001 - tree-structure mismatch
+        return None
+    return jax.jit(fn)
+
+
+def _step_percentiles(tracer, name: str):
+    """(p50_s, p99_s) over the closed spans named ``name``; (None, None)
+    when the tracer recorded none."""
+    lat = [r["dur_s"] for r in tracer.records
+           if r.get("kind") == "span" and r.get("name") == name]
+    if not lat:
+        return None, None
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: admission/eviction against a fixed slot pool
+# ---------------------------------------------------------------------------
+
+
+def run_continuous(
+    model,
+    params,
+    *,
+    slots: int,
+    request_tokens: Sequence[np.ndarray],
+    gen_lengths: Sequence[int],
+    cache_len: int,
+    tracer,
+    label: str = "serve/continuous",
+) -> Dict[str, Any]:
+    """Serve ``len(request_tokens)`` requests through a ``slots``-wide pool.
+
+    Each request (a ``(1, P)`` token array) is admitted into a free slot:
+    its prompt is prefilled at batch 1 (chunked fast path when available,
+    token loop otherwise) and the per-request conv/SSM state is scattered
+    into the pooled cache along the ``cache_batch`` axis.  All active slots
+    then decode together — one dense step over the whole pool per token, a
+    ragged active set whenever requests stagger — and a finished request is
+    evicted, freeing its slot for the next pending one.  The slot's stale
+    state after eviction is harmless: admission rewrites it wholesale.
+
+    Per-step latency rides ``tracer`` spans (``{label}/step``, tagged
+    ``n_active``); pass an *enabled* tracer — the returned wall time and
+    percentiles are read back from it.  Returns a summary dict with
+    tokens/sec, p50/p99 step latency, and per-request outputs.
+    """
+    if len(request_tokens) != len(gen_lengths):
+        raise ValueError(
+            f"{len(request_tokens)} requests but {len(gen_lengths)} gen lengths")
+    axes = model.cache_axes()
+
+    def slot_axis(key: str) -> Optional[int]:
+        ax = axes.get(key, ())
+        return ax.index("cache_batch") if isinstance(ax, tuple) \
+            and "cache_batch" in ax else None
+
+    step = jax.jit(build_serve_step(model))
+    pool = model.init_cache(slots, cache_len)
+    cache1 = model.init_cache(1, cache_len)
+    fast = (build_fast_prefill(model, params, request_tokens[0][:, :-1], cache1)
+            if request_tokens and request_tokens[0].shape[1] > 1 else None)
+
+    def prefill_one(toks):
+        prompt = toks[:, :-1]
+        if fast is not None and prompt.shape == request_tokens[0][:, :-1].shape:
+            _, c = fast(params, prompt)
+            return c
+        c = model.init_cache(1, cache_len)
+        for i in range(prompt.shape[1]):
+            _, c = step(params, c, {"tokens": prompt[:, i:i + 1]})
+        return c
+
+    pending = deque(
+        (rid, jnp.asarray(toks, jnp.int32)) for rid, toks in
+        enumerate(request_tokens) if gen_lengths[rid] > 0)
+    done: Dict[int, List[int]] = {rid: [] for rid in range(len(request_tokens))
+                                  if gen_lengths[rid] <= 0}
+    active: List[Optional[Dict[str, Any]]] = [None] * slots
+    cur = jnp.zeros((slots, 1), jnp.int32)
+    n_steps = 0
+    total_tokens = 0
+    with tracer.span(label, slots=slots,
+                     requests=len(request_tokens)) as sp_all:
+        while pending or any(a is not None for a in active):
+            # -- admission: fill free slots from the pending queue ----------
+            for sidx in range(slots):
+                if active[sidx] is not None or not pending:
+                    continue
+                rid, toks = pending.popleft()
+                with tracer.span(f"{label}/admit", slot=sidx,
+                                 request=rid) as sp_ad:
+                    c1 = prefill_one(toks)
+                    scattered = {}
+                    for key, v in pool.items():
+                        a = slot_axis(key)
+                        if a is None:
+                            scattered[key] = v
+                        else:
+                            idx = (slice(None),) * a + (sidx,)
+                            scattered[key] = v.at[idx].set(
+                                jnp.take(c1[key], 0, axis=a))
+                    pool = scattered
+                    sp_ad.sync(pool)
+                cur = cur.at[sidx, 0].set(toks[0, -1])
+                active[sidx] = {"id": rid, "left": int(gen_lengths[rid]),
+                                "out": []}
+            # -- one dense decode step over the whole pool ------------------
+            n_active = sum(a is not None for a in active)
+            with tracer.span(f"{label}/step", n_active=n_active) as sp_st:
+                nxt, pool = step(params, pool, {"tokens": cur})
+                sp_st.sync(nxt)
+            cur = nxt[:, None]
+            n_steps += 1
+            total_tokens += n_active
+            host = np.asarray(nxt)
+            # -- eviction: completed requests free their slot ---------------
+            for sidx in range(slots):
+                a = active[sidx]
+                if a is None:
+                    continue
+                a["out"].append(int(host[sidx]))
+                a["left"] -= 1
+                if a["left"] <= 0:
+                    done[a["id"]] = a["out"]
+                    active[sidx] = None
+        sp_all.sync(cur)
+    p50, p99 = _step_percentiles(tracer, f"{label}/step")
+    return {
+        "slots": slots,
+        "requests": len(request_tokens),
+        "steps": n_steps,
+        "decode_tokens": total_tokens,
+        "wall_s": sp_all.dur_s,
+        "tokens_per_s": total_tokens / max(sp_all.dur_s, 1e-9),
+        "p50_step_s": p50,
+        "p99_step_s": p99,
+        "outputs": done,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -30,9 +243,21 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--conv-variant", default="",
+                    help="depthwise-conv variant switch for conv-bearing "
+                         "archs: decode runs the fused single-step ring "
+                         "kernel under this name ('xla', 'rows', "
+                         "'chanblock', 'auto', or a model-level variant)")
+    ap.add_argument("--continuous", type=int, default=0, metavar="N",
+                    help="continuous-batching mode: serve N requests through "
+                         "the --batch slot pool with admission/eviction "
+                         "(ragged gen lengths stagger completions)")
     ap.add_argument("--trace", default="",
                     help="write the span trace (JSONL) here; phase timings "
                          "are read from the spans either way")
+    ap.add_argument("--json", default="",
+                    help="write the serve summary (throughput, p50/p99 step "
+                         "latency) as JSON here")
     ap.add_argument("--bundle", default="",
                     help="signed fleet tuning bundle (*.bundle.json) to "
                          "import before serving (warm start; validated + "
@@ -52,6 +277,8 @@ def main(argv=None) -> int:
               flush=True)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.conv_variant:
+        cfg = _with_conv_variant(cfg, args.conv_variant)
     # The prefill/decode numbers below are the spans' own measurements
     # (event-style: block_until_ready before the span closes, perf_counter
     # clock) — with --trace they are additionally persisted as JSONL.
@@ -67,8 +294,40 @@ def main(argv=None) -> int:
     else:
         mesh = make_mesh((1, jax.device_count()), ("data", "model"))
 
+    summary: Dict[str, Any] = {
+        "arch": cfg.name, "batch": args.batch,
+        "prompt_len": args.prompt_len, "gen": args.gen,
+        "conv_variant": args.conv_variant or None,
+    }
     with mesh, shd.use_sharding(mesh, "serve"):
         params = model.init(jax.random.PRNGKey(args.seed))
+
+        if args.continuous > 0:
+            # ragged gen lengths: completions stagger, so the active set
+            # shrinks/refills and every pool width between 1 and `slots`
+            # is exercised.
+            rng = np.random.default_rng(args.seed)
+            reqs = [rng.integers(0, cfg.vocab,
+                                 size=(1, args.prompt_len)).astype(np.int32)
+                    for _ in range(args.continuous)]
+            gens = [max(1, args.gen - (i % 3)) for i in range(args.continuous)]
+            stats = run_continuous(
+                model, params, slots=args.batch, request_tokens=reqs,
+                gen_lengths=gens, cache_len=args.cache_len, tracer=tracer)
+            stats.pop("outputs")
+            summary["continuous"] = stats
+            print(f"[serve] arch={cfg.name} continuous: "
+                  f"{stats['requests']} requests over {stats['slots']} slots "
+                  f"in {stats['steps']} steps — "
+                  f"{stats['decode_tokens']} tok in {stats['wall_s']:.2f}s "
+                  f"({stats['tokens_per_s']:.1f} tok/s)")
+            if stats["p50_step_s"] is not None:
+                print(f"[serve] continuous step latency "
+                      f"p50 {stats['p50_step_s'] * 1e3:.2f} ms  "
+                      f"p99 {stats['p99_step_s'] * 1e3:.2f} ms")
+            _finish(args, tracer, summary)
+            return 0
+
         batch = make_demo_batch(cfg, args.batch, args.prompt_len)
         cache = model.init_cache(args.batch, args.cache_len)
         # enc-dec / vlm: precompute cross caches from the stub modality input
@@ -99,15 +358,24 @@ def main(argv=None) -> int:
         jax.block_until_ready(
             serve_step(params, warm, {"tokens": batch["tokens"][:, :1]}))
 
-        # prefill by teacher-forcing the prompt token by token (robust across
-        # families); production prefill path is exercised by the dry-run.
-        with tracer.span("serve/prefill", tokens=args.prompt_len - 1) as sp_pre:
-            for i in range(args.prompt_len - 1):
-                # unsynced: per-token prefill spans time the *enqueue* (the
-                # dispatch floor); the phase span syncs and owns execution.
-                with tracer.span("serve/prefill/token", pos=i):
-                    _, cache = serve_step(
-                        params, cache, {"tokens": batch["tokens"][:, i : i + 1]})
+        # Chunked prefill when the family materializes a decode-ready cache
+        # in one call; token-by-token teacher forcing otherwise.
+        prompt = batch["tokens"][:, : args.prompt_len - 1]
+        fast_prefill = build_fast_prefill(model, params, prompt, cache)
+        prefill_mode = "chunked" if fast_prefill is not None else "token-loop"
+        with tracer.span("serve/prefill", tokens=args.prompt_len - 1,
+                         mode=prefill_mode) as sp_pre:
+            if fast_prefill is not None:
+                _, cache = fast_prefill(params, prompt)
+            else:
+                for i in range(args.prompt_len - 1):
+                    # unsynced: per-token prefill spans time the *enqueue*
+                    # (the dispatch floor); the phase span syncs and owns
+                    # execution.
+                    with tracer.span("serve/prefill/token", pos=i):
+                        _, cache = serve_step(
+                            params, cache,
+                            {"tokens": batch["tokens"][:, i: i + 1]})
             sp_pre.sync(cache)
         t_prefill = sp_pre.dur_s
 
@@ -131,17 +399,39 @@ def main(argv=None) -> int:
            else np.zeros((args.batch, 0), np.int64))
     prefill_toks = args.batch * (args.prompt_len - 1)
     decode_toks = args.batch * gen.shape[1]
+    p50, p99 = _step_percentiles(tracer, "serve/decode/token")
+    summary.update({
+        "prefill_mode": prefill_mode,
+        "prefill_s": t_prefill,
+        "prefill_tokens_per_s": prefill_toks / max(t_prefill, 1e-9),
+        "decode_s": t_decode,
+        "decode_tokens_per_s": decode_toks / max(t_decode, 1e-9),
+        "decode_p50_step_s": p50,
+        "decode_p99_step_s": p99,
+    })
     print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"prefill {args.prompt_len - 1} tok/seq in {t_prefill:.2f}s "
+          f"prefill[{prefill_mode}] {args.prompt_len - 1} tok/seq in "
+          f"{t_prefill:.2f}s "
           f"({prefill_toks / max(t_prefill, 1e-9):.1f} tok/s)")
     print(f"[serve] decode {gen.shape[1]} tok/seq in {t_decode:.2f}s "
           f"({decode_toks / max(t_decode, 1e-9):.1f} tok/s)")
+    if p50 is not None:
+        print(f"[serve] decode step latency p50 {p50 * 1e3:.2f} ms  "
+              f"p99 {p99 * 1e3:.2f} ms")
     print("[serve] sample token ids:", gen[0].tolist())
+    _finish(args, tracer, summary)
+    return 0
+
+
+def _finish(args, tracer, summary: Dict[str, Any]) -> None:
     if args.trace:
         tracer.close()
         print(f"[serve] trace written to {args.trace} "
               f"({len(tracer.records)} records)")
-    return 0
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"[serve] summary written to {args.json}")
 
 
 if __name__ == "__main__":

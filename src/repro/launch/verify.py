@@ -41,30 +41,53 @@ KNOB_GRID: Tuple[Dict[str, int], ...] = (
     dict(block_h=8, block_t=128, batch_chunk=4),
 )
 
+# Decode is a single-step path — the SHAPE_GRID L values are meaningless for
+# it, so it sweeps its own serving shapes (L=1 always): a typical per-layer
+# conv state, a large-model slot pool, ragged extents, and the K=2 floor.
+DECODE_SHAPE_GRID: Tuple[Tuple[str, DWConvDims], ...] = (
+    ("serve", DWConvDims(B=8, H=192, L=1, K=4, padding="causal")),
+    ("serve-wide", DWConvDims(B=64, H=1536, L=1, K=4, padding="causal")),
+    ("serve-ragged", DWConvDims(B=5, H=100, L=1, K=7, padding="causal")),
+    ("serve-min", DWConvDims(B=1, H=128, L=1, K=2, padding="causal")),
+)
+
 
 def sweep_registry(
     shapes: Sequence[Tuple[str, DWConvDims]] = SHAPE_GRID,
     knob_grid: Sequence[Dict[str, int]] = KNOB_GRID,
+    decode_shapes: Sequence[Tuple[str, DWConvDims]] = DECODE_SHAPE_GRID,
 ) -> Tuple[List[Dict], List[Finding]]:
     """Run the full registry sweep.  Returns (per-config rows, findings)."""
     rows: List[Dict] = []
     findings: List[Finding] = []
+
+    def _check(shape_name, d, knobs, path, variant):
+        epilogues = (EPILOGUE_KEYS if path in ("fwd", "bwd_fused", "decode")
+                     else ("none",))
+        for epi in epilogues:
+            status, fs = verify_config(path, variant, d,
+                                       epilogue=epi, **knobs)
+            rows.append({
+                "shape": shape_name,
+                "dims": f"{d.B}x{d.H}x{d.L}x{d.K}/{d.padding}",
+                "knobs": dict(knobs),
+                "path": path, "variant": variant, "epilogue": epi,
+                "status": status, "findings": len(fs),
+            })
+            findings.extend(fs)
+
     for shape_name, d in shapes:
         for knobs in knob_grid:
             for path, variant in sorted(SCHEDULE_BUILDERS):
-                epilogues = (EPILOGUE_KEYS if path in ("fwd", "bwd_fused")
-                             else ("none",))
-                for epi in epilogues:
-                    status, fs = verify_config(path, variant, d,
-                                               epilogue=epi, **knobs)
-                    rows.append({
-                        "shape": shape_name,
-                        "dims": f"{d.B}x{d.H}x{d.L}x{d.K}/{d.padding}",
-                        "knobs": dict(knobs),
-                        "path": path, "variant": variant, "epilogue": epi,
-                        "status": status, "findings": len(fs),
-                    })
-                    findings.extend(fs)
+                if path == "decode":
+                    continue  # swept below at its own L=1 serving shapes
+                _check(shape_name, d, knobs, path, variant)
+    for shape_name, d in decode_shapes:
+        for knobs in knob_grid:
+            for path, variant in sorted(SCHEDULE_BUILDERS):
+                if path != "decode":
+                    continue
+                _check(shape_name, d, knobs, path, variant)
     return rows, findings
 
 

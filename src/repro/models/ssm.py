@@ -18,7 +18,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dwconv import dwconv_act
+from repro.core.dwconv import dwconv_act, dwconv_decode, train_variant_for
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models.config import ArchConfig
@@ -168,7 +168,11 @@ def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
 
     # depthwise causal conv over (x, B, C) — the paper's operator, with the
     # bias add + SiLU fused into the conv kernel's epilogue (one HBM write;
-    # dbias rides the fused backward alongside dk).
+    # dbias rides the fused backward alongside dk).  The pre-conv activations
+    # feed the decode ring, so prefill (return_state) keeps the tail.
+    xbc_pre = (jnp.concatenate([xs, Bm, Cm], axis=-1) if return_state
+               else None)                                        # (B,S,conv_dim)
+    conv_v = train_variant_for(s.conv_variant)
     if s.split_conv:
         # shard-aligned variant: conv each component with its own filter
         # slice; x stays model-sharded end-to-end, B/C stay replicated —
@@ -177,7 +181,7 @@ def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
             tt = shard(t.transpose(0, 2, 1), *axes)
             tt = dwconv_act(tt, lp["conv_w"][lo:hi].astype(tt.dtype),
                             lp["conv_b"][lo:hi].astype(tt.dtype),
-                            act="silu", padding="causal", variant=s.conv_variant)
+                            act="silu", padding="causal", variant=conv_v)
             return tt.transpose(0, 2, 1)
 
         xs = _conv(xs, 0, d_inner, ("act_batch", "act_mlp", None))
@@ -188,7 +192,7 @@ def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
         xbc = shard(xbc.transpose(0, 2, 1), "act_batch", "act_mlp", None)
         xbc = dwconv_act(xbc, lp["conv_w"].astype(xbc.dtype),
                          lp["conv_b"].astype(xbc.dtype),
-                         act="silu", padding="causal", variant=s.conv_variant)
+                         act="silu", padding="causal", variant=conv_v)
         xbc = xbc.transpose(0, 2, 1)
         xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
 
@@ -206,7 +210,17 @@ def _block(lp, cfg: ArchConfig, x: jnp.ndarray, return_state: bool = False):
     out = jnp.einsum("bsi,id->bsd", y, lp["w_out"].astype(y.dtype))
     res = shard(x + out, "act_batch", "act_seq", "act_embed")
     if return_state:
-        return res, final_state.astype(jnp.float32)
+        # Decode ring handoff: the last d_conv-1 pre-conv activations,
+        # oldest tap first, zero-filled on the left when the prompt is
+        # shorter than the ring (matches the zero-initialized conv state a
+        # from-scratch decode starts with).
+        Km1 = s.d_conv - 1
+        t = min(S_, Km1)
+        tail = xbc_pre[:, S_ - t:, :].transpose(0, 2, 1)         # (B,conv_dim,t)
+        if t < Km1:
+            tail = jnp.concatenate(
+                [jnp.zeros((B_, conv_dim, Km1 - t), tail.dtype), tail], axis=-1)
+        return res, (final_state.astype(jnp.float32), tail)
     return res
 
 
@@ -268,10 +282,13 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
         Cm = h @ lp["w_C"].astype(h.dtype)
         dt = h @ lp["w_dt"].astype(h.dtype)
         xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)             # (B,conv_dim)
-        buf = jnp.concatenate([conv_st, xbc[..., None]], axis=-1)  # (B,conv_dim,K)
-        conv_out = jnp.einsum("bck,ck->bc", buf, lp["conv_w"].astype(buf.dtype))
-        conv_out = jax.nn.silu(conv_out + lp["conv_b"].astype(buf.dtype))
-        new_conv = buf[..., 1:]
+        # Fused single-step ring conv: shift + K-tap dot + bias/SiLU in one
+        # launch (the streaming-decode operator; variant-switchable like the
+        # train-path conv).
+        conv_out, new_conv = dwconv_decode(
+            conv_st, xbc, lp["conv_w"].astype(xbc.dtype),
+            lp["conv_b"].astype(xbc.dtype), act="silu",
+            variant=s.conv_variant)
         xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
         dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
         A = -jnp.exp(lp["a_log"].astype(jnp.float32))
@@ -295,20 +312,22 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray):
 
 def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray):
     """Prefill via the chunked-SSD path, materializing the per-layer final
-    SSM states for subsequent recurrent decode.  (The conv ring state is
-    reconstructed from the last d_conv-1 tokens at decode start.)"""
+    SSM states *and* conv ring state (the last d_conv-1 pre-conv
+    activations per layer) for subsequent recurrent decode — decode after
+    prefill continues the exact same stream the full forward would see."""
     B_ = tokens.shape[0]
     x = L.embed_tokens(params["embed"], tokens, cfg.compute_dt)
 
     def body(x, lp):
-        x, st = _block(lp, cfg, x, return_state=True)
-        return x, st
+        x, (st, tail) = _block(lp, cfg, x, return_state=True)
+        return x, (st, tail)
 
-    x, states = jax.lax.scan(body, x, params["layers"])
+    x, (states, tails) = jax.lax.scan(body, x, params["layers"])
     hidden = L.rms_norm(x, params["ln_f"])
     logits = L.unembed(hidden[:, -1:, :], params["embed"])
     cache = init_cache(cfg, B_, 0)
     cache["state"] = states
+    cache["conv"] = tails.astype(cache["conv"].dtype)
     cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
     return logits, cache
 

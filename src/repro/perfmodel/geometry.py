@@ -98,6 +98,34 @@ def time_tile(L: int, K: int, block_t: int, variant: str,
     return bwdk_time_tile(L, K, block_t, variant)
 
 
+def decode_lane_tile(H: int, block_t: int) -> int:
+    """Channel-lane tile ``Hl`` for the streaming-decode kernels.
+
+    At L=1 the temporal axis degenerates, so channels ride the lane axis and
+    the ``block_t`` knob is reused as the channel tile: ``Hl = min(block_t,
+    round_up(H, LANE))``.  The result must be a LANE multiple to be legal
+    (the kernels raise, the schedules mark illegal) — an unaligned
+    ``block_t`` smaller than the padded channel extent fails that.
+    """
+    return min(block_t, round_up(max(H, 1), LANE))
+
+
+def decode_tiles(
+    d: DWConvDims, block_t: int, batch_chunk: int
+) -> Tuple[int, int, int, int, int, int]:
+    """``(Hl, nH, Hp, Bc, nB, Bp)`` exactly as ``ops._decode_impl`` pads and
+    the decode kernels tile: channel axis padded to ``Hl`` tiles, slot pool
+    padded to ``batch_chunk`` rows (the ``rows`` variant stages the whole
+    padded pool per cell; ``chanblock`` walks it in ``Bc``-row chunks)."""
+    Hl = decode_lane_tile(d.H, block_t)
+    Hp = round_up(d.H, Hl)
+    nH = Hp // Hl
+    Bc = max(1, min(batch_chunk, d.B))
+    Bp = round_up(d.B, Bc)
+    nB = Bp // Bc
+    return Hl, nH, Hp, Bc, nB, Bp
+
+
 def effective_tiles(
     d: DWConvDims, block_h: int, block_t: int, batch_chunk: int
 ) -> Tuple[int, int, int, int]:

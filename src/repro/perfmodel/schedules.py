@@ -32,6 +32,7 @@ from repro.kernels.common import LANE, DWConvDims, cdiv, round_up
 from repro.kernels.epilogue import parse_epilogue
 from repro.perfmodel.geometry import (
     bwd_time_tiles,
+    decode_tiles,
     effective_tiles,
     fwd_tile_grid,
     time_tile,
@@ -478,6 +479,93 @@ def epilogue_block_schedule(
                                             batch_chunk=batch_chunk)
     return merge_schedules("block", "fused" if fused else "unfused", d,
                            (fwd, bwd), epilogue=epilogue)
+
+
+# ---------------------------------------------------------------------------
+# streaming-decode family (path "decode"): fused single-step ring-buffer conv
+# at L=1 — the most extreme memory-bound regime in the repo (arithmetic
+# intensity ~K flops per ring byte round-trip).  Channels ride the lane axis
+# (the temporal axis degenerates at L=1), so ``block_t`` is reused as the
+# channel-lane tile; honest per-step traffic is ring read+write, the x tap,
+# and the weights — O(B*H*K) bytes vs O(B*H*L) for re-running the full conv
+# over the cache.
+# ---------------------------------------------------------------------------
+
+
+def _decode_schedule(path, variant, d, itemsize, *, block_t, batch_chunk,
+                     epilogue="none", **_):
+    bias, act = parse_epilogue(epilogue)
+    Km1 = d.K - 1
+    flops = path_flops(d) + epilogue_flops(d, bias, act)  # L=1: ~2*B*H*K
+    if variant == "xla":
+        # Fused elementwise loop: every operand crosses HBM once, unpadded.
+        ops = [
+            OperandTraffic("ring", "read", d.B * d.H * Km1, itemsize),
+            OperandTraffic("x", "read", d.B * d.H, itemsize),
+            OperandTraffic("k", "read", d.H * d.K, itemsize),
+            OperandTraffic("y", "write", d.B * d.H, itemsize),
+            OperandTraffic("new_ring", "write", d.B * d.H * Km1, itemsize),
+        ]
+        if bias:
+            ops.insert(3, OperandTraffic("bias", "read", d.H, itemsize))
+        return KernelSchedule(path, variant, d, (), tuple(ops), flops,
+                              epilogue=epilogue)
+    Hl, nH, Hp, Bc, nB, Bp = decode_tiles(d, block_t, batch_chunk)
+    legal, reason = True, "ok"
+    if d.K < 2:
+        legal, reason = False, (
+            f"decode kernels need K >= 2 (K-1 >= 1 ring taps); K={d.K} has "
+            f"an empty ring — the XLA reference runs instead")
+    elif Hl % LANE != 0:
+        legal, reason = False, (
+            f"channel tile Hl={Hl} is not lane-aligned (Hl % {LANE} != 0)")
+    if variant == "rows":
+        grid = (("h", nH),)
+        cells, Bb = nH, Bp
+    elif variant == "chanblock":
+        grid = (("b", nB), ("h", nH))
+        cells, Bb = nB * nH, Bc
+    else:
+        raise ValueError(variant)
+    # Elems charge the lane-padded channel extent Hp: the channel axis *is*
+    # the lane axis here, so its padding physically crosses HBM (unlike the
+    # fwd family, where channel padding rides the untiled sublane axis).
+    ops = [
+        OperandTraffic("ring", "read", d.B * Km1 * Hp, itemsize,
+                       transactions=cells, block=(Bb, Km1, Hl),
+                       note="carried ring state (oldest K-1 taps), channel-last"),
+        OperandTraffic("x", "read", d.B * Hp, itemsize,
+                       transactions=cells, block=(Bb, 1, Hl),
+                       note="the new step's input row"),
+        OperandTraffic("k", "read", d.K * Hp, itemsize,
+                       transactions=cells, block=(d.K, Hl),
+                       note="tap-major filter block, channels on lanes"),
+        OperandTraffic("y", "write", d.B * Hp, itemsize,
+                       transactions=cells, block=(Bb, 1, Hl)),
+        OperandTraffic("new_ring", "write", d.B * Km1 * Hp, itemsize,
+                       transactions=cells, block=(Bb, Km1, Hl),
+                       note="shifted ring written back every step"),
+    ]
+    if bias:
+        ops.insert(3, OperandTraffic("bias", "read", Hp, itemsize,
+                                     transactions=cells, block=(1, Hl),
+                                     note="per-channel bias row (channels on lanes)"))
+    return KernelSchedule(path, variant, d, grid, tuple(ops), flops,
+                          epilogue=epilogue, legal=legal, illegal_reason=reason)
+
+
+for _v in ("rows", "chanblock", "xla"):
+    register_schedule(("decode", _v))(_decode_schedule)
+
+
+def decode_full_conv_schedule(d: DWConvDims, itemsize: int = 4, *,
+                              variant: str = "xla",
+                              epilogue: str = "none") -> KernelSchedule:
+    """The serve-loop baseline the decode path replaces: re-running the full
+    causal conv over the (B, H, L) cache to produce one new position.  Used
+    by the decode benchmark/report to state the modeled O(B*H*L) vs
+    O(B*H*K) margin."""
+    return schedule_for("fwd", variant, d, itemsize, epilogue=epilogue)
 
 
 # ---------------------------------------------------------------------------

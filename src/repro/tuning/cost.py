@@ -50,7 +50,7 @@ def _schedule_for(c: Candidate, d: DWConvDims, itemsize: int,
     return perfmodel.schedule_for(
         c.path, c.variant, d, itemsize,
         block_h=c.block_h, block_t=c.block_t, batch_chunk=c.batch_chunk,
-        epilogue=epilogue if c.path in ("fwd", "bwd_fused") else "none")
+        epilogue=epilogue if c.path in ("fwd", "bwd_fused", "decode") else "none")
 
 
 def _traffic_for(c: Candidate, d: DWConvDims, itemsize: int,
@@ -122,10 +122,11 @@ def build_measurable(
     opts = c.options(interpret=interpret)
     has_bias, act = parse_epilogue(epilogue)
     bias = jnp.asarray(rng.normal(size=(d.H,)), dt) if has_bias else None
-    if epilogue != "none" and c.path not in ("fwd", "bwd_fused"):
+    if epilogue != "none" and c.path not in ("fwd", "bwd_fused", "decode"):
         raise ValueError(
-            f"epilogue {epilogue!r} applies to the 'fwd'/'bwd_fused' paths, "
-            f"not {c.path!r} (the split reductions consume dy_eff unchanged)")
+            f"epilogue {epilogue!r} applies to the 'fwd'/'bwd_fused'/'decode' "
+            f"paths, not {c.path!r} (the split reductions consume dy_eff "
+            f"unchanged)")
 
     if c.path == "fwd":
         if c.variant == "xla":
@@ -168,6 +169,19 @@ def build_measurable(
                     x, dy, k, bias, d.padding, c.variant,
                     None if c.variant == "split" else opts, act=act))
         return fn, (x, dy, k)
+    if c.path == "decode":
+        # One fused single-step over a (B, H, K-1) ring — the serving hot
+        # path's per-token conv work.  L is not part of the problem (the
+        # whole point); d.L is ignored beyond the shape key.
+        ring = jnp.asarray(rng.normal(size=(d.B, d.H, max(d.K - 1, 0))), dt)
+        xs = jnp.asarray(rng.normal(size=(d.B, d.H)), dt)
+        if c.variant == "xla":
+            fn = jax.jit(lambda ring, xs: ref.dwconv_decode_ref(
+                ring, xs, k, bias=bias, act=act))
+        else:
+            fn = jax.jit(lambda ring, xs: ops.dwconv_decode_op(
+                ring, xs, k, c.variant, opts, bias=bias, act=act))
+        return fn, (ring, xs)
     raise ValueError(f"unknown path {c.path!r}")
 
 

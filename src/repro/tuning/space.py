@@ -45,9 +45,9 @@ from repro.analysis.hw import TPU_V5E, HardwareModel
 from repro.kernels.common import DWConvDims
 from repro.kernels.ops import KernelOptions
 from repro.perfmodel import check_legality, schedule_for, vmem_bytes
-from repro.perfmodel.geometry import effective_tiles, time_tile
+from repro.perfmodel.geometry import decode_tiles, effective_tiles, time_tile
 
-PATHS = ("fwd", "bwd_in", "bwd_k", "bwd_fused")
+PATHS = ("fwd", "bwd_in", "bwd_k", "bwd_fused", "decode")
 
 # Kernel implementations selectable per path ("xla" = the jnp reference,
 # which is also the SPMD production path — a legitimate tuning outcome).
@@ -57,6 +57,9 @@ BWDK_SPACE_VARIANTS = ("accum", "twostage", "naive", "xla")
 # independently tuned bwd_in + bwd_k ops) — fused-vs-split dispatch is a
 # tuning decision like any other.
 BWD_FUSED_SPACE_VARIANTS = ("fused", "fused_partials", "split")
+# Streaming-decode path (single-step ring-buffer conv at L=1): whole-pool
+# staging vs batch-chunked cells vs the jnp reference.
+DECODE_SPACE_VARIANTS = ("rows", "chanblock", "xla")
 
 # Variants with no tiling knobs of their own (reference / delegating paths).
 _KNOBLESS = ("xla", "split")
@@ -67,6 +70,8 @@ def _space_variants(path: str) -> Tuple[str, ...]:
         return FWD_SPACE_VARIANTS
     if path == "bwd_k":
         return BWDK_SPACE_VARIANTS
+    if path == "decode":
+        return DECODE_SPACE_VARIANTS
     return BWD_FUSED_SPACE_VARIANTS
 
 # Tiling lattices (clamped to the problem dims during normalization).
@@ -139,6 +144,14 @@ def normalize(c: Candidate, d: DWConvDims, epilogue: str = "none") -> Candidate:
         if c.variant == "row":  # row stages the whole temporal row: no Lt
             Lt = _DEFAULT.block_t
         return Candidate(c.path, c.variant, Hb, Lt, _DEFAULT.batch_chunk)
+    if c.path == "decode":
+        # block_t is the channel-lane tile, batch_chunk the pool chunk;
+        # block_h has no decode meaning.  Every block_t that clamps to the
+        # same effective tile collapses (the UNTILED sentinel becomes the
+        # full padded channel extent).
+        Hl, _, _, Bc_d, _, _ = decode_tiles(d, c.block_t, c.batch_chunk)
+        return Candidate(c.path, c.variant, _DEFAULT.block_h, Hl,
+                         Bc_d if c.variant == "chanblock" else _DEFAULT.batch_chunk)
     # bwd_k and bwd_fused: (h-block x batch-chunk [x time-tile]) grids.  The
     # staged variants honour block_t (time-tiled reduction); every block_t
     # that executes untiled (naive, single tile, or a halo-starved tile that
@@ -155,7 +168,7 @@ def _schedule(c: Candidate, d: DWConvDims, itemsize: int, epilogue: str):
     return schedule_for(
         c.path, c.variant, d, itemsize,
         block_h=c.block_h, block_t=c.block_t, batch_chunk=c.batch_chunk,
-        epilogue=epilogue if c.path in ("fwd", "bwd_fused") else "none")
+        epilogue=epilogue if c.path in ("fwd", "bwd_fused", "decode") else "none")
 
 
 def _vmem_working_set_bytes(

@@ -54,6 +54,8 @@ KNOWN_KERNEL_SCHEDULES: Dict[str, Tuple[Tuple[str, str], ...]] = {
     "dwconv_bwd_fused_partials": (("bwd_fused", "fused_partials"),),
     "dwconv_bwd_fused_accum_act": (("bwd_fused", "fused"),),
     "dwconv_bwd_fused_partials_act": (("bwd_fused", "fused_partials"),),
+    "dwconv_decode_rows": (("decode", "rows"),),
+    "dwconv_decode_chanblock": (("decode", "chanblock"),),
 }
 
 # Helpers that moved to perfmodel.geometry in PR 5; importing them from the

@@ -43,7 +43,8 @@ import numpy as np
 from repro.kernels.common import (LANE, DWConvDims, adjoint_pad_widths, cdiv,
                                   pad_widths, round_up)
 from repro.perfmodel.derive import check_legality, vmem_bytes
-from repro.perfmodel.geometry import effective_tiles, unified_wpad
+from repro.perfmodel.geometry import (decode_tiles, effective_tiles,
+                                      unified_wpad)
 from repro.perfmodel.schedules import schedule_for
 from repro.verify.findings import Finding
 from repro.verify.trace import (PALLAS_VARIANTS, PallasRecord, SpecInfo,
@@ -83,6 +84,11 @@ def padded_dims(path: str, d: DWConvDims, *, block_h: int, block_t: int,
     paths) batch to a whole number of chunks.  The tiling knobs are
     idempotent under this padding (min/round_up fixpoints), so rebuilding
     the schedule at these dims describes the traced launch exactly."""
+    if path == "decode":
+        # L=1 single-step: channels are lane-padded to the channel tile and
+        # the slot pool to a whole number of batch chunks; L never pads.
+        _, _, Hp, Bc, _, Bp = decode_tiles(d, block_t, batch_chunk)
+        return DWConvDims(B=Bp, H=Hp, L=d.L, K=d.K, padding=d.padding)
     Hb = max(1, min(block_h, d.H))
     Hp = round_up(d.H, Hb)
     Lp = round_up(d.L, LANE)
@@ -232,6 +238,10 @@ def _op_block_itemsize(op) -> int:
 def _live_last(name: str, path: str, d: DWConvDims) -> Optional[int]:
     """Columns of the last axis that hold real data (the rest is layout
     padding a kernel may legitimately skip).  None: require full extent."""
+    if path == "decode":
+        # Decode arrays are channel-last and padded exactly to the launch
+        # extents; every column is live by construction.
+        return None
     pl_l, pl_r = pad_widths(d.K, d.padding)
     al_l, _ = adjoint_pad_widths(d.K, d.padding)
     if name == "x":
@@ -678,9 +688,14 @@ def verify_config(path: str, variant: str, d: DWConvDims, *, itemsize: int = 4,
                                    f"rejected the layout: {err}")]
         return "illegal", []
     if not legal:
+        if not records:
+            # The wrapper agreed without raising: it routed the call away
+            # from the Pallas kernel entirely (decode K<2 runs the XLA
+            # reference instead of launching an empty-ring kernel).
+            return "illegal", []
         return "failed", [_err("VER107", where,
                                f"model says illegal ({reason}) but the kernel "
-                               f"wrapper accepted the layout")]
+                               f"wrapper launched a Pallas kernel anyway")]
     if len(records) != 1:
         return "failed", [_err("VER101", where,
                                f"expected one pallas_call launch, traced "

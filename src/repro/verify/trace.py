@@ -39,6 +39,7 @@ PALLAS_VARIANTS = {
     "bwd_in": ("naive", "lane", "block", "row"),
     "bwd_k": ("naive", "twostage", "accum"),
     "bwd_fused": ("fused", "fused_partials"),
+    "decode": ("rows", "chanblock"),
 }
 
 
@@ -188,6 +189,12 @@ def trace_config(
             fn = lambda x_, dy_, k_, b_: ops.dwconv_bwd_fused_act_op(
                 x_, dy_, k_, b_, d.padding, variant, opts, act=act)
             fargs = (x, x, k, bias)
+    elif path == "decode":
+        ring = jax.ShapeDtypeStruct((d.B, d.H, max(d.K - 1, 0)), dt)
+        xstep = jax.ShapeDtypeStruct((d.B, d.H), dt)
+        fn = lambda r_, x_, k_, b_: ops.dwconv_decode_op(
+            r_, x_, k_, variant, opts, bias=b_, act=act)
+        fargs = (ring, xstep, k, bias)
     else:
         raise ValueError(f"unknown path {path!r}")
 

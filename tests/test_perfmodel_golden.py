@@ -47,6 +47,11 @@ TILINGS = [
 ITEMSIZES = [4, 2]
 EPILOGUES = list(EPILOGUE_KEYS)
 
+# The tuning paths that existed at the PR-5 golden freeze.  Paths added
+# later (e.g. the streaming-decode path) have no legacy formula to agree
+# with — they are covered by their own suites, not the golden pin.
+LEGACY_PATHS = ("fwd", "bwd_in", "bwd_k", "bwd_fused")
+
 FWD_VARIANTS = ("naive", "lane", "block", "row", "xla")
 BWDK_VARIANTS = ("naive", "twostage", "accum", "xla")
 BWD_FUSED_VARIANTS = ("fused", "fused_partials", "split")
@@ -184,7 +189,7 @@ def test_golden_legality_verdicts(d, tiling, hw):
     and halo-fit rejections and the VMEM bound (P100's 64 KiB shared-memory
     model exercises the VMEM branch on most staged candidates)."""
     bh, bt, bc = tiling
-    for path in space.PATHS:
+    for path in LEGACY_PATHS:
         for v in space._space_variants(path):
             epis = EPILOGUES if path in ("fwd", "bwd_fused") else ("none",)
             for epi in epis:
@@ -205,7 +210,7 @@ def test_golden_stage1_cost(d, tiling):
     """The tuner's stage-1 analytical time (roofline bound + DMA overhead)
     agrees exactly with the legacy formula on every tuning path."""
     bh, bt, bc = tiling
-    for path in space.PATHS:
+    for path in LEGACY_PATHS:
         for v in space._space_variants(path):
             epis = ("none", "bias+gelu") if path in ("fwd", "bwd_fused") \
                 else ("none",)

@@ -66,7 +66,8 @@ def test_search_space_nonempty_normalized_legal(d, path):
         assert "split" in variants and "fused" in variants
     else:
         assert "xla" in variants
-        assert ("row" if path != "bwd_k" else "accum") in variants
+        default = {"bwd_k": "accum", "decode": "rows"}.get(path, "row")
+        assert default in variants
 
 
 @pytest.mark.parametrize("path", space.PATHS)
@@ -415,7 +416,7 @@ def test_auto_equivalent_to_row_through_differentiable_dwconv(tmp_cache):
     d = SMALL_DIMS
     backend = jax.default_backend()
     tuned = {"fwd": "row", "bwd_in": "row", "bwd_k": "accum",
-             "bwd_fused": "split"}
+             "bwd_fused": "split", "decode": "rows"}
     for path in space.PATHS:
         tcache.default_cache().put(
             ShapeKey(path=path, B=d.B, H=d.H, L=d.L, K=d.K,
